@@ -1,0 +1,97 @@
+"""Paper Tables 1-3 proxy: policy fidelity on a trained tiny LM.
+
+Per policy (MHA baseline, CHAI, CHAI-static, DejaVu at 3 sparsities,
+SpAtten, random clustering): attention-output cosine fidelity per layer +
+end-to-end greedy-token agreement + perplexity delta on held-out synthetic
+data. PROXY for the paper's task accuracies (no C4/PIQA offline).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (collect_qkv, redundant_model, save_result,
+                               tiny_trained)
+from repro.core.policy import apply_policy
+from repro.models import transformer as tfm
+
+
+def _cosine(a, b):
+    a = np.asarray(a, np.float64).reshape(-1)
+    b = np.asarray(b, np.float64).reshape(-1)
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12))
+
+
+def _ppl(cfg, params, toks):
+    logits, _, _ = tfm.forward_fullseq(params, cfg, toks[:, :-1])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, toks[:, 1:, None], axis=-1)[..., 0]
+    return float(jnp.exp(jnp.mean(logz - gold)))
+
+
+def run():
+    # redundancy-planted trained model: emulates the measured LLaMA-7B
+    # head-cluster structure (Fig 2) at tiny scale — see common.py.
+    cfg, params, pipe, train_loss = redundant_model()
+    toks = jnp.asarray(pipe.batch(500)["tokens"][:4, :48])
+    qkvs = collect_qkv(cfg, params, toks)
+
+    k = 4   # true planted cluster count
+    policies = {
+        "mha": dict(policy="mha"),
+        "chai": dict(policy="chai", n_clusters=k),
+        "chai-static": dict(policy="chai-static", n_clusters=k,
+                            h2c_static=jnp.arange(cfg.n_heads) % k,
+                            reps_static=jnp.arange(k)),
+        "chai-qkv": dict(policy="chai-qkv", n_clusters=k),
+        "dejavu-10%": dict(policy="dejavu", sparsity=0.10),
+        "dejavu-30%": dict(policy="dejavu", sparsity=0.30),
+        "dejavu-50%": dict(policy="dejavu", sparsity=0.50),
+        "spatten": dict(policy="spatten", sparsity=0.25, token_keep=0.7),
+        "random": dict(policy="random", n_clusters=k),
+    }
+
+    fidelity = {}
+    flops = {}
+    base_outs = [apply_policy("mha", *qkv).out for qkv in qkvs]
+    for name, kw in policies.items():
+        cos, fl = [], 0.0
+        for qkv, base in zip(qkvs, base_outs):
+            out = apply_policy(**kw, q=qkv[0], k=qkv[1], v=qkv[2])
+            cos.append(_cosine(out.out, base))
+            fl += float(out.score_flops)
+        fidelity[name] = float(np.mean(cos))
+        flops[name] = fl
+
+    ppl = _ppl(cfg, params, jnp.asarray(pipe.batch(501)["tokens"][:4]))
+
+    result = {
+        "proxy_note": "trained tiny LM with planted head redundancy "
+                      "(emulating LLaMA-7B's measured >0.95-correlation "
+                      "clusters, Fig 2); cosine fidelity of attention "
+                      "outputs vs MHA + PPL; stands in for paper Tables "
+                      "1-3 task accuracy",
+        "train_loss": train_loss,
+        "held_out_ppl_mha": ppl,
+        "attention_output_cosine_vs_mha": fidelity,
+        "score_flops": flops,
+        "paper_claim": "CHAI within 3.2% of MHA accuracy; DejaVu>=30% "
+                       "degrades heavily on LLaMA-family; activation "
+                       "clustering beats random/static head grouping",
+        "claim_check": {
+            "chai_fidelity_high": fidelity["chai"] > 0.98,
+            "chai_beats_random": fidelity["chai"] > fidelity["random"],
+            "chai_beats_dejavu50": fidelity["chai"] > fidelity["dejavu-50%"],
+            "chai_beats_spatten": fidelity["chai"] > fidelity["spatten"],
+            "chai_dynamic_beats_static":
+                fidelity["chai"] >= fidelity["chai-static"] - 1e-3,
+        },
+    }
+    save_result("bench_accuracy_proxy", result)
+    return result
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,113 @@
+"""Shared benchmark harness: tiny trained model + policy fidelity metrics.
+
+CPU container => the paper's GPU wall-clock/accuracy numbers are reproduced
+as *proxies* (clearly labeled in every output):
+  - accuracy  -> greedy-token agreement + logit fidelity on a trained tiny LM
+  - latency   -> CPU wall time for the tiny model + analytic TPU model for
+                 the full config (FLOP/byte counts / v5e peaks)
+Paper-claim checks (cluster counts, KV savings %, FLOP ratios) are exact —
+they depend only on the algorithm, not the hardware.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.data.pipeline import DataConfig
+from repro.models import transformer as tfm
+from repro.train.trainer import Trainer, TrainerConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+@functools.lru_cache()
+def tiny_trained(vocab=128, steps=60):
+    """Train a small MHA LM once per process; reused by accuracy benches."""
+    import tempfile
+    cfg = reduced(get_config("chai-llama-7b"), n_layers=2, d_model=64,
+                  n_heads=8, d_ff=128, vocab=vocab).replace(dtype="float32")
+    data = DataConfig(vocab_size=vocab, seq_len=64, global_batch=8)
+    tr = Trainer(cfg, data, TrainerConfig(
+        total_steps=steps, ckpt_every=10**9, log_every=10**9,
+        ckpt_dir=tempfile.mkdtemp(prefix="bench_ckpt_"),
+        lr_kw=dict(peak=3e-3, warmup=6, total=steps)))
+    state, metrics = tr.run()
+    return cfg, state["params"], tr.pipe, float(metrics["loss"])
+
+
+def redundant_model():
+    """tiny_trained with *planted head redundancy*: heads {0,1,2} and
+    {4,5,6} share Q/K per layer (small perturbation), emulating at tiny
+    scale the measured LLaMA-7B property the paper exploits (clusters of
+    heads with score correlation > 0.95, Fig 2). Effective patterns: 4
+    -> the right cluster count is 4 of 8 heads."""
+    cfg, params, pipe, loss = tiny_trained()
+    params = jax.tree.map(lambda x: x, params)      # copy
+    w = dict(params["attn"])
+    for nm in ("wq", "wk"):
+        m = w[nm]
+        eps = 0.02 * jnp.std(m)
+        for src, dups in ((0, (1, 2)), (4, (5, 6))):
+            for d in dups:
+                m = m.at[:, :, d].set(
+                    m[:, :, src] * (1.0 + eps * (d - src)))
+        w[nm] = m
+    params["attn"] = w
+    return cfg, params, pipe, loss
+
+
+def collect_qkv(cfg, params, toks):
+    """Per-layer rotary q, k, v activations for the policy benches.
+
+    Returns [(q, k, v)] per attention layer, each (B, T, H, hd)."""
+    from repro.models import attention as attn_mod
+    from repro.models.layers import rms_norm
+    from repro.models.transformer import layer_plan, tree_index
+
+    # Run the model capturing per-layer inputs via a python-level replay:
+    # forward once per layer prefix is wasteful; instead re-run the scan
+    # manually at python level (n_layers is tiny here).
+    plan = layer_plan(cfg)
+    h = jnp.take(params["embed"]["tok"], toks, axis=0).astype(jnp.float32)
+    positions = jnp.arange(toks.shape[1], dtype=jnp.int32)
+    out = []
+    from repro.models import mlp as mlp_mod
+    for i in range(cfg.n_layers):
+        p = tree_index(params["attn"], plan["attn"][i])
+        xn = rms_norm(h, p["ln"], cfg.norm_eps)
+        q, k, v = attn_mod.project_qkv(xn, p, cfg, positions)
+        out.append((q, k, v))
+        y = attn_mod.attention_fullseq(q, k, v, positions, positions,
+                                       attn_softcap=cfg.attn_logit_softcap)
+        h = h + attn_mod.output_proj(y, p)
+        pf = tree_index(params["ffn"], plan["dense"][i])
+        xn = rms_norm(h, pf["ln"], cfg.norm_eps)
+        h = h + mlp_mod.dense_ffn(xn, pf, cfg)
+    return out
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timer(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

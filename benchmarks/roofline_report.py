@@ -1,0 +1,121 @@
+"""Generate the EXPERIMENTS.md §Roofline table from dry-run JSON results.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--unrolled]
+
+Reads benchmarks/results/dryrun_single[_unrolled].json and prints a
+markdown table: three roofline terms, dominant bottleneck, MODEL_FLOPS
+ratio, per (arch x shape x step).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(mesh="single", unrolled=True):
+    suffix = "_unrolled" if unrolled else ""
+    with open(os.path.join(RESULTS, f"dryrun_{mesh}{suffix}.json")) as f:
+        return json.load(f)
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(results, *, only_steps=None):
+    rows = []
+    for key in sorted(results):
+        v = results[key]
+        if "error" in v:
+            rows.append(f"| {key} | ERROR | | | | | |")
+            continue
+        if only_steps and v["step"] not in only_steps:
+            continue
+        r = v["roofline"]
+        tc, tm, tx = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+        rows.append(
+            f"| {v['arch']} | {v['shape']} | {v['step']} | {fmt_s(tc)} | "
+            f"{fmt_s(tm)} | {fmt_s(tx)} | **{r['bottleneck']}** | "
+            f"{v['useful_flop_ratio']:.3f} |")
+    header = ("| arch | shape | step | t_compute | t_memory | t_collective "
+              "| bottleneck | MODEL/HLO |\n"
+              "|---|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def merged(mesh="single"):
+    """Unrolled cells (exact per-layer counts) preferred; cells whose
+    unrolled compile hasn't completed fall back to scanned artifacts,
+    flagged with a trailing '*': their in-loop terms are lower bounds
+    (XLA counts a while body once — §Roofline)."""
+    out = {}
+    try:
+        scanned = load(mesh, unrolled=False)
+    except FileNotFoundError:
+        scanned = {}
+    try:
+        unrolled = load(mesh, unrolled=True)
+    except FileNotFoundError:
+        unrolled = {}
+    for k, v in scanned.items():
+        out[k] = dict(v, source="scanned*")
+    for k, v in unrolled.items():
+        if "error" not in v:
+            out[k] = dict(v, source="unrolled")
+    # perf-iteration variants lowered unrolled into results/perf/
+    try:
+        with open(os.path.join(RESULTS, "perf",
+                               f"dryrun_{mesh}_unrolled.json")) as f:
+            for k, v in json.load(f).items():
+                if "error" not in v:
+                    out[k] = dict(v, source="unrolled")
+    except FileNotFoundError:
+        pass
+    return out
+
+
+def merged_table(mesh="single"):
+    results = merged(mesh)
+    rows = []
+    for key in sorted(results):
+        v = results[key]
+        if "error" in v:
+            continue
+        r = v["roofline"]
+        tc, tm, tx = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+        rows.append(
+            f"| {v['arch']} | {v['shape']} | {v['step']} | {fmt_s(tc)} | "
+            f"{fmt_s(tm)} | {fmt_s(tx)} | **{r['bottleneck']}** | "
+            f"{v['useful_flop_ratio']:.3f} | {v['source']} |")
+    header = ("| arch | shape | step | t_compute | t_memory | t_collective "
+              "| bottleneck | MODEL/HLO | source |\n"
+              "|---|---|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scanned", action="store_true",
+                    help="use the scanned (loop-once-counted) artifacts")
+    ap.add_argument("--merged", action="store_true",
+                    help="unrolled preferred, scanned fallback (flagged)")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    if args.merged:
+        print(merged_table(args.mesh))
+        return
+    results = load(args.mesh, unrolled=not args.scanned)
+    print(table(results))
+    n_ok = sum(1 for v in results.values() if "error" not in v)
+    print(f"\n{n_ok}/{len(results)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness: one bench per paper table/figure.
+
+  python -m benchmarks.run            # all benches
+  python -m benchmarks.run --only bench_kv_memory,bench_flops
+
+Each bench saves JSON under benchmarks/results/ and returns a dict with a
+``claim_check`` section verifying the paper's claims (or their CPU-proxy
+analogues — labeled). Exit code is non-zero if any claim check fails.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import time
+import traceback
+
+BENCHES = [
+    "bench_accuracy_proxy",    # Tables 1-3
+    "bench_qkv_ablation",      # Table 4
+    "bench_flops",             # Figs 1/14
+    "bench_elbow",             # Fig 8
+    "bench_membership",        # Fig 9
+    "bench_kv_memory",         # Fig 11
+    "bench_latency",           # Fig 12
+    "bench_cluster_dist",      # Fig 13
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else BENCHES
+
+    failures, summaries = [], {}
+    for name in names:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            result = mod.run()
+            checks = result.get("claim_check", {})
+            bad = {k: v for k, v in checks.items()
+                   if isinstance(v, bool) and not v}
+            status = "ok" if not bad else f"CLAIM-FAIL {sorted(bad)}"
+            if bad:
+                failures.append(name)
+            summaries[name] = {"status": status, "checks": checks,
+                               "seconds": round(time.time() - t0, 1)}
+            print(f"  {status} ({summaries[name]['seconds']}s)")
+            for k, v in checks.items():
+                print(f"    {k}: {v}")
+        except Exception as e:
+            failures.append(name)
+            summaries[name] = {"status": f"ERROR {e}"}
+            traceback.print_exc()
+    print("\n=== summary ===")
+    print(json.dumps(summaries, indent=1, default=str))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

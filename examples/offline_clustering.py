@@ -1,0 +1,63 @@
+"""CHAI offline phase (paper Fig 10a): elbow analysis per layer.
+
+Collects per-head attention-score features over a calibration corpus
+(synthetic C4 stand-in), sweeps K-Means k per layer, prints the error
+curves and the elbow-selected cluster counts — the `cluster_counts` you
+would freeze into the ModelConfig for serving.
+
+  PYTHONPATH=src python examples/offline_clustering.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core.cache import add_score_buffer, pop_score_buffer
+from repro.core.clustering import standardize
+from repro.core.elbow import elbow_curve, select_k
+from repro.data.pipeline import calibration_batches
+from repro.models import transformer as tfm
+
+
+def main():
+    cfg = reduced(get_config("chai-llama-7b"), n_heads=8,
+                  n_layers=4).replace(dtype="float32")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"collecting activations on the calibration corpus "
+          f"({cfg.n_layers} layers, {cfg.n_heads} heads) ...")
+
+    feats_sum = None
+    n = 0
+    for toks in calibration_batches(cfg.vocab_size, 24, n_samples=16):
+        toks = jnp.asarray(toks)
+        state = tfm.init_decode_state(cfg, toks.shape[0], 64)
+        _, state, _ = tfm.forward_fullseq(params, cfg, toks, state=state)
+        state = add_score_buffer(state, cfg, toks.shape[0])
+        nxt = toks[:, -1]
+        for _ in range(cfg.chai.warmup_tokens):
+            logits, state = tfm.decode_step(params, cfg, nxt, state)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        state, scores = pop_score_buffer(state)      # (nA, B, H, Wf)
+        s = np.asarray(scores).sum(axis=1)
+        feats_sum = s if feats_sum is None else feats_sum + s
+        n += scores.shape[1]
+
+    per_layer = feats_sum / n                        # (nA, H, Wf)
+    ks = list(range(1, cfg.n_heads + 1))
+    print(f"\n{'layer':>6} {'selected k':>10}   error curve")
+    counts = []
+    for li, f in enumerate(per_layer):
+        fz = standardize(jnp.asarray(f, jnp.float32))
+        errs = elbow_curve(fz, ks)
+        k = select_k(errs, ks)
+        counts.append(int(k))
+        curve = " ".join(f"{e:6.2f}" for e in errs)
+        print(f"{li:>6} {k:>10}   {curve}")
+    print(f"\ncluster_counts = {tuple(counts)}")
+    print("freeze into the config:  cfg.with_chai(enabled=True, "
+          f"cluster_counts={tuple(counts)})")
+
+
+if __name__ == "__main__":
+    main()

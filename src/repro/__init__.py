@@ -1,0 +1,12 @@
+"""repro — CHAI (Clustered Head Attention) production JAX framework.
+
+Public API:
+  repro.configs.base.get_config / list_configs / reduced
+  repro.models.transformer   — forward_fullseq / decode_step / init_params
+  repro.core                 — CHAI clustering, policies, cache layouts
+  repro.serving              — ServingEngine (CHAI phase machine)
+  repro.train                — Trainer (fault-tolerant loop)
+  repro.launch               — mesh / dryrun / roofline / CLI drivers
+  repro.kernels              — Pallas TPU kernels + jnp oracles
+"""
+__version__ = "1.0.0"

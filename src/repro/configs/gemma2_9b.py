@@ -1,0 +1,23 @@
+"""Gemma-2 9B [arXiv:2408.00118]: local+global alternating, logit softcaps."""
+from repro.configs.base import (ModelConfig, CHAIConfig, register,
+                                ATTN_LOCAL, ATTN_GLOBAL)
+
+_LAYERS = tuple(ATTN_LOCAL if i % 2 == 0 else ATTN_GLOBAL for i in range(42))
+
+CONFIG = register(ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    n_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=256000,
+    layer_types=_LAYERS,
+    window_size=4096,
+    activation="gelu",
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    rope_theta=10000.0,
+    chai=CHAIConfig(enabled=True),
+))

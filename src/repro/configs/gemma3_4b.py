@@ -1,0 +1,23 @@
+"""Gemma-3 4B [hf:google/gemma-3]: 5:1 local:global, 128k context."""
+from repro.configs.base import (ModelConfig, CHAIConfig, register,
+                                ATTN_LOCAL, ATTN_GLOBAL)
+
+# 5 local : 1 global repeating; 34 layers = 5 full patterns + 4 local.
+_LAYERS = tuple(ATTN_GLOBAL if (i % 6) == 5 else ATTN_LOCAL for i in range(34))
+
+CONFIG = register(ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=10240,
+    vocab_size=262144,
+    layer_types=_LAYERS,
+    window_size=1024,
+    activation="gelu",
+    qk_norm=True,
+    rope_theta=1000000.0,        # long-context rope base
+    chai=CHAIConfig(enabled=True),
+))

@@ -1,0 +1,20 @@
+"""Qwen3-MoE 30B-A3B [hf:Qwen/Qwen3-30B-A3B]: 128 experts, top-8."""
+from repro.configs.base import ModelConfig, CHAIConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,
+    vocab_size=151936,
+    n_experts=128,
+    top_k=8,
+    moe_d_ff=768,
+    activation="silu",
+    qk_norm=True,
+    rope_theta=1000000.0,
+    chai=CHAIConfig(enabled=True),
+))

@@ -1,0 +1,20 @@
+"""RWKV-6 "Finch" 1.6B [arXiv:2404.05892]: attention-free, data-dependent decay.
+
+CHAI is INAPPLICABLE (no attention heads / no KV cache) — built without the
+technique per DESIGN.md §Arch-applicability.
+"""
+from repro.configs.base import ModelConfig, CHAIConfig, register, RWKV
+
+CONFIG = register(ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=7168,
+    vocab_size=65536,
+    layer_types=(RWKV,) * 24,
+    rwkv_head_dim=64,
+    chai=CHAIConfig(enabled=False),
+))

@@ -1,0 +1,1 @@
+from repro.core import cache, chai_attention, clustering, correlation, elbow, kmeans, policy  # noqa: F401

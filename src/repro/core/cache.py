@@ -1,0 +1,137 @@
+"""CHAI KV-cache layouts: full (MHA warmup) and clustered (steady state).
+
+``compact_kv`` is the paper's "remove the Key tokens associated [with pruned
+heads]" step (§3.5): after membership identification, the dense K cache is
+gathered down to representative rows. Run it as a donated jit so the full
+cache's buffer is released on device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.clustering import chai_widths
+from repro.models.transformer import decode_state_structs
+from repro.sharding.rules import Ax
+
+
+def quant_rows(x):
+    """Symmetric int8 over the last axis. x: (..., hd) ->
+    (int8 same-shape, f32 scale (...))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_rows(q, scale):
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def chai_state_structs(cfg: ModelConfig, batch: int, max_seq: int):
+    """Decode-state structs with the clustered K cache (MHA archs only --
+    GQA archs keep the plain state)."""
+    shapes, logical = decode_state_structs(cfg, batch, max_seq)
+    if not (cfg.is_mha and cfg.chai.enabled):
+        return shapes, logical
+    k_max, _ = chai_widths(cfg)
+    dt = shapes["kg"].dtype
+    ng, b, _, s, hd = shapes["kg"].shape
+    shapes = dict(shapes)
+    logical = dict(logical)
+    shapes.pop("kg")
+    kg_ax = logical.pop("kg")
+    shapes["kg_chai"] = jax.ShapeDtypeStruct((ng, b, k_max, s, hd), dt)
+    logical["kg_chai"] = Ax("layers", "batch", "clusters", "seq", "head_dim")
+    if cfg.kv_cache_dtype == "int8":
+        shapes.pop("kg_scale")
+        logical.pop("kg_scale")
+        shapes["kg_chai_scale"] = jax.ShapeDtypeStruct((ng, b, k_max, s),
+                                                       jnp.float32)
+        logical["kg_chai_scale"] = Ax("layers", "batch", "clusters", "seq")
+    if cfg.chai.share_values:
+        shapes.pop("vg")
+        logical.pop("vg")
+        shapes["vg_chai"] = jax.ShapeDtypeStruct((ng, b, k_max, s, hd), dt)
+        logical["vg_chai"] = Ax("layers", "batch", "clusters", "seq",
+                                "head_dim")
+    return shapes, logical
+
+
+def init_chai_state(cfg: ModelConfig, batch: int, max_seq: int):
+    shapes, _ = chai_state_structs(cfg, batch, max_seq)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def add_score_buffer(state, cfg: ModelConfig, batch: int):
+    """Attach the warmup score-accumulation buffer (nA, B, H, Wf)."""
+    s = state["kg"].shape[3] if "kg" in state else state["kl"].shape[3]
+    wf = min(cfg.chai.feature_window, int(s))
+    state = dict(state)
+    state["chai_scores"] = jnp.zeros(
+        (cfg.n_attn_layers, batch, cfg.n_heads, wf), jnp.float32)
+    return state
+
+
+def pop_score_buffer(state):
+    state = dict(state)
+    scores = state.pop("chai_scores")
+    return state, scores
+
+
+def compact_kv(state, chai_ctx, cfg: ModelConfig):
+    """Convert a full MHA decode state into the clustered layout.
+
+    state["kg"]: (nG, B, H, S, hd); ctx reps: (nA, B, k) or (nA, k).
+    Returns a new state with kg_chai (and vg_chai under share_values).
+    Donate ``state`` when jitting to free the dense K cache in place.
+    """
+    if not (cfg.is_mha and cfg.chai.enabled):
+        return state
+    reps = chai_ctx["reps"]
+    batched = reps.ndim == 3
+    kg = state["kg"]                                  # (nG, B, H, S, hd)
+    ng, b, h, s, hd = kg.shape
+    k_max = reps.shape[-1]
+    # All-global MHA archs: attention layer i == global layer i.
+    r = reps if batched else jnp.broadcast_to(reps[:, None, :], (ng, b, k_max))
+    idx = r[..., None, None]                          # (nG, B, k, 1, 1)
+    kg_chai = jnp.take_along_axis(kg, idx, axis=2)
+    new_state = {k: v for k, v in state.items()
+                 if k not in ("kg", "kg_scale")}
+    new_state["kg_chai"] = kg_chai
+    if cfg.kv_cache_dtype == "int8" and "kg_scale" in state:
+        new_state["kg_chai_scale"] = jnp.take_along_axis(
+            state["kg_scale"], r[..., None], axis=2)
+    if cfg.chai.share_values:
+        vg_chai = jnp.take_along_axis(state["vg"], idx, axis=2)
+        new_state.pop("vg")
+        new_state["vg_chai"] = vg_chai
+    return new_state
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, seq: int, *,
+                   chai: bool = False):
+    """Analytic steady-state KV-cache size in bytes (paper Fig 11)."""
+    if cfg.n_attn_layers == 0:
+        return 0
+    if cfg.kv_cache_dtype == "int8":
+        esize = 1 + 4 / cfg.head_dim      # int8 row + f32 scale per row
+    else:
+        esize = jnp.dtype(cfg.dtype).itemsize
+    hd = cfg.head_dim
+    k_max, _ = chai_widths(cfg)
+    total = 0
+    for lt in cfg.layer_types:
+        if lt == "attn_global":
+            k_rows = k_max if (chai and cfg.is_mha and cfg.chai.enabled) \
+                else cfg.n_kv_heads
+            v_rows = (k_max if (chai and cfg.is_mha and
+                                cfg.chai.share_values) else cfg.n_kv_heads)
+            total += int(batch * (k_rows + v_rows) * seq * hd * esize)
+        elif lt == "attn_local":
+            w = min(cfg.window_size, seq)
+            total += int(batch * 2 * cfg.n_kv_heads * w * hd * esize)
+    return total

@@ -1,0 +1,236 @@
+"""Clustered Head Attention — the paper's core op (decode path).
+
+Score computation + softmax run only for representative heads; attention
+weights broadcast to member heads via a gather; V stays per-head
+(paper Table 4: pruning V loses accuracy; ``share_values`` implements the
+CHAI-QKV ablation).
+
+MHA archs additionally store a *clustered K cache* (k_max rows instead of
+H) — the paper's 21.4% KV-memory saving. GQA archs keep the per-group K
+cache (DESIGN.md §4) and get the compute-only saving.
+
+ctx arrays may be shared across the batch (ndim without B) or per-request
+(batched) — see repro.core.clustering.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import apply_rope, rms_norm, softcap
+
+
+def _rope1(x, pos, theta):
+    """x: (B, n, hd) single-token heads; pos: (B,)."""
+    return apply_rope(x[:, None], pos[:, None], theta)[:, 0]
+
+
+def _qk_norm(x, scale, cfg):
+    return rms_norm(x, scale, cfg.norm_eps) if cfg.qk_norm else x
+
+
+def chai_decode_attention(xn, p, cfg, state, idxs, chai_ctx, *, local):
+    """xn: (B, d) normed hidden. Returns (out (B, H, hd), new_state)."""
+    if cfg.is_mha and not local:
+        return _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx)
+    if not cfg.is_mha:
+        return _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx,
+                                local=local)
+    # MHA arch with a local layer (none of the assigned archs hit this):
+    from repro.models.transformer import _plain_decode_attention
+    return _plain_decode_attention(xn, p, cfg, state, idxs, local=local)
+
+
+def _layer_ctx(chai_ctx, attn_idx):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, attn_idx, 0,
+                                               keepdims=False), chai_ctx)
+
+
+# ---------------------------------------------------------------- MHA ------
+def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx):
+    from repro.models.transformer import tree_index, tree_update
+    b, d = xn.shape
+    hd, h = cfg.head_dim, cfg.n_heads
+    pos = state["pos"]
+    ctx = _layer_ctx(chai_ctx, idxs["attn"])
+    reps, h2c = ctx["reps"], ctx["h2c"]
+    batched = reps.ndim == 2                      # (B, k) vs (k,)
+    share_v = cfg.chai.share_values
+
+    if batched:
+        # Per-request membership: project all heads, gather activations.
+        q = jnp.einsum("bd,dhe->bhe", xn, p["wq"])
+        k = jnp.einsum("bd,dhe->bhe", xn, p["wk"])
+        if cfg.qk_norm:
+            q = _qk_norm(q, p["q_norm"], cfg)
+            k = _qk_norm(k, p["k_norm"], cfg)
+        q_rep = jnp.take_along_axis(q, reps[..., None], axis=1)
+        k_rep = jnp.take_along_axis(k, reps[..., None], axis=1)
+    else:
+        # Shared membership: gather weight rows (skips pruned projections —
+        # the paper's full compute saving).
+        wq_r = jnp.take(p["wq"], reps, axis=1)    # (d, k, hd)
+        wk_r = jnp.take(p["wk"], reps, axis=1)
+        q_rep = jnp.einsum("bd,dke->bke", xn, wq_r)
+        k_rep = jnp.einsum("bd,dke->bke", xn, wk_r)
+        if cfg.qk_norm:
+            q_rep = _qk_norm(q_rep, p["q_norm"], cfg)
+            k_rep = _qk_norm(k_rep, p["k_norm"], cfg)
+    q_rep = _rope1(q_rep, pos, cfg.rope_theta)
+    k_rep = _rope1(k_rep, pos, cfg.rope_theta)
+
+    int8 = cfg.kv_cache_dtype == "int8"
+    if int8:
+        from repro.core.cache import dequant_rows, quant_rows
+
+    # Clustered K cache update (k rows, not H).
+    kc = tree_index(state["kg_chai"], idxs["global"])   # (B, k, S, hd)
+    if int8:
+        kq, ks = quant_rows(k_rep)
+        kc = kc.at[jnp.arange(b), :, pos, :].set(kq)
+        ksc = tree_index(state["kg_chai_scale"], idxs["global"])
+        ksc = ksc.at[jnp.arange(b), :, pos].set(ks)
+        kc_f = dequant_rows(kc, ksc)
+    else:
+        kc = kc.at[jnp.arange(b), :, pos, :].set(k_rep.astype(kc.dtype))
+        kc_f = kc
+    s = kc.shape[2]
+
+    # V: full per-head (or clustered for the CHAI-QKV ablation).
+    if share_v:
+        if batched:
+            v = jnp.einsum("bd,dhe->bhe", xn, p["wv"])
+            v_new = jnp.take_along_axis(v, reps[..., None], axis=1)
+        else:
+            wv_r = jnp.take(p["wv"], reps, axis=1)
+            v_new = jnp.einsum("bd,dke->bke", xn, wv_r)
+        vc = tree_index(state["vg_chai"], idxs["global"])
+        vc = vc.at[jnp.arange(b), :, pos, :].set(v_new.astype(vc.dtype))
+        vc_f = vc
+    else:
+        v_new = jnp.einsum("bd,dhe->bhe", xn, p["wv"])
+        vc = tree_index(state["vg"], idxs["global"])
+        if int8:
+            vq, vs = quant_rows(v_new)
+            vc = vc.at[jnp.arange(b), :, pos, :].set(vq)
+            vsc = tree_index(state["vg_scale"], idxs["global"])
+            vsc = vsc.at[jnp.arange(b), :, pos].set(vs)
+            vc_f = dequant_rows(vc, vsc)
+        else:
+            vc = vc.at[jnp.arange(b), :, pos, :].set(v_new.astype(vc.dtype))
+            vc_f = vc
+
+    scale = 1.0 / math.sqrt(hd)
+    sc = jnp.einsum("bke,bkse->bks", q_rep.astype(jnp.float32),
+                    kc_f.astype(jnp.float32)) * scale
+    sc = softcap(sc, cfg.attn_logit_softcap)
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+    valid = kv_pos[None, :] <= pos[:, None]
+    sc = jnp.where(valid[:, None, :], sc, attn_mod.NEG_INF)
+    a = jax.nn.softmax(sc, axis=-1)                     # (B, k, S)
+
+    if share_v:
+        out_rep = jnp.einsum("bks,bksd->bkd", a, vc_f.astype(jnp.float32))
+        gather_idx = h2c if batched else jnp.broadcast_to(h2c, (b, h))
+        out = jnp.take_along_axis(out_rep, gather_idx[..., None], axis=1)
+    else:
+        gather_idx = h2c if batched else jnp.broadcast_to(h2c, (b, h))
+        a_full = jnp.take_along_axis(a, gather_idx[..., None], axis=1)
+        out = jnp.einsum("bhs,bhsd->bhd", a_full, vc_f.astype(jnp.float32))
+
+    state = dict(state)
+    state["kg_chai"] = tree_update(state["kg_chai"], idxs["global"], kc)
+    if int8:
+        state["kg_chai_scale"] = tree_update(state["kg_chai_scale"],
+                                             idxs["global"], ksc)
+        if not share_v:
+            state["vg_scale"] = tree_update(state["vg_scale"],
+                                            idxs["global"], vsc)
+    if share_v:
+        state["vg_chai"] = tree_update(state["vg_chai"], idxs["global"], vc)
+    else:
+        state["vg"] = tree_update(state["vg"], idxs["global"], vc)
+    return out.astype(xn.dtype), state
+
+
+# ---------------------------------------------------------------- GQA ------
+def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local):
+    from repro.models.transformer import tree_index, tree_update
+    b, d = xn.shape
+    hd, h, n_kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    qpk = cfg.q_per_kv
+    pos = state["pos"]
+    ctx = _layer_ctx(chai_ctx, idxs["attn"])
+    reps, cluster_of = ctx["reps"], ctx["cluster_of"]   # (.., KV, r/qpk)
+    batched = reps.ndim == 3
+    r = reps.shape[-1]
+
+    if batched:
+        q = jnp.einsum("bd,dhe->bhe", xn, p["wq"]).reshape(b, n_kv, qpk, hd)
+        if cfg.qk_norm:
+            q = _qk_norm(q, p["q_norm"], cfg)
+        q_rep = jnp.take_along_axis(q, reps[..., None], axis=2)
+    else:
+        wq_g = p["wq"].reshape(d, n_kv, qpk, hd)
+        idx = jnp.broadcast_to(reps[None, ..., None], (d, n_kv, r, hd))
+        wq_r = jnp.take_along_axis(wq_g, idx, axis=2)   # (d, KV, r, hd)
+        q_rep = jnp.einsum("bd,dkre->bkre", xn, wq_r)
+        if cfg.qk_norm:
+            q_rep = _qk_norm(q_rep, p["q_norm"], cfg)
+    q_rep = apply_rope(q_rep.reshape(b, 1, n_kv * r, hd),
+                       pos[:, None], cfg.rope_theta).reshape(b, n_kv, r, hd)
+
+    # K/V: per-group projections unchanged (no K saving for GQA).
+    k_new = jnp.einsum("bd,dke->bke", xn, p["wk"])
+    if cfg.qk_norm:
+        k_new = _qk_norm(k_new, p["k_norm"], cfg)
+    k_new = _rope1(k_new, pos, cfg.rope_theta)
+    v_new = jnp.einsum("bd,dke->bke", xn, p["wv"])
+
+    if local:
+        w = state["kl"].shape[3]
+        kc = tree_index(state["kl"], idxs["local"])
+        vc = tree_index(state["vl"], idxs["local"])
+        slot = jnp.mod(pos, w)
+        kc = kc.at[jnp.arange(b), :, slot, :].set(k_new.astype(kc.dtype))
+        vc = vc.at[jnp.arange(b), :, slot, :].set(v_new.astype(vc.dtype))
+        kv_pos = jax.vmap(lambda pp: attn_mod.ring_positions(pp + 1, w))(pos)
+        window = cfg.window_size
+    else:
+        s = state["kg"].shape[3]
+        kc = tree_index(state["kg"], idxs["global"])
+        vc = tree_index(state["vg"], idxs["global"])
+        kc = kc.at[jnp.arange(b), :, pos, :].set(k_new.astype(kc.dtype))
+        vc = vc.at[jnp.arange(b), :, pos, :].set(v_new.astype(vc.dtype))
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (b, s))
+        window = 0
+
+    scale = 1.0 / math.sqrt(hd)
+    sc = jnp.einsum("bkre,bkse->bkrs", q_rep.astype(jnp.float32),
+                    kc.astype(jnp.float32)) * scale
+    sc = softcap(sc, cfg.attn_logit_softcap)
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window:
+        valid &= (pos[:, None] - kv_pos) < window
+    sc = jnp.where(valid[:, None, None, :], sc, attn_mod.NEG_INF)
+    a = jax.nn.softmax(sc, axis=-1)                     # (B, KV, r, S)
+
+    gather_idx = (cluster_of if batched
+                  else jnp.broadcast_to(cluster_of, (b, n_kv, qpk)))
+    a_full = jnp.take_along_axis(a, gather_idx[..., None], axis=2)
+    out = jnp.einsum("bkgs,bksd->bkgd", a_full, vc.astype(jnp.float32))
+    out = out.reshape(b, h, hd)
+
+    state = dict(state)
+    if local:
+        state["kl"] = tree_update(state["kl"], idxs["local"], kc)
+        state["vl"] = tree_update(state["vl"], idxs["local"], vc)
+    else:
+        state["kg"] = tree_update(state["kg"], idxs["global"], kc)
+        state["vg"] = tree_update(state["vg"], idxs["global"], vc)
+    return out.astype(xn.dtype), state

@@ -1,0 +1,137 @@
+"""Online cluster-membership identification (paper §3.3, Fig 10b).
+
+After ``warmup_tokens`` MHA decode steps, per-head attention-score features
+are clustered with K-Means to decide which heads share a representative.
+Features are standardized per head so squared Euclidean distance equals
+2*(1 - Pearson correlation) — K-Means then clusters exactly by the paper's
+correlation criterion.
+
+Two modes (DESIGN.md §4):
+  * MHA (n_kv == n_heads): global clustering across all H heads; enables the
+    clustered K-cache.
+  * GQA: block-diagonal clustering within each KV group (a representative's
+    scores are only valid for heads sharing its K); compute-only saving.
+
+Membership is per *request*: all ctx arrays carry a batch dim
+(`nA, B, ...`). A batch-free variant (shared membership) is produced by
+``shared_ctx`` for single-request latency paths and the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.kmeans import kmeans, representatives
+
+
+def standardize(x, eps=1e-12):
+    """Per-row standardize: zero mean, unit norm -> correlation geometry."""
+    x = x.astype(jnp.float32)
+    x = x - x.mean(-1, keepdims=True)
+    n = jnp.sqrt(jnp.sum(jnp.square(x), -1, keepdims=True))
+    return x / jnp.maximum(n, eps)
+
+
+def chai_widths(cfg: ModelConfig):
+    """(k_max, r_max): static cluster widths. r_max is the per-KV-group
+    cluster budget for GQA archs."""
+    k_max = cfg.k_max
+    if k_max == 0:
+        return 0, 0
+    if cfg.is_mha:
+        return k_max, k_max
+    r_max = max(1, math.ceil(k_max / cfg.n_kv_heads))
+    r_max = min(r_max, cfg.q_per_kv)
+    return k_max, r_max
+
+
+def identify_membership(scores, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """scores: (nA, B, H, F) accumulated warmup attention scores.
+
+    Returns a batched chai_ctx:
+      MHA: {"h2c": (nA,B,H) int32, "reps": (nA,B,k) int32}
+      GQA: {"cluster_of": (nA,B,KV,qpk) int32, "reps": (nA,B,KV,r) int32}
+    """
+    k_max, r_max = chai_widths(cfg)
+    iters = cfg.chai.kmeans_iters
+
+    if cfg.is_mha:
+        def one(feats):                       # (H, F)
+            f = standardize(feats)
+            assign, centers, _ = kmeans(f, k_max, iters)
+            reps, _ = representatives(f, assign, centers, k_max)
+            return assign.astype(jnp.int32), reps
+
+        h2c, reps = jax.vmap(jax.vmap(one))(scores)
+        return {"h2c": h2c, "reps": reps}
+
+    qpk = cfg.q_per_kv
+    na, b, h, f = scores.shape
+    grouped = scores.reshape(na, b, cfg.n_kv_heads, qpk, f)
+
+    def one(feats):                           # (qpk, F) within one KV group
+        fz = standardize(feats)
+        assign, centers, _ = kmeans(fz, r_max, iters)
+        reps, _ = representatives(fz, assign, centers, r_max)
+        return assign.astype(jnp.int32), reps
+
+    cluster_of, reps = jax.vmap(jax.vmap(jax.vmap(one)))(grouped)
+    return {"cluster_of": cluster_of, "reps": reps}
+
+
+def shared_ctx(cfg: ModelConfig, seed: int = 0):
+    """Deterministic shared (batch-free) membership — used by the dry-run
+    and by CHAI-static (offline membership, paper §3.3 'CHAI-static').
+
+    Produces a valid ctx without observing activations: heads are assigned
+    round-robin to clusters (every cluster non-empty, reps = first member).
+    """
+    k_max, r_max = chai_widths(cfg)
+    na = cfg.n_attn_layers
+    if cfg.is_mha:
+        h = cfg.n_heads
+        h2c = jnp.tile(jnp.arange(h, dtype=jnp.int32) % k_max, (na, 1))
+        reps = jnp.tile(jnp.arange(k_max, dtype=jnp.int32), (na, 1))
+        return {"h2c": h2c, "reps": reps}
+    qpk = cfg.q_per_kv
+    cluster_of = jnp.tile(
+        jnp.arange(qpk, dtype=jnp.int32)[None, None, :] % r_max,
+        (na, cfg.n_kv_heads, 1))
+    reps = jnp.tile(jnp.arange(r_max, dtype=jnp.int32)[None, None, :],
+                    (na, cfg.n_kv_heads, 1))
+    return {"cluster_of": cluster_of, "reps": reps}
+
+
+def ctx_structs(cfg: ModelConfig, batch: int = 0):
+    """ShapeDtypeStructs + logical axes for the chai_ctx (dry-run inputs).
+
+    batch=0 -> shared (batch-free) ctx."""
+    from repro.sharding.rules import Ax
+    k_max, r_max = chai_widths(cfg)
+    na = cfg.n_attn_layers
+    bdims = (batch,) if batch else ()
+    bax = ("batch",) if batch else ()
+    i32 = jnp.int32
+    if cfg.is_mha:
+        return ({"h2c": jax.ShapeDtypeStruct((na, *bdims, cfg.n_heads), i32),
+                 "reps": jax.ShapeDtypeStruct((na, *bdims, k_max), i32)},
+                {"h2c": Ax("layers", *bax, None),
+                 "reps": Ax("layers", *bax, "clusters")})
+    qpk = cfg.q_per_kv
+    return ({"cluster_of": jax.ShapeDtypeStruct(
+                 (na, *bdims, cfg.n_kv_heads, qpk), i32),
+             "reps": jax.ShapeDtypeStruct(
+                 (na, *bdims, cfg.n_kv_heads, r_max), i32)},
+            {"cluster_of": Ax("layers", *bax, "kv_heads", None),
+             "reps": Ax("layers", *bax, "kv_heads", None)})
+
+
+def membership_churn(prev_ctx, new_ctx):
+    """Fraction of heads whose cluster id changed (paper Fig 9 metric)."""
+    key = "h2c" if "h2c" in new_ctx else "cluster_of"
+    a, b = prev_ctx[key], new_ctx[key]
+    return jnp.mean((a != b).astype(jnp.float32))

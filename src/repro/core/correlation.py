@@ -1,0 +1,24 @@
+"""Head-score correlation analysis (paper Figs 2, 6, 7).
+
+Pearson cross-correlation between per-head attention-score vectors — the
+paper's evidence for head redundancy and the feature underlying clustering.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def head_correlation(scores):
+    """scores: (H, F) per-head feature vectors -> (H, H) Pearson corr."""
+    x = scores.astype(jnp.float32)
+    x = x - x.mean(-1, keepdims=True)
+    norm = jnp.sqrt(jnp.sum(jnp.square(x), -1, keepdims=True))
+    xh = x / jnp.maximum(norm, 1e-12)
+    return xh @ xh.T
+
+
+def mean_abs_offdiag(corr):
+    """Scalar redundancy summary of a correlation matrix."""
+    h = corr.shape[0]
+    mask = 1.0 - jnp.eye(h, dtype=corr.dtype)
+    return jnp.sum(jnp.abs(corr) * mask) / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,50 @@
+"""Offline cluster-count selection via elbow analysis (paper §3.2, Fig 8).
+
+Run once per model on calibration activations: for each layer, sweep k,
+record K-Means error, and pick the smallest k where the marginal error
+reduction plateaus. The result feeds ``ModelConfig.chai.cluster_counts``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.kmeans import kmeans
+
+
+def elbow_curve(features, k_values):
+    """features: (H, F) np/jnp. Returns np.array of errors per k."""
+    errs = []
+    for k in k_values:
+        _, _, e = kmeans(features, int(k))
+        errs.append(float(e))
+    return np.asarray(errs)
+
+
+def select_k(errors, k_values, plateau_tol=0.05):
+    """Smallest k whose marginal improvement over the previous k drops below
+    ``plateau_tol`` of the total error range (the paper's 'error plateaus')."""
+    errors = np.asarray(errors, dtype=np.float64)
+    k_values = list(k_values)
+    total = max(errors[0] - errors[-1], 1e-12)
+    for i in range(1, len(k_values)):
+        gain = (errors[i - 1] - errors[i]) / total
+        if gain < plateau_tol:
+            return k_values[i - 1]
+    return k_values[-1]
+
+
+def offline_cluster_counts(per_layer_features, n_heads, plateau_tol=0.05,
+                           min_k=1, group_floor=1):
+    """Full offline phase: per-layer elbow-selected k.
+
+    per_layer_features: iterable of (H, F) arrays (one per attention layer).
+    Returns list[int] cluster counts.
+    """
+    ks = [k for k in range(1, n_heads + 1)
+          if k in (1, 2) or k % 2 == 0 or k == n_heads]
+    out = []
+    for feats in per_layer_features:
+        errs = elbow_curve(feats, ks)
+        k = select_k(errs, ks, plateau_tol)
+        out.append(int(max(min_k, group_floor, k)))
+    return out

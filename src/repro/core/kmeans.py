@@ -1,0 +1,74 @@
+"""K-Means in pure JAX (jit/vmap-able, static k, deterministic init).
+
+Used online per request for CHAI cluster-membership identification
+(paper §3.3) and offline for elbow analysis (§3.2). Initialization is
+deterministic greedy farthest-point (no PRNG needed at serving time);
+Lloyd iterations run under ``lax.fori_loop``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_sq_dists(x, c):
+    """x: (n, f); c: (k, f) -> (n, k)."""
+    x2 = jnp.sum(jnp.square(x), -1, keepdims=True)
+    c2 = jnp.sum(jnp.square(c), -1)
+    return x2 + c2[None, :] - 2.0 * (x @ c.T)
+
+
+def farthest_point_init(x, k):
+    """Deterministic k-center init: start at the point farthest from the
+    mean, then greedily add the point farthest from chosen centers."""
+    n, f = x.shape
+    d0 = jnp.sum(jnp.square(x - x.mean(0)), -1)
+    first = jnp.argmax(d0)
+    centers = jnp.zeros((k, f), x.dtype).at[0].set(x[first])
+    mind = jnp.sum(jnp.square(x - x[first]), -1)
+
+    def body(i, carry):
+        centers, mind = carry
+        nxt = jnp.argmax(mind)
+        centers = centers.at[i].set(x[nxt])
+        d = jnp.sum(jnp.square(x - x[nxt]), -1)
+        return centers, jnp.minimum(mind, d)
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers, mind))
+    return centers
+
+
+def kmeans(x, k: int, iters: int = 12):
+    """Lloyd's algorithm. x: (n, f) fp32. Returns (assign (n,), centers (k,f),
+    error: sum of squared distances)."""
+    x = x.astype(jnp.float32)
+    centers0 = farthest_point_init(x, k)
+
+    def body(_, centers):
+        d = _pairwise_sq_dists(x, centers)              # (n, k)
+        assign = jnp.argmin(d, -1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (n, k)
+        counts = onehot.sum(0)                          # (k,)
+        sums = onehot.T @ x                             # (k, f)
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts[:, None], 1.0), centers)
+        return new
+
+    centers = jax.lax.fori_loop(0, iters, body, centers0)
+    d = _pairwise_sq_dists(x, centers)
+    assign = jnp.argmin(d, -1)
+    err = jnp.sum(jnp.min(d, -1))
+    return assign, centers, err
+
+
+def representatives(x, assign, centers, k: int):
+    """Representative member per cluster = member closest to its center.
+
+    Returns (reps (k,) int32 — indices into x; valid (k,) bool)."""
+    d = _pairwise_sq_dists(x, centers)                  # (n, k)
+    member = jax.nn.one_hot(assign, k, dtype=jnp.bool_)  # (n, k)
+    d_masked = jnp.where(member, d, jnp.inf)
+    reps = jnp.argmin(d_masked, axis=0).astype(jnp.int32)
+    valid = member.any(axis=0)
+    # Empty clusters: point the rep at member 0 (never referenced).
+    return jnp.where(valid, reps, 0), valid

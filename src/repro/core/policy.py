@@ -1,0 +1,155 @@
+"""Attention policies: MHA baseline, CHAI variants, and the paper's
+comparison baselines (DejaVu head sparsity, SpAtten cascade pruning, random
+clustering from Fig 1/14).
+
+These are *full-sequence* reference implementations used by the accuracy
+and FLOPs benchmarks (Tables 1-4, Figs 1, 14). The production decode path
+lives in repro.core.chai_attention; both share the clustering code so the
+benchmark measures the same algorithm the engine runs.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import standardize
+from repro.core.kmeans import kmeans, representatives
+
+POLICIES = ("mha", "chai", "chai-static", "chai-qkv", "dejavu", "spatten",
+            "random")
+
+
+class PolicyOut(NamedTuple):
+    out: jnp.ndarray          # (B, T, H, hd)
+    score_flops: jnp.ndarray  # scalar — QK^T + softmax-ish flops actually done
+    info: dict
+
+
+def _full_scores(q, k):
+    """q: (B,T,H,hd), k: (B,T,H,hd) -> causal softmax scores (B,H,T,T)."""
+    b, t, h, hd = q.shape
+    sc = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    sc = jnp.where(mask[None, None], sc, -2e38)
+    return jax.nn.softmax(sc, axis=-1)
+
+
+def _score_flops(b, t, h_eff, hd):
+    return jnp.asarray(2.0 * b * t * t * h_eff * hd, jnp.float32)
+
+
+def _cluster_heads(a, n_clusters, warmup_tokens, iters=12):
+    """Cluster heads from warmup-prefix scores. a: (B,H,T,T) probs.
+    Features per head: scores of the first `warmup_tokens` query rows
+    (paper: cluster after 5 decode steps). Returns (h2c (B,H), reps (B,k))."""
+    b, h, t, _ = a.shape
+    w = min(warmup_tokens, t)
+    feats = a[:, :, :w, :].reshape(b, h, -1)
+
+    def one(f):
+        fz = standardize(f)
+        assign, centers, _ = kmeans(fz, n_clusters, iters)
+        reps, _ = representatives(fz, assign, centers, n_clusters)
+        return assign.astype(jnp.int32), reps
+
+    return jax.vmap(one)(feats)
+
+
+def apply_policy(policy, q, k, v, *, n_clusters=None, warmup_tokens=5,
+                 sparsity=0.5, h2c_static=None, reps_static=None,
+                 token_keep=0.7, key=None):
+    """Run attention under ``policy``. q,k,v: (B,T,H,hd) (MHA layout).
+
+    Returns PolicyOut. CHAI policies compute scores only for representative
+    heads (plus the warmup rows for clustering); DejaVu zeroes the most
+    uniform heads; SpAtten drops low-importance tokens then heads.
+    """
+    b, t, h, hd = q.shape
+
+    if policy == "mha":
+        a = _full_scores(q, k)
+        out = jnp.einsum("bhts,bshd->bthd", a, v.astype(jnp.float32))
+        return PolicyOut(out.astype(q.dtype), _score_flops(b, t, h, hd),
+                         {"probs": a})
+
+    if policy in ("chai", "chai-qkv", "chai-static", "random"):
+        kk = n_clusters or max(1, h // 2)
+        if policy == "chai-static":
+            assert h2c_static is not None and reps_static is not None
+            h2c = jnp.broadcast_to(h2c_static, (b, h))
+            reps = jnp.broadcast_to(reps_static, (b, kk))
+        elif policy == "random":
+            key = key if key is not None else jax.random.PRNGKey(0)
+            h2c1 = jax.random.randint(key, (h,), 0, kk)
+            # ensure every cluster has a member: first kk heads pinned
+            h2c1 = h2c1.at[:kk].set(jnp.arange(kk))
+            h2c = jnp.broadcast_to(h2c1, (b, h))
+            reps = jnp.broadcast_to(jnp.arange(kk), (b, kk))
+        else:
+            a_warm = _full_scores(q, k)      # warmup observation (MHA cost
+            # paid once on the first `warmup_tokens` rows; we charge it below)
+            h2c, reps = _cluster_heads(a_warm, kk, warmup_tokens)
+        # clustered scores: only representative heads
+        q_rep = jnp.take_along_axis(q, reps[:, None, :, None], axis=2)
+        k_rep = jnp.take_along_axis(k, reps[:, None, :, None], axis=2)
+        a_rep = _full_scores(q_rep, k_rep)   # (B, k, T, T)
+        a_full = jnp.take_along_axis(a_rep, h2c[:, :, None, None], axis=1)
+        if policy == "chai-qkv":
+            v_rep = jnp.take_along_axis(v, reps[:, None, :, None], axis=2)
+            o_rep = jnp.einsum("bhts,bshd->bthd", a_rep,
+                               v_rep.astype(jnp.float32))
+            out = jnp.take_along_axis(o_rep, h2c[:, None, :, None], axis=2)
+        else:
+            out = jnp.einsum("bhts,bshd->bthd", a_full,
+                             v.astype(jnp.float32))
+        warm_cost = (_score_flops(b, warmup_tokens, h, hd)
+                     if policy in ("chai", "chai-qkv") else 0.0)
+        return PolicyOut(out.astype(q.dtype),
+                         _score_flops(b, t, kk, hd) + warm_cost,
+                         {"h2c": h2c, "reps": reps})
+
+    if policy == "dejavu":
+        a = _full_scores(q, k)
+        # uniformity = negative entropy distance from uniform: prune heads
+        # whose score rows are closest to uniform (the DejaVu criterion).
+        ent = -jnp.sum(jnp.where(a > 0, a * jnp.log(a + 1e-20), 0.0), -1)
+        row_cnt = jnp.log(jnp.arange(1, t + 1, dtype=jnp.float32))
+        uniformity = (ent / jnp.maximum(row_cnt, 1e-6)).mean(-1)  # (B, H)
+        n_prune = int(sparsity * h)
+        order = jnp.argsort(-uniformity, axis=-1)        # most uniform first
+        pruned = jnp.zeros((b, h), bool)
+        pruned = pruned.at[jnp.arange(b)[:, None], order[:, :n_prune]].set(
+            True)
+        out = jnp.einsum("bhts,bshd->bthd", a, v.astype(jnp.float32))
+        out = jnp.where(pruned[:, None, :, None], 0.0, out)
+        return PolicyOut(out.astype(q.dtype),
+                         _score_flops(b, t, h - n_prune, hd),
+                         {"pruned": pruned})
+
+    if policy == "spatten":
+        a = _full_scores(q, k)
+        # cascade token pruning: cumulative attention importance per token
+        imp = a.sum(axis=(1, 2))                          # (B, S)
+        n_keep = max(1, int(token_keep * t))
+        kept = jnp.argsort(-imp, axis=-1)[:, :n_keep]
+        keep_mask = jnp.zeros((b, t), bool).at[
+            jnp.arange(b)[:, None], kept].set(True)
+        a_mask = jnp.where(keep_mask[:, None, None, :], a, 0.0)
+        a_mask = a_mask / jnp.maximum(a_mask.sum(-1, keepdims=True), 1e-9)
+        # head pruning by accumulated head importance
+        head_imp = a_mask.max(-1).mean(-1)                # (B, H)
+        n_prune = int(sparsity * h)
+        order = jnp.argsort(head_imp, axis=-1)            # least important
+        pruned = jnp.zeros((b, h), bool).at[
+            jnp.arange(b)[:, None], order[:, :n_prune]].set(True)
+        out = jnp.einsum("bhts,bshd->bthd", a_mask, v.astype(jnp.float32))
+        out = jnp.where(pruned[:, None, :, None], 0.0, out)
+        return PolicyOut(out.astype(q.dtype),
+                         _score_flops(b, n_keep, h - n_prune, hd),
+                         {"pruned": pruned, "kept_tokens": keep_mask})
+
+    raise ValueError(f"unknown policy {policy!r}")

@@ -1,0 +1,117 @@
+"""Deterministic synthetic token pipeline (offline container: no C4).
+
+Produces an endless stream of next-token-predictable sequences from a
+mixture of Zipfian n-gram Markov streams. Three properties matter:
+
+  * **Deterministic & stateless-seeded**: batch ``i`` is a pure function of
+    ``(seed, i)`` — a restarted trainer resumes mid-epoch from the step
+    counter alone (no iterator state in checkpoints).
+  * **Shard-aware**: each host materializes only its slice of the global
+    batch (``host_slice``); `jax.make_array_from_process_local_data` turns
+    slices into a sharded global batch on real multi-host fleets.
+  * **Learnable**: Markov structure (per-stream transition tables with
+    Zipfian fan-out) gives a tiny model a loss floor well below uniform —
+    the convergence tests assert on that gap.
+
+The calibration corpus for CHAI's offline phase (elbow analysis) reuses the
+same generator with a dedicated seed, standing in for the paper's 1024 C4
+samples (DESIGN.md §3 "assumptions changed").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_streams: int = 8          # distinct Markov streams in the mixture
+    branch: int = 4             # out-degree per state (Zipf-weighted)
+    zipf_a: float = 1.4
+
+
+class SyntheticPipeline:
+    """batch(i) -> {"tokens": (B, T) int32, "labels": (B, T) int32}."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        root = np.random.default_rng(np.random.SeedSequence([cfg.seed, 0xC4]))
+        v = cfg.vocab_size
+        # Per-stream transition tables: state -> `branch` candidate tokens,
+        # sampled Zipfian so streams share a head vocabulary but differ in
+        # structure. Tables are O(n_streams * V * branch) int32 — tiny.
+        self.tables = np.empty((cfg.n_streams, v, cfg.branch), np.int32)
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        zipf = 1.0 / ranks ** cfg.zipf_a
+        zipf /= zipf.sum()
+        for s in range(cfg.n_streams):
+            rng = np.random.default_rng(root.integers(2**63))
+            perm = rng.permutation(v)          # stream-specific token ranks
+            probs = zipf[np.argsort(perm)]
+            self.tables[s] = rng.choice(v, size=(v, cfg.branch), p=probs)
+
+    # -- core generator ----------------------------------------------------
+    def _gen_rows(self, rng: np.random.Generator, rows: int) -> np.ndarray:
+        c = self.cfg
+        toks = np.empty((rows, c.seq_len + 1), np.int32)
+        stream = rng.integers(c.n_streams, size=rows)
+        state = rng.integers(c.vocab_size, size=rows)
+        toks[:, 0] = state
+        # branch choice is biased to index 0 (predictable) with noise.
+        bias = np.minimum(rng.geometric(0.6, size=(rows, c.seq_len)) - 1,
+                          c.branch - 1)
+        for t in range(c.seq_len):
+            state = self.tables[stream, state, bias[:, t]]
+            toks[:, t + 1] = state
+        return toks
+
+    def batch(self, index: int, *, host_id: int = 0, n_hosts: int = 1):
+        """Host-local slice of global batch ``index`` (numpy)."""
+        c = self.cfg
+        assert c.global_batch % n_hosts == 0
+        rows = c.global_batch // n_hosts
+        rng = np.random.default_rng(
+            np.random.SeedSequence([c.seed, index, host_id]))
+        toks = self._gen_rows(rng, rows)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def global_batch_array(self, index: int, sharding=None):
+        """Full global batch as (sharded) jax arrays.
+
+        Single-process containers materialize globally then device_put; on a
+        real fleet each process feeds its local slice via
+        ``make_array_from_process_local_data``.
+        """
+        if jax.process_count() > 1 and sharding is not None:
+            local = self.batch(index, host_id=jax.process_index(),
+                               n_hosts=jax.process_count())
+            return {
+                k: jax.make_array_from_process_local_data(sharding[k], v)
+                for k, v in local.items()}
+        host = self.batch(index)
+        if sharding is None:
+            return {k: jax.numpy.asarray(v) for k, v in host.items()}
+        return {k: jax.device_put(v, sharding[k]) for k, v in host.items()}
+
+    def __iter__(self) -> Iterator[dict]:
+        i = 0
+        while True:
+            yield self.batch(i)
+            i += 1
+
+
+def calibration_batches(vocab_size: int, seq_len: int, n_samples: int,
+                        batch: int = 8, seed: int = 0xE1B0):
+    """Calibration set for CHAI's offline elbow phase (C4 stand-in)."""
+    cfg = DataConfig(vocab_size=vocab_size, seq_len=seq_len,
+                     global_batch=batch, seed=seed)
+    pipe = SyntheticPipeline(cfg)
+    for i in range((n_samples + batch - 1) // batch):
+        yield pipe.batch(i)["tokens"]

@@ -1,0 +1,211 @@
+"""Pallas TPU kernels for Clustered Head Attention (the paper's core op).
+
+Decomposition (DESIGN.md §3.2):
+  1. ``chai_qk``      — raw scores for the R representative heads only
+                        (R <= H: the compute CHAI removes). GQA: rep j reads
+                        the K tile of its group j // reps_per_group via a
+                        static index_map; MHA reads the clustered K cache.
+  2. ``row_softmax``  — masked softmax over each (b, rep) row (row fits
+                        VMEM; one pass).
+  3. ``chai_av``      — the broadcast-and-accumulate: head h gathers the A
+                        tile of its cluster via a **scalar-prefetched**
+                        ``h2c`` index map (TPU-idiomatic dynamic gather, as
+                        in paged-attention kernels) and multiplies with its
+                        own V tile. Per-head V is preserved (Table 4).
+
+Why not one fused kernel: normalized A for head h requires the rep's full
+row max/denominator, which is only known after the last S tile; splitting at
+the (B, R, S) score tensor costs one extra HBM round-trip of size S*R —
+~R/(H*hd) of the cache traffic (<1%) — and keeps every kernel single-pass.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _interpret_default():
+    return jax.default_backend() == "cpu"
+
+
+# ------------------------------------------------------------------ QK ----
+def _qk_kernel(pos_ref, q_ref, k_ref, o_ref, *, scale, ts, window):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    q = q_ref[0, 0, :].astype(jnp.float32)[None, :]        # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (Ts, hd)
+    sc = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * scale
+    idx = s * ts + jax.lax.broadcasted_iota(jnp.int32, (ts, 1), 0)
+    pos = pos_ref[b]
+    valid = idx <= pos
+    if window:
+        valid &= (pos - idx) < window
+    sc = jnp.where(valid, sc, NEG_INF)
+    o_ref[0, 0, :] = sc[:, 0]
+
+
+def chai_qk(q_rep, k_cache, pos, *, reps_per_group=1, window=0, ts=512,
+            interpret=None):
+    """q_rep: (B, R, hd); k_cache: (B, KV, S, hd) with KV*reps_per_group==R
+    (MHA clustered cache: KV==R, reps_per_group==1). -> raw scores (B,R,S)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, r_total, hd = q_rep.shape
+    s = k_cache.shape[2]
+    ts = min(ts, s)
+    assert s % ts == 0
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_qk_kernel, scale=scale, ts=ts, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, r_total, s // ts),
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda bb, rr, ss, pos_r:
+                             (bb, rr, 0)),
+                pl.BlockSpec((1, 1, ts, hd), lambda bb, rr, ss, pos_r:
+                             (bb, rr // reps_per_group, ss, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, ts), lambda bb, rr, ss, pos_r:
+                                   (bb, rr, ss)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, r_total, s), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q_rep, k_cache)
+
+
+# ------------------------------------------------------------- softmax ----
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[0, 0, :]
+    m = jnp.maximum(jnp.max(x), -1e30)
+    p = jnp.exp(x - m)
+    o_ref[0, 0, :] = p / jnp.maximum(jnp.sum(p), 1e-37)
+
+
+def row_softmax(scores, *, interpret=None):
+    """scores: (B, R, S) raw (already masked) -> normalized A (B, R, S)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, r, s = scores.shape
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(b, r),
+        in_specs=[pl.BlockSpec((1, 1, s), lambda bb, rr: (bb, rr, 0))],
+        out_specs=pl.BlockSpec((1, 1, s), lambda bb, rr: (bb, rr, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, s), jnp.float32),
+        interpret=interpret,
+    )(scores)
+
+
+# ------------------------------------------------------- int8 QK ----------
+def _qk_i8_kernel(pos_ref, q_ref, k_ref, ks_ref, o_ref, *, scale, ts,
+                  window):
+    """Fused int8-dequant scores: K tile loads 1 byte/elem from HBM and
+    dequantizes in VMEM (the memory-bound decode's byte saving happens on
+    the HBM->VMEM stream, which is exactly what BlockSpec tiles)."""
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    q = q_ref[0, 0, :].astype(jnp.float32)[None, :]        # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (Ts, hd) int8
+    krow = ks_ref[0, 0].astype(jnp.float32)[:, None]       # (Ts, 1) scales
+    sc = jnp.dot(k, q.T, preferred_element_type=jnp.float32)
+    sc = sc * krow * scale
+    idx = s * ts + jax.lax.broadcasted_iota(jnp.int32, (ts, 1), 0)
+    pos = pos_ref[b]
+    valid = idx <= pos
+    if window:
+        valid &= (pos - idx) < window
+    o_ref[0, 0, :] = jnp.where(valid, sc, NEG_INF)[:, 0]
+
+
+def chai_qk_i8(q_rep, k_cache_i8, k_scale, pos, *, reps_per_group=1,
+               window=0, ts=512, interpret=None):
+    """int8 variant of ``chai_qk``. k_cache_i8: (B, KV, S, hd) int8;
+    k_scale: (B, KV, S) f32 per-row scales. Returns raw scores (B, R, S).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b, r_total, hd = q_rep.shape
+    s = k_cache_i8.shape[2]
+    ts = min(ts, s)
+    assert s % ts == 0
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_qk_i8_kernel, scale=scale, ts=ts,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, r_total, s // ts),
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda bb, rr, ss, pos_r:
+                             (bb, rr, 0)),
+                pl.BlockSpec((1, 1, ts, hd), lambda bb, rr, ss, pos_r:
+                             (bb, rr // reps_per_group, ss, 0)),
+                pl.BlockSpec((1, 1, ts), lambda bb, rr, ss, pos_r:
+                             (bb, rr // reps_per_group, ss)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, ts), lambda bb, rr, ss, pos_r:
+                                   (bb, rr, ss)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, r_total, s), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q_rep, k_cache_i8, k_scale)
+
+
+# ------------------------------------------------------------------ AV ----
+def _av_kernel(h2c_ref, a_ref, v_ref, o_ref, acc_scr, *, n_tiles):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    a = a_ref[0, 0, :].astype(jnp.float32)[None, :]        # (1, Ts)
+    v = v_ref[0, 0].astype(jnp.float32)                    # (Ts, hd)
+    acc_scr[...] += jnp.dot(a, v, preferred_element_type=jnp.float32)
+
+    @pl.when(s == n_tiles - 1)
+    def _fin():
+        o_ref[0, 0, :] = acc_scr[0, :].astype(o_ref.dtype)
+
+
+def chai_av(a, v_cache, h2c, *, ts=512, interpret=None):
+    """a: (B, R, S) normalized clustered scores; v_cache: (B, H, S, hd);
+    h2c: (B, H) int32 head -> A-row map (scalar-prefetched: drives the A
+    BlockSpec index_map). Returns (B, H, hd) fp32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h, s, hd = v_cache.shape
+    if h2c.ndim == 1:
+        h2c = jnp.broadcast_to(h2c, (b, h))
+    ts = min(ts, s)
+    assert s % ts == 0
+    n_tiles = s // ts
+    kernel = functools.partial(_av_kernel, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, n_tiles),
+            in_specs=[
+                pl.BlockSpec((1, 1, ts), lambda bb, hh, ss, h2c_r:
+                             (bb, h2c_r[bb, hh], ss)),
+                pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ss, h2c_r:
+                             (bb, hh, ss, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, hd), lambda bb, hh, ss, h2c_r:
+                                   (bb, hh, 0)),
+            scratch_shapes=[pltpu.VMEM((1, hd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+        interpret=interpret,
+    )(h2c.astype(jnp.int32), a, v_cache)

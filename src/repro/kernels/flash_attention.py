@@ -1,0 +1,203 @@
+"""Pallas TPU flash attention: decode (one query token) and prefill.
+
+Decode: grid (B, H, S/Ts), online-softmax carried in VMEM scratch across the
+sequentially-iterated S-tile axis; K/V stream HBM->VMEM via BlockSpecs; the
+GQA group map (h -> h // q_per_kv) is a static index_map. Valid-length
+masking uses a scalar-prefetched per-example ``pos`` vector.
+
+Prefill: grid (B, H, Tq/Tb, S/Ts) with causal block skipping.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _interpret_default():
+    return jax.default_backend() == "cpu"
+
+
+# ------------------------------------------------------------------ decode
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale, window, ts, n_tiles):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)[None, :]          # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (Ts, hd)
+    sc = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * scale
+    idx = s * ts + jax.lax.broadcasted_iota(jnp.int32, (ts, 1), 0)
+    pos = pos_ref[b]
+    valid = idx <= pos
+    if window:
+        valid &= (pos - idx) < window
+    sc = jnp.where(valid, sc, NEG_INF)                       # (Ts, 1)
+
+    m_prev = m_scr[0, 0]
+    m_new = jnp.maximum(jnp.maximum(m_prev, jnp.max(sc)), -1e30)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(sc - m_new)                                  # (Ts, 1)
+    l_new = l_scr[0, 0] * alpha + jnp.sum(p)
+    v = v_ref[0, 0].astype(jnp.float32)                      # (Ts, hd)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.T, v, preferred_element_type=jnp.float32)          # (1, hd)
+    m_scr[0, 0] = m_new
+    l_scr[0, 0] = l_new
+
+    @pl.when(s == n_tiles - 1)
+    def _fin():
+        o_ref[0, 0, :] = (acc_scr[0, :]
+                          / jnp.maximum(l_scr[0, 0], 1e-37)).astype(
+                              o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, pos, *, window=0, ts=512,
+                 interpret=None):
+    """q: (B, H, hd); k/v_cache: (B, KV, S, hd); pos: (B,) int32.
+    Returns (B, H, hd) fp32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h, hd = q.shape
+    n_kv, s = k_cache.shape[1], k_cache.shape[2]
+    qpk = h // n_kv
+    ts = min(ts, s)
+    assert s % ts == 0, (s, ts)
+    n_tiles = s // ts
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (b, h, n_tiles)
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               ts=ts, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda bb, hh, ss, pos_r:
+                             (bb, hh, 0)),
+                pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ss, pos_r:
+                             (bb, hh // qpk, ss, 0)),
+                pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ss, pos_r:
+                             (bb, hh // qpk, ss, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, hd), lambda bb, hh, ss, pos_r:
+                                   (bb, hh, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q, k_cache, v_cache)
+
+
+# ------------------------------------------------------------------ prefill
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                    scale, window, tq, ts, n_tiles, offset):
+    i = pl.program_id(2)           # q tile
+    j = pl.program_id(3)           # kv tile
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = offset + i * tq
+    kv_start = j * ts
+    # causal block skip: this kv tile intersects the causal triangle iff
+    # kv_start <= q_end; window skip iff kv_end > q_start - window
+    q_end = q_start + tq - 1
+    relevant = kv_start <= q_end
+    if window:
+        relevant &= (kv_start + ts - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (Tq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (Ts, hd)
+        sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (tq, ts), 0)
+        ki = kv_start + jax.lax.broadcasted_iota(jnp.int32, (tq, ts), 1)
+        valid = ki <= qi
+        if window:
+            valid &= (qi - ki) < window
+        sc = jnp.where(valid, sc, NEG_INF)
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(jnp.maximum(m_prev, jnp.max(sc, -1)), -1e30)
+        alpha = jnp.exp(m_prev - m_new)                      # (Tq,)
+        p = jnp.exp(sc - m_new[:, None])                     # (Tq, Ts)
+        l_new = l_scr[:, 0] * alpha + jnp.sum(p, -1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_new
+        l_scr[:, 0] = l_new
+
+    @pl.when(j == n_tiles - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[:, 0], 1e-37)[:, None]).astype(
+                           o_ref.dtype)
+
+
+def flash_prefill(q, k, v, *, offset=0, window=0, tq=256, ts=512,
+                  interpret=None):
+    """q: (B, T, H, hd); k/v: (B, S, KV, hd) (time-major KV, as projected).
+    Causal: query t at absolute position offset+t. Returns (B, T, H, hd)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, t, h, hd = q.shape
+    s, n_kv = k.shape[1], k.shape[2]
+    qpk = h // n_kv
+    tq = min(tq, t)
+    ts = min(ts, s)
+    assert t % tq == 0 and s % ts == 0, (t, tq, s, ts)
+    n_tiles = s // ts
+    scale = 1.0 / math.sqrt(hd)
+    # kernels want head-major layouts: (B, H, T, hd)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, t // tq, n_tiles)
+    kernel = functools.partial(_prefill_kernel, scale=scale, window=window,
+                               tq=tq, ts=ts, n_tiles=n_tiles, offset=offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, hd), lambda bb, hh, ii, jj:
+                         (bb, hh, ii, 0)),
+            pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ii, jj:
+                         (bb, hh // qpk, jj, 0)),
+            pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ii, jj:
+                         (bb, hh // qpk, jj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, hd), lambda bb, hh, ii, jj:
+                               (bb, hh, ii, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, hd), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b, h, t, hd), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,54 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+On CPU (this container) kernels run with interpret=True; on TPU they lower
+to Mosaic. ``chai_decode_attention`` is the fused public op: clustered
+scores -> masked row softmax -> broadcast AV.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import chai_attention as ck
+from repro.kernels import flash_attention as fk
+
+
+@functools.partial(jax.jit, static_argnames=("window", "ts", "interpret"))
+def flash_decode_attention(q, k_cache, v_cache, pos, *, window=0, ts=512,
+                           interpret=None):
+    return fk.flash_decode(q, k_cache, v_cache, pos, window=window, ts=ts,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("offset", "window", "tq", "ts",
+                                    "interpret"))
+def flash_prefill_attention(q, k, v, *, offset=0, window=0, tq=256, ts=512,
+                            interpret=None):
+    return fk.flash_prefill(q, k, v, offset=offset, window=window, tq=tq,
+                            ts=ts, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("reps_per_group", "window", "ts",
+                                    "interpret"))
+def chai_decode_attention(q_rep, k_cache, v_cache, h2c, pos, *,
+                          reps_per_group=1, window=0, ts=512,
+                          interpret=None):
+    """The paper's decode op. q_rep: (B, R, hd) rep-head queries;
+    k_cache: (B, KV, S, hd) (clustered for MHA: KV==R); v_cache:
+    (B, H, S, hd) full per-head V; h2c: (B, H) or (H,) head->rep-row map;
+    pos: (B,). Returns (B, H, hd) fp32."""
+    sc = ck.chai_qk(q_rep, k_cache, pos, reps_per_group=reps_per_group,
+                    window=window, ts=ts, interpret=interpret)
+    a = ck.row_softmax(sc, interpret=interpret)
+    return ck.chai_av(a, v_cache, h2c, ts=ts, interpret=interpret)
+
+
+def decode_flop_estimate(b, h, r, s, hd):
+    """Analytic decode-attention FLOPs: clustered scores + full AV."""
+    scores = 2.0 * b * r * s * hd
+    av = 2.0 * b * h * s * hd
+    return scores + av

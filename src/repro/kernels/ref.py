@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_decode_ref(q, k_cache, v_cache, pos, *, window=0):
+    """q: (B, H, hd); k/v_cache: (B, KV, S, hd); pos: (B,) int32 (number of
+    valid tokens - 1 == current position). Returns (B, H, hd) fp32."""
+    b, h, hd = q.shape
+    n_kv, s = k_cache.shape[1], k_cache.shape[2]
+    qpk = h // n_kv
+    qs = q.reshape(b, n_kv, qpk, hd).astype(jnp.float32)
+    sc = jnp.einsum("bkgd,bksd->bkgs", qs,
+                    k_cache.astype(jnp.float32)) / jnp.sqrt(
+                        jnp.float32(hd))
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+    valid = kv_pos[None, :] <= pos[:, None]
+    if window:
+        valid &= (pos[:, None] - kv_pos[None, :]) < window
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    a = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", a, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd)
+
+
+def flash_prefill_ref(q, k, v, *, offset=0, window=0):
+    """q: (B, T, H, hd); k/v: (B, S, KV, hd); causal with query positions
+    offset..offset+T-1 against key positions 0..S-1."""
+    b, t, h, hd = q.shape
+    s, n_kv = k.shape[1], k.shape[2]
+    qpk = h // n_kv
+    qs = q.reshape(b, t, n_kv, qpk, hd).astype(jnp.float32)
+    sc = jnp.einsum("btkgd,bskd->btkgs", qs,
+                    k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    qp = offset + jnp.arange(t)[:, None]
+    kp = jnp.arange(s)[None, :]
+    valid = kp <= qp
+    if window:
+        valid &= (qp - kp) < window
+    sc = jnp.where(valid[None, :, None, None, :], sc, NEG_INF)
+    a = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", a, v.astype(jnp.float32))
+    return out.reshape(b, t, h, hd)
+
+
+def chai_scores_ref(q_rep, k_cache, pos, *, reps_per_group=0):
+    """Clustered scores. q_rep: (B, R, hd) representative-head queries;
+    k_cache: (B, KV, S, hd). reps_per_group r maps rep j -> KV group j//r
+    (MHA clustered cache: KV == R, r == 1). Returns normalized A (B, R, S)."""
+    b, r_total, hd = q_rep.shape
+    n_kv, s = k_cache.shape[1], k_cache.shape[2]
+    r = reps_per_group or 1
+    kg = k_cache[:, jnp.arange(r_total) // r]            # (B, R, S, hd)
+    sc = jnp.einsum("bre,brse->brs", q_rep.astype(jnp.float32),
+                    kg.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+    valid = kv_pos[None, :] <= pos[:, None]
+    sc = jnp.where(valid[:, None, :], sc, NEG_INF)
+    return jax.nn.softmax(sc, axis=-1)
+
+
+def chai_scores_i8_ref(q_rep, k_cache_i8, k_scale, pos, *,
+                       reps_per_group=0):
+    """Oracle for the fused int8-dequant clustered scores."""
+    kf = k_cache_i8.astype(jnp.float32) * k_scale[..., None]
+    return chai_scores_ref(q_rep, kf, pos, reps_per_group=reps_per_group)
+
+
+def chai_av_ref(a, v_cache, h2c):
+    """a: (B, R, S) normalized clustered scores; v_cache: (B, H, S, hd);
+    h2c: (B, H) or (H,) flat head->row map. Returns (B, H, hd) fp32."""
+    b, h = v_cache.shape[0], v_cache.shape[1]
+    if h2c.ndim == 1:
+        h2c = jnp.broadcast_to(h2c, (b, h))
+    a_full = jnp.take_along_axis(a, h2c[..., None], axis=1)   # (B, H, S)
+    return jnp.einsum("bhs,bhsd->bhd", a_full.astype(jnp.float32),
+                      v_cache.astype(jnp.float32))
+
+
+def chai_decode_ref(q_rep, k_cache, v_cache, h2c, pos, *, reps_per_group=0):
+    a = chai_scores_ref(q_rep, k_cache, pos, reps_per_group=reps_per_group)
+    return chai_av_ref(a, v_cache, h2c)

@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+No device allocation — shardable, weak-type-correct stand-ins. Frontend-stub
+archs (musicgen, internvl2) receive precomputed frame/patch embeddings per
+the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.sharding.rules import Ax
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.frontend != "none":
+        shapes = {"embeddings": jax.ShapeDtypeStruct((b, t, cfg.d_model),
+                                                     jnp.bfloat16),
+                  "labels": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        logical = {"embeddings": Ax("batch", None, "embed"),
+                   "labels": Ax("batch", None)}
+    else:
+        shapes = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32),
+                  "labels": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        logical = {"tokens": Ax("batch", None), "labels": Ax("batch", None)}
+    return shapes, logical
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.frontend != "none":
+        return ({"embeddings": jax.ShapeDtypeStruct((b, t, cfg.d_model),
+                                                    jnp.bfloat16)},
+                {"embeddings": Ax("batch", None, "embed")})
+    return ({"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32)},
+            {"tokens": Ax("batch", None)})
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    if cfg.frontend != "none":
+        return ({"embeddings": jax.ShapeDtypeStruct((b, cfg.d_model),
+                                                    jnp.bfloat16)},
+                {"embeddings": Ax("batch", "embed")})
+    return ({"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)},
+            {"tokens": Ax("batch")})

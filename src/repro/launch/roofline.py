@@ -1,0 +1,138 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+  compute    = per_device_HLO_FLOPs / peak_FLOPs_per_chip
+  memory     = per_device_HLO_bytes / HBM_bw_per_chip
+  collective = per_device_collective_bytes / ICI_link_bw
+
+cost_analysis() is per-device for SPMD executables (verified empirically),
+so per-chip division is already done. Collective bytes are parsed from the
+post-optimization HLO text: for each all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction we count
+max(input_bytes, output_bytes) — the wire-side size of the transfer.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+# TPU v5e per-chip constants (from the assignment).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# matches e.g.:  %foo = (bf16[2,3]{1,0}, ...) all-reduce(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device bytes moved by collectives + per-kind breakdown.
+
+    ``-done`` ops carry the same shape as their ``-start``; count starts
+    (and plain sync ops) only.
+    """
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        out_shape, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        # operand shapes: everything inside the call parens on this line
+        line_end = hlo_text.find("\n", m.end())
+        operands = hlo_text[m.end():line_end if line_end > 0 else None]
+        in_bytes = _shape_bytes(operands)
+        out_bytes = _shape_bytes(out_shape)
+        per_kind[kind] += max(in_bytes, out_bytes)
+        count += 1
+    return sum(per_kind.values()), per_kind, count
+
+
+@dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: dict
+    n_collectives: int
+
+    @property
+    def t_compute(self):
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_max(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self):
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "coll_breakdown": self.coll_breakdown,
+            "n_collectives": self.n_collectives,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    cb, breakdown, n = collective_bytes(compiled.as_text())
+    return Roofline(flops, byts, float(cb), breakdown, n)
+
+
+def model_flops(cfg, shape):
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D per generated/processed
+    token at inference (N = active params)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch   # decode: 1 token/request

@@ -1,0 +1,104 @@
+"""Jit-able step functions: train_step, serve_prefill, serve_step (+CHAI).
+
+These are the exact functions the dry-run lowers and the drivers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as chai_cache
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+LB_COEF = 0.01
+Z_COEF = 1e-3
+
+
+def cross_entropy(logits, labels):
+    """logits (B, T, V) fp32; labels (B, T) int32 -> mean loss."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, *, remat=True, moe_impl="capacity",
+                 unroll=False):
+    def loss_fn(params, batch):
+        inputs = batch.get("tokens", batch.get("embeddings"))
+        logits, _, aux = tfm.forward_fullseq(params, cfg, inputs,
+                                             remat=remat, moe_impl=moe_impl,
+                                             unroll=unroll)
+        ce = cross_entropy(logits, batch["labels"])
+        loss = ce + LB_COEF * aux["load_balance"] + Z_COEF * aux["router_z"]
+        return loss, {"ce": ce, **aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, *, remat=True, moe_impl="capacity",
+                    lr_kw: Optional[dict] = None, unroll=False,
+                    grad_dtype=None, grad_shardings=None):
+    """``grad_dtype='bfloat16'`` casts gradients before the optimizer.
+    ``grad_shardings``: pin gradients to the ZeRO (data-sharded) layout —
+    without it XLA lowers the data-axis grad all-reduce as
+    reduce-scatter + ALL-GATHER of the full f32 gradients, then re-slices
+    for the sharded moments; the constraint deletes the gather
+    (EXPERIMENTS.md §Perf iteration 4)."""
+    loss_fn = make_loss_fn(cfg, remat=remat, moe_impl=moe_impl,
+                           unroll=unroll)
+    lr_kw = lr_kw or {}
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        if grad_dtype is not None:
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.dtype(grad_dtype)), grads)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        lr = adamw.cosine_lr(opt_state.step, **lr_kw) if lr_kw else None
+        params, opt_state, om = adamw.update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_serve_prefill(cfg: ModelConfig, batch: int, max_seq: int, *,
+                       moe_impl="capacity", unroll=False):
+    def serve_prefill(params, batch_inputs):
+        inputs = batch_inputs.get("tokens", batch_inputs.get("embeddings"))
+        state = tfm.init_decode_state(cfg, batch, max_seq)
+        logits, state, _ = tfm.forward_fullseq(
+            params, cfg, inputs, state=state, logits_slice="last",
+            moe_impl=moe_impl, unroll=unroll)
+        return logits[:, 0], state
+
+    return serve_prefill
+
+
+def make_serve_step(cfg: ModelConfig, *, chai=False, moe_impl="capacity",
+                    unroll=False):
+    def serve_step(params, batch_inputs, state, chai_ctx=None):
+        kw = {}
+        if "embeddings" in batch_inputs:
+            kw["embeddings"] = batch_inputs["embeddings"]
+            tokens = None
+        else:
+            tokens = batch_inputs["tokens"]
+        logits, state = tfm.decode_step(params, cfg, tokens, state,
+                                        chai_ctx=chai_ctx if chai else None,
+                                        moe_impl=moe_impl, unroll=unroll,
+                                        **kw)
+        return logits, state
+
+    return serve_step
+
+
+def make_compact_step(cfg: ModelConfig):
+    def compact(state, chai_ctx):
+        return chai_cache.compact_kv(state, chai_ctx, cfg)
+    return compact

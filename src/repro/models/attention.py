@@ -1,0 +1,127 @@
+"""Attention: GQA/MQA/MHA, full-sequence (flash-style chunked) + decode paths.
+
+Full-sequence attention streams KV in chunks with a running-softmax carry
+(pure-JAX flash; also the oracle for the Pallas kernels). Decode reads a
+dense or ring-buffer cache. CHAI's clustered decode path lives in
+``repro.core.chai_attention`` and shares these primitives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rms_norm, softcap
+
+NEG_INF = -2.0e38
+
+
+def _gqa_split(q, n_kv):
+    """(B, T, H, hd) -> (B, T, KV, qpk, hd)."""
+    b, t, h, d = q.shape
+    return q.reshape(b, t, n_kv, h // n_kv, d)
+
+
+def attention_fullseq(q, k, v, q_positions, kv_positions, *,
+                      window=0, attn_softcap=0.0, chunk=1024):
+    """Causal (optionally windowed) attention over a full K/V sequence.
+
+    q: (B, Tq, H, hd); k, v: (B, S, KV, hd).
+    q_positions: (Tq,) absolute positions of queries.
+    kv_positions: (S,) absolute positions of keys.
+    Returns (B, Tq, H, hd).
+    """
+    b, tq, h, hd = q.shape
+    s, n_kv = k.shape[1], k.shape[2]
+    qs = _gqa_split(q, n_kv).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    kc = k.reshape(b, n_chunks, chunk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(n_chunks, chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i = xs
+        # scores: (B, Tq, KV, qpk, C)
+        sc = jnp.einsum("btkgd,bckd->btkgc", qs, k_i.astype(jnp.float32))
+        sc = sc * scale
+        sc = softcap(sc, attn_softcap)
+        mask = p_i[None, :] <= q_positions[:, None]          # (Tq, C) causal
+        if window and window > 0:
+            mask &= (q_positions[:, None] - p_i[None, :]) < window
+        sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+        # guard: keep m finite so fully-masked rows produce p=0, not p=1
+        m_new = jnp.maximum(jnp.maximum(m, sc.max(axis=-1)), -1e30)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "btkgc,bckd->btkgd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    qpk = h // n_kv
+    m0 = jnp.full((b, tq, n_kv, qpk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, tq, n_kv, qpk), jnp.float32)
+    a0 = jnp.zeros((b, tq, n_kv, qpk, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(b, tq, h, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_positions, pos, *,
+                     window=0, attn_softcap=0.0):
+    """One-token decode against a cache.
+
+    q: (B, H, hd); caches: (B, KV, S, hd);
+    kv_positions: (S,) absolute position per cache slot (ring-aware);
+    pos: scalar int32 — number of tokens already in context (query position).
+    Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    n_kv, s = k_cache.shape[1], k_cache.shape[2]
+    qs = q.reshape(b, n_kv, h // n_kv, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    sc = jnp.einsum("bkgd,bksd->bkgs", qs, k_cache.astype(jnp.float32)) * scale
+    sc = softcap(sc, attn_softcap)
+    valid = (kv_positions >= 0) & (kv_positions <= pos)
+    if window and window > 0:
+        valid &= (pos - kv_positions) < window
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def ring_positions(pos, size):
+    """Absolute position stored in each slot of a ring buffer of ``size``.
+
+    Slot s holds the latest t < pos with t % size == s; -1 if none yet.
+    """
+    slots = jnp.arange(size, dtype=jnp.int32)
+    last = pos - 1 - jnp.mod(pos - 1 - slots, size)
+    return jnp.where(last >= 0, last, -1)
+
+
+def project_qkv(x, p, cfg, positions, layer_slice=None):
+    """Project hidden states to rotary-encoded q, k, v.
+
+    x: (B, T, d). p: attention param group (already layer-indexed).
+    Returns q: (B, T, H, hd), k/v: (B, T, KV, hd).
+    """
+    q = jnp.einsum("btd,dhe->bthe", x, p["wq"])
+    k = jnp.einsum("btd,dke->btke", x, p["wk"])
+    v = jnp.einsum("btd,dke->btke", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def output_proj(attn_out, p):
+    """(B, T, H, hd) @ (H, hd, d) -> (B, T, d)."""
+    return jnp.einsum("bthe,hed->btd", attn_out, p["wo"])

@@ -1,0 +1,10 @@
+"""Modality frontend stubs (per assignment: audio/vision frontends provide
+precomputed frame/patch embeddings; only a linear adapter is real)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adapt(embeddings, p):
+    """embeddings: (B, T, d_in) precomputed frontend outputs -> (B, T, d)."""
+    return jnp.einsum("btd,de->bte", embeddings, p["adapter"])

@@ -1,0 +1,18 @@
+"""Dense gated MLP (silu/gelu/relu2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import activation_fn
+
+
+def dense_ffn(x, p, cfg):
+    """x: (B, T, d); gated (w_gate/w_up/w_down) or 2-matrix (w_up/w_down)."""
+    act = activation_fn(cfg.activation)
+    u = jnp.einsum("btd,df->btf", x, p["w_up"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"])
+        h = act(g) * u
+    else:
+        h = act(u)
+    return jnp.einsum("btf,fd->btd", h, p["w_down"])

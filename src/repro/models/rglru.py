@@ -1,0 +1,92 @@
+"""RecurrentGemma recurrent block: temporal conv + RG-LRU (Griffin).
+
+Full-sequence path uses ``lax.associative_scan`` (parallel prefix) over the
+linear recurrence h_t = a_t * h_{t-1} + b_t — the TPU-native way to lower a
+diagonal RNN (log-depth, MXU-free elementwise). Decode is a single fused
+step. State: (h, conv_tail).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def _gates(x_br, p):
+    """Recurrence gate a_t and input gate i_t from the x branch."""
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x_br, p["w_a"]))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x_br, p["w_i"]))
+    log_a = -_C * jax.nn.softplus(p["log_lambda"]) * r      # (..., rnn)
+    return log_a, i
+
+
+def _causal_conv_full(x, w, b):
+    """x: (B, T, D); w: (cw, D) depthwise causal conv; b: (D,)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):  # cw is small (4): unrolled taps
+        out = out + pad[:, i: i + x.shape[1], :] * w[cw - 1 - i]
+    return out + b
+
+
+def rglru_fullseq(x, p, cfg, h0=None, conv_tail=None):
+    """x: (B, T, d) -> (y, (h_T, conv_tail)).
+
+    h0: (B, rnn) initial state; conv_tail: (B, cw-1, rnn) trailing inputs.
+    """
+    bsz, t, _ = x.shape
+    rw = cfg.rnn_width
+    xb = jnp.einsum("btd,de->bte", x, p["w_x"])              # (B, T, rnn)
+    gate = jax.nn.gelu(jnp.einsum("btd,de->bte", x, p["w_gate"]))
+
+    if conv_tail is not None:
+        xb_ext = jnp.concatenate([conv_tail, xb], axis=1)
+        xb_conv = _causal_conv_full(xb_ext, p["conv_w"], p["conv_b"])
+        xb_conv = xb_conv[:, conv_tail.shape[1]:]
+    else:
+        xb_conv = _causal_conv_full(xb, p["conv_w"], p["conv_b"])
+
+    log_a, i_gate = _gates(xb_conv, p)                       # (B, T, rnn)
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated_x = (i_gate * xb_conv).astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * gated_x
+
+    if h0 is not None:
+        # Fold h0 in as a virtual step at t=-1 with a=0, b=h0.
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b_t = jnp.concatenate([h0.astype(jnp.float32)[:, None], b_t], axis=1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    h = h.astype(x.dtype)
+
+    y = jnp.einsum("bte,ed->btd", h * gate, p["w_out"])
+    new_tail = (jnp.concatenate([conv_tail, xb], axis=1)[:, -(cfg.conv_width - 1):]
+                if conv_tail is not None else xb[:, -(cfg.conv_width - 1):])
+    return y, (h[:, -1], new_tail)
+
+
+def rglru_decode(x, p, cfg, h, conv_tail):
+    """One-step decode. x: (B, d); h: (B, rnn); conv_tail: (B, cw-1, rnn)."""
+    xb = jnp.einsum("bd,de->be", x, p["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bd,de->be", x, p["w_gate"]))
+    window = jnp.concatenate([conv_tail, xb[:, None]], axis=1)  # (B, cw, rnn)
+    # window is time-ordered (oldest first); conv_w[j] weights the token
+    # j steps back -> flip taps to align with the causal full-seq conv.
+    xb_conv = jnp.einsum("bcw,cw->bw", window,
+                         p["conv_w"][::-1]) + p["conv_b"]
+    log_a, i_gate = _gates(xb_conv, p)
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) \
+        * (i_gate * xb_conv).astype(jnp.float32)
+    h_new = (a * h.astype(jnp.float32) + b_t).astype(x.dtype)
+    y = jnp.einsum("be,ed->bd", h_new * gate, p["w_out"])
+    return y, (h_new, window[:, 1:])

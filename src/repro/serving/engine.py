@@ -1,0 +1,209 @@
+"""Batched serving engine with the CHAI phase machine.
+
+Request lifecycle (paper Fig 10):
+
+    PREFILL  --(full MHA forward, fills dense KV cache)-->
+    WARMUP   --(``warmup_tokens`` MHA decode steps; per-head attention
+                scores accumulate into a feature buffer)-->
+    CLUSTER  --(K-Means membership identification per request; the dense
+                K cache is **compacted** to representative rows — the
+                paper's 21.4% KV saving — via a donated jit)-->
+    STEADY   --(Clustered Head Attention decode until EOS/max_tokens)
+
+The engine runs *slot-batched continuous decode*: a fixed number of batch
+slots (static shapes for XLA), a FIFO queue, and per-slot phase tracking.
+All slots advance together every step; slots in WARMUP use the MHA step,
+slots in STEADY the CHAI step. Because phase-switch requires a cache-layout
+change (MHA archs), the engine keeps batch *cohorts*: requests admitted
+together move through phases together (bucketed admission). This matches
+the paper's serving setting (all-MHA decode for 5 tokens, then CHAI).
+
+Straggler/deadline mitigation: each cohort has a decode deadline; cohorts
+that exceed it (slow host, preempted chip) are re-dispatched onto a fresh
+cohort from the still-queued state (generated tokens are kept).
+
+On-CPU usage: reduced configs; the same engine code drives TPU meshes by
+passing ``mesh`` + shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as chai_cache
+from repro.core import clustering
+from repro.launch import steps as steps_mod
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (T,) int32
+    max_new_tokens: int = 32
+    # -- filled by the engine --
+    generated: Optional[List[int]] = None
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def ttft(self):
+        return self.t_first_token - self.t_enqueue
+
+    @property
+    def latency(self):
+        return self.t_done - self.t_enqueue
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_slots: int = 4               # cohort size (static)
+    max_seq: int = 256                 # KV capacity (static)
+    greedy: bool = True
+    cohort_deadline_s: float = 120.0   # straggler re-dispatch deadline
+    use_chai: bool = True
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        assert cfg.n_attn_layers > 0 or not ecfg.use_chai, \
+            "CHAI needs attention layers"
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.queue: deque = deque()
+        self.done: List[Request] = []
+        self.redispatched = 0
+        b, s = ecfg.batch_slots, ecfg.max_seq
+
+        chai_on = ecfg.use_chai and cfg.chai.enabled and cfg.k_max > 0
+        self.chai_on = chai_on
+        self._prefill = jax.jit(steps_mod.make_serve_prefill(cfg, b, s))
+        self._mha_step = jax.jit(steps_mod.make_serve_step(cfg, chai=False),
+                                 donate_argnums=(2,))
+        if chai_on:
+            self._chai_step = jax.jit(
+                steps_mod.make_serve_step(cfg, chai=True),
+                donate_argnums=(2,))
+            self._compact = jax.jit(steps_mod.make_compact_step(cfg),
+                                    donate_argnums=(0,))
+            self._identify = jax.jit(
+                lambda sc: clustering.identify_membership(sc, cfg))
+
+    # -- public API --------------------------------------------------------
+    def submit(self, prompt, max_new_tokens=32, uid=None):
+        req = Request(uid=uid if uid is not None else len(self.queue)
+                      + len(self.done),
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens)
+        req.t_enqueue = time.time()
+        req.generated = []
+        self.queue.append(req)
+        return req
+
+    def run(self):
+        """Drain the queue; returns completed requests."""
+        while self.queue:
+            cohort = [self.queue.popleft()
+                      for _ in range(min(self.ecfg.batch_slots,
+                                         len(self.queue)))]
+            try:
+                self._run_cohort(cohort)
+            except TimeoutError:
+                # cohort exceeded its deadline: re-dispatch unfinished
+                self.redispatched += len(cohort)
+                for r in cohort:
+                    if len(r.generated) < r.max_new_tokens:
+                        self.queue.append(r)
+                    else:
+                        self.done.append(r)
+        return self.done
+
+    # -- cohort execution ----------------------------------------------------
+    def _pad_prompts(self, cohort):
+        b, s = self.ecfg.batch_slots, self.ecfg.max_seq
+        t = max(len(r.prompt) for r in cohort)
+        toks = np.zeros((b, t), np.int32)
+        for i, r in enumerate(cohort):
+            toks[i, t - len(r.prompt):] = r.prompt    # left-pad
+        return jnp.asarray(toks), t
+
+    def _run_cohort(self, cohort):
+        cfg, ecfg = self.cfg, self.ecfg
+        deadline = time.time() + ecfg.cohort_deadline_s
+        tokens, t = self._pad_prompts(cohort)
+        logits, state = self._prefill(self.params, {"tokens": tokens})
+        t_first = time.time()
+        for r in cohort:
+            r.t_first_token = t_first
+        next_tok = self._sample(logits)
+        self._record(cohort, next_tok)
+
+        warm = cfg.chai.warmup_tokens if self.chai_on else 0
+        max_new = max(r.max_new_tokens for r in cohort)
+
+        # ---- WARMUP: MHA decode, accumulating clustering features ----
+        if self.chai_on:
+            state = chai_cache.add_score_buffer(state, cfg,
+                                                ecfg.batch_slots)
+        step = 1
+        while step < max_new and step <= warm:
+            if time.time() > deadline:
+                raise TimeoutError
+            logits, state = self._mha_step(
+                self.params, {"tokens": next_tok}, state)
+            next_tok = self._sample(logits)
+            self._record(cohort, next_tok)
+            step += 1
+
+        # ---- CLUSTER + COMPACT: membership ID, K-cache gather ----
+        ctx = None
+        if self.chai_on and step <= max_new:
+            state, scores = chai_cache.pop_score_buffer(state)
+            ctx = self._identify(scores)
+            state = self._compact(state, ctx)
+
+        # ---- STEADY: Clustered Head Attention decode ----
+        while step < max_new:
+            if time.time() > deadline:
+                raise TimeoutError
+            if ctx is not None:
+                logits, state = self._chai_step(
+                    self.params, {"tokens": next_tok}, state, ctx)
+            else:
+                logits, state = self._mha_step(
+                    self.params, {"tokens": next_tok}, state)
+            next_tok = self._sample(logits)
+            self._record(cohort, next_tok)
+            step += 1
+
+        t_done = time.time()
+        for r in cohort:
+            r.generated = r.generated[:r.max_new_tokens]
+            r.t_done = t_done
+            self.done.append(r)
+
+    def _sample(self, logits):
+        if self.ecfg.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        raise NotImplementedError("sampling beyond greedy")
+
+    @staticmethod
+    def _record(cohort, next_tok):
+        toks = np.asarray(next_tok)
+        for i, r in enumerate(cohort):
+            r.generated.append(int(toks[i]))
+
+    # -- metrics ------------------------------------------------------------
+    def kv_bytes(self, *, chai: Optional[bool] = None):
+        chai = self.chai_on if chai is None else chai
+        return chai_cache.kv_cache_bytes(
+            self.cfg, self.ecfg.batch_slots, self.ecfg.max_seq, chai=chai)

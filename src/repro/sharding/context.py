@@ -1,0 +1,64 @@
+"""Mesh context: lets pure-jnp model code opt into shard_map sub-regions.
+
+The transformer is mesh-agnostic (GSPMD partitions it from jit shardings).
+A few blocks — expert-parallel MoE dispatch — need *manual* collectives
+(all-to-all) that GSPMD will not discover on its own. Those blocks read
+the active mesh from this context; when no mesh is set they fall back to
+the pure-jnp path (single-device tests, CPU examples).
+
+Usage (launcher / dry-run):
+    with sharding_ctx(mesh, batch_axes=("pod", "data"), model_axis="model"):
+        lowered = jax.jit(train_step, ...).lower(...)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: object
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    def axis_size(self, name):
+        return dict(zip(self.mesh.axis_names,
+                        self.mesh.devices.shape))[name]
+
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, *, batch_axes=("data",), model_axis="model"):
+    ctx = ShardingCtx(mesh=mesh, batch_axes=tuple(batch_axes),
+                      model_axis=model_axis)
+    _ACTIVE.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _ACTIVE.pop()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def pin_activations(t):
+    """Pin a (B, T, d) activation to (batch-sharded, replicated, replicated).
+
+    Applied to the layer-scan carry: without it GSPMD may settle on a
+    d-sharded fixed point for the residual stream, then all-gather it per
+    projection (6x/layer measured on rwkv6 — EXPERIMENTS.md §Perf cell 2).
+    No-op without an active ctx (CPU tests) or for non-3D values.
+    """
+    ctx = current_ctx()
+    if ctx is None or getattr(t, "ndim", 0) != 3:
+        return t
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ba = ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(ctx.mesh, P(ba, None, None)))

@@ -1,0 +1,145 @@
+"""Logical-axis -> PartitionSpec rule engine.
+
+Every tensor in the system carries a tuple of *logical* axis names. This
+module maps those names onto mesh axes with divisibility-aware fallbacks so a
+single rule table serves all 10 assigned architectures on the fixed
+production meshes (16x16 single-pod, 2x16x16 multi-pod).
+
+Key behaviours:
+  * A mesh axis is assigned to at most one tensor dim (PartitionSpec rule).
+  * A candidate is skipped unless the dim size is divisible by the mesh-axis
+    size (so e.g. gemma3's 8 query heads fall through to head_dim sharding
+    on a 16-way model axis).
+  * ``batch`` prefers the combined ("pod","data") group on multi-pod meshes;
+    ``seq`` picks up the data axis only when batch could not (automatic
+    context-parallel fallback for long_500k's global_batch=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCandidate = Union[str, Tuple[str, ...]]
+
+
+class Ax:
+    """Leaf wrapper for a tuple of logical axis names (pytree-safe)."""
+    __slots__ = ("names",)
+
+    def __init__(self, *names):
+        self.names = tuple(names)
+
+    def __repr__(self):
+        return f"Ax{self.names}"
+
+    def __eq__(self, other):
+        return isinstance(other, Ax) and self.names == other.names
+
+    def __hash__(self):
+        return hash(self.names)
+
+# Ordered candidates per logical axis name. Tuples = combined mesh axes.
+DEFAULT_RULES: dict = {
+    "batch":      [("pod", "data"), ("data",), ("pod",)],
+    "seq":        [("pod", "data"), ("data",)],   # CP fallback (decode B=1)
+    "seq_nosplit": [],
+    "vocab":      [("model",)],
+    "embed":      [],                 # replicated (activations row dim)
+    "embed_tp":   [("model",)],       # TP'd embed dim (e.g. rwkv channel dims)
+    "heads":      [("model",)],
+    "kv_heads":   [("model",)],
+    "head_dim":   [("model",)],       # fallback target when heads fail
+    "mlp":        [("model",)],
+    "experts":    [("model",)],
+    "expert_mlp": [("model",)],       # fallback if experts not divisible
+    "rnn":        [("model",)],
+    "conv":       [],
+    "layers":     [],                 # stacked-scan leading dim: never sharded
+    "lora":       [],
+    "capacity":   [],
+    "clusters":   [],                 # CHAI representative-head axis
+}
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Optional[dict] = None) -> P:
+    """Compute a PartitionSpec for ``shape`` with logical axis names."""
+    rules = rules or DEFAULT_RULES
+    assert len(shape) == len(logical), (shape, logical)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.shape.values())) \
+        if isinstance(mesh.shape, dict) else dict(mesh.shape)
+    used: set = set()
+    out: list = []
+    for dim, name in zip(shape, logical):
+        assigned = None
+        for cand in rules.get(name, []) if name else []:
+            group = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a not in axis_sizes for a in group):
+                continue
+            if any(a in used for a in group):
+                continue
+            size = math.prod(axis_sizes[a] for a in group)
+            if size > 1 and dim % size == 0:
+                assigned = group if len(group) > 1 else group[0]
+                used.update(group)
+                break
+        out.append(assigned)
+    # Trim trailing Nones for cleanliness.
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(shape, logical, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, mesh, rules))
+
+
+def tree_shardings(shapes_tree, logical_tree, mesh, rules=None):
+    """Map matching pytrees of shapes and ``Ax`` logical names -> shardings."""
+    return jax.tree.map(
+        lambda s, l: sharding_for(tuple(s.shape), l.names, mesh, rules),
+        shapes_tree, logical_tree)
+
+
+def tree_specs(shapes_tree, logical_tree, mesh, rules=None):
+    return jax.tree.map(
+        lambda s, l: spec_for(tuple(s.shape), l.names, mesh, rules),
+        shapes_tree, logical_tree)
+
+
+# ------------------------------------------------------------- ZeRO-1 ------
+def zero_spec(shape, base_spec: P, mesh) -> P:
+    """Shard one extra dim of an *elementwise-updated* tensor (optimizer
+    moments, gradient accumulators) over the data(+pod) axes — ZeRO-1.
+
+    The update math is elementwise, so ANY extra partitioning is valid;
+    GSPMD inserts the reduce-scatter (grads->moments) and all-gather
+    (updated params) automatically. Picks the first dim not already
+    sharded in ``base_spec`` whose size divides the combined data axes;
+    returns ``base_spec`` unchanged if none divides.
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    group = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    if not group:
+        return base_spec
+    dsize = math.prod(axis_sizes[a] for a in group)
+    if dsize <= 1:
+        return base_spec
+    spec = list(base_spec) + [None] * (len(shape) - len(base_spec))
+    for i, dim in enumerate(shape):
+        if spec[i] is None and dim % dsize == 0:
+            spec[i] = group if len(group) > 1 else group[0]
+            return P(*spec)
+    return base_spec
+
+
+def zero_shardings(shapes_tree, logical_tree, mesh, rules=None):
+    """NamedShardings for optimizer state under ZeRO-1 (param spec + one
+    data-sharded dim)."""
+    def one(s, l):
+        base = spec_for(tuple(s.shape), l.names, mesh, rules)
+        return NamedSharding(mesh, zero_spec(tuple(s.shape), base, mesh))
+    return jax.tree.map(one, shapes_tree, logical_tree)

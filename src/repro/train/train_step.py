@@ -1,0 +1,119 @@
+"""Training steps: microbatched gradient accumulation + compressed cross-pod
+reduction (the distributed-optimization layer on top of launch/steps.py).
+
+Three variants, all lowered by the dry-run:
+  * ``make_train_step`` (launch/steps.py) — plain fused step; XLA inserts
+    full-precision all-reduces from the shardings. Baseline.
+  * ``make_microbatched_train_step`` — splits the global batch into
+    ``n_micro`` sequential microbatches with an f32 gradient accumulator.
+    On real hardware this (a) caps activation memory and (b) staggers the
+    per-microbatch backward so XLA's latency-hiding scheduler overlaps the
+    reduce-scatter of microbatch i with the compute of microbatch i+1.
+  * ``make_compressed_train_step`` — shard_map *manual over the pod axis
+    only* (in-pod axes stay Auto/GSPMD). Gradients are reduced in-pod at
+    full precision by GSPMD, then all-reduced across pods in int8 with
+    error feedback (optim/compression.py). The wire cost of the slow axis
+    drops 4x vs f32 / 2x vs bf16.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import LB_COEF, Z_COEF, cross_entropy, make_loss_fn
+from repro.optim import adamw, compression
+
+
+def _split_micro(batch, n_micro):
+    """(B, ...) -> (n_micro, B/n_micro, ...) for every leaf."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_microbatched_train_step(cfg: ModelConfig, *, n_micro: int,
+                                 remat=True, moe_impl="capacity",
+                                 lr_kw: Optional[dict] = None,
+                                 unroll=False):
+    """Gradient accumulation over ``n_micro`` sequential microbatches."""
+    loss_fn = make_loss_fn(cfg, remat=remat, moe_impl=moe_impl,
+                           unroll=unroll)
+    lr_kw = lr_kw or {}
+
+    def train_step(params, opt_state, batch):
+        micro = _split_micro(batch, n_micro)
+
+        def body(carry, mb):
+            acc, loss_acc, ce_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss, ce_acc + metrics["ce"]), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (gsum, loss_sum, ce_sum), _ = jax.lax.scan(
+            body, (zeros, 0.0, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        lr = adamw.cosine_lr(opt_state.step, **lr_kw) if lr_kw else None
+        params, opt_state, om = adamw.update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {
+            "loss": loss_sum / n_micro, "ce": ce_sum / n_micro,
+            "load_balance": jnp.zeros(()), "router_z": jnp.zeros(()), **om}
+
+    return train_step
+
+
+def make_compressed_train_step(cfg: ModelConfig, mesh, *, pod_axis="pod",
+                               remat=True, moe_impl="capacity",
+                               lr_kw: Optional[dict] = None):
+    """Train step with int8 error-feedback cross-pod gradient all-reduce.
+
+    Signature: (params, opt_state, residual, batch) ->
+               (params', opt_state', residual', metrics).
+    Requires a mesh with a ``pod`` axis; params/opt replicated across pods,
+    batch split on the pod axis (its in-pod sharding stays GSPMD Auto).
+    """
+    assert pod_axis in mesh.axis_names, mesh.axis_names
+    loss_fn = make_loss_fn(cfg, remat=remat, moe_impl=moe_impl)
+    lr_kw = lr_kw or {}
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))[pod_axis]
+
+    def body(params, opt_state, residual, batch):
+        # Pod-local loss over the pod's slice of the global batch. GSPMD
+        # (auto axes) still partitions compute/grads within the pod.
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads, residual = compression.compressed_psum(
+            grads, residual, pod_axis)
+        lr = adamw.cosine_lr(opt_state.step, **lr_kw) if lr_kw else None
+        params, opt_state, om = adamw.update(grads, opt_state, params, lr=lr)
+        loss = jax.lax.pmean(loss, pod_axis)
+        ce = jax.lax.pmean(metrics["ce"], pod_axis)
+        return params, opt_state, residual, {
+            "loss": loss, "ce": ce,
+            "load_balance": metrics["load_balance"],
+            "router_z": metrics["router_z"], **om}
+
+    rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+
+    def train_step(params, opt_state, residual, batch):
+        wrapped = compression.wrap_pod_manual(
+            body, mesh,
+            in_specs=(rep(params), rep(opt_state), rep(residual),
+                      jax.tree.map(lambda _: P(pod_axis), batch)),
+            out_specs=(rep(params), rep(opt_state), rep(residual),
+                       {"loss": P(), "ce": P(), "load_balance": P(),
+                        "router_z": P(), "grad_norm": P(), "lr": P()}),
+            pod_axis=pod_axis)
+        return wrapped(params, opt_state, residual, batch)
+
+    return train_step

@@ -1,0 +1,176 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler detection,
+elastic mesh — the control plane over train_step.
+
+The loop is deliberately dumb-restartable: every piece of state is either
+(a) in the checkpoint (params, optimizer, compression residual, step) or
+(b) a pure function of the step counter (data pipeline). Killing the
+process at any point and calling ``Trainer.run`` again resumes exactly.
+
+Straggler mitigation on a single-controller container is *detection* +
+policy hooks: per-step wall times feed an EWMA; steps slower than
+``straggler_factor``× the EWMA fire ``on_straggler`` (production: swap the
+slow host out / re-shard; here: counted + logged, injectable in tests via
+``step_delay_hook``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.launch import steps as steps_mod
+from repro.models import transformer as tfm
+from repro.optim import adamw, compression
+from repro.sharding import rules
+from repro.train import train_step as ts_mod
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    n_micro: int = 1                  # >1 => microbatched accumulation
+    compress_pods: bool = False       # int8 cross-pod gradient compression
+    straggler_factor: float = 3.0
+    lr_kw: Optional[dict] = None
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data_cfg: DataConfig,
+                 tcfg: TrainerConfig, *, mesh=None,
+                 step_delay_hook: Optional[Callable[[int], float]] = None,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.mesh = mesh
+        self.pipe = SyntheticPipeline(data_cfg)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.step_delay_hook = step_delay_hook
+        self.on_straggler = on_straggler
+        self.straggler_steps: list = []
+        self._ewma = None
+
+        lr_kw = tcfg.lr_kw or dict(total=tcfg.total_steps,
+                                   warmup=max(2, tcfg.total_steps // 10))
+        if tcfg.compress_pods:
+            assert mesh is not None and "pod" in mesh.axis_names
+            self._step_fn = ts_mod.make_compressed_train_step(
+                cfg, mesh, lr_kw=lr_kw)
+        elif tcfg.n_micro > 1:
+            self._step_fn = ts_mod.make_microbatched_train_step(
+                cfg, n_micro=tcfg.n_micro, lr_kw=lr_kw)
+        else:
+            self._step_fn = steps_mod.make_train_step(cfg, lr_kw=lr_kw)
+        self._jit_step = None
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self):
+        params = tfm.init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        opt = adamw.init(params)
+        state = {"params": params, "opt": opt}
+        if self.tcfg.compress_pods:
+            state["residual"] = compression.compress_residual_init(params)
+        return state
+
+    def _shardings(self, state):
+        if self.mesh is None:
+            return None
+        pshapes, plog = tfm.param_structs(self.cfg)
+        psh = rules.tree_shardings(pshapes, plog, self.mesh)
+        oshapes, olog = adamw.state_structs(pshapes, plog)
+        osh = rules.tree_shardings(oshapes, olog, self.mesh)
+        sh = {"params": psh, "opt": osh}
+        if "residual" in state:
+            sh["residual"] = psh
+        return sh
+
+    def _batch_sharding(self):
+        if self.mesh is None:
+            return None
+        b, t = self.pipe.cfg.global_batch, self.pipe.cfg.seq_len
+        return {k: rules.sharding_for((b, t), ("batch", None), self.mesh)
+                for k in ("tokens", "labels")}
+
+    # -- the loop --------------------------------------------------------------
+    def run(self, *, max_steps: Optional[int] = None):
+        state = self.init_state()
+        start = 0
+        restored = self.ckpt.restore_latest(state)
+        if restored is not None:
+            start, state, extra = restored
+            print(f"[trainer] restored step {start} "
+                  f"(data resumes at batch {start})")
+        bsh = self._batch_sharding()
+        stop = min(self.tcfg.total_steps,
+                   start + max_steps if max_steps else self.tcfg.total_steps)
+        # resumed past the end: report a fresh eval step's metrics
+        metrics = {"loss": float("nan"), "ce": float("nan")}
+        if start >= stop:
+            batch = self.pipe.global_batch_array(start, bsh)
+            state, metrics = self._one_step(state, batch)
+            return state, metrics
+        for step in range(start, stop):
+            batch = self.pipe.global_batch_array(step, bsh)
+            t0 = time.time()
+            if self.step_delay_hook is not None:
+                time.sleep(self.step_delay_hook(step))
+            state, metrics = self._one_step(state, batch)
+            dt = time.time() - t0
+            self._straggler_check(step, dt)
+            if (step + 1) % self.tcfg.log_every == 0:
+                print(f"[trainer] step {step + 1} "
+                      f"loss={float(metrics['loss']):.4f} "
+                      f"ce={float(metrics['ce']):.4f} {dt*1e3:.0f}ms")
+            if (step + 1) % self.tcfg.ckpt_every == 0 or step + 1 == stop:
+                self.ckpt.save(step + 1, state,
+                               extra={"data_batch": step + 1})
+        return state, metrics
+
+    def _one_step(self, state, batch):
+        if self._jit_step is None:
+            if "residual" in state:
+                fn = lambda s, b: _pack3(self._step_fn(
+                    s["params"], s["opt"], s["residual"], b))
+            else:
+                fn = lambda s, b: _pack2(self._step_fn(
+                    s["params"], s["opt"], b))
+            self._jit_step = jax.jit(fn, donate_argnums=(0,))
+        return self._jit_step(state, batch)
+
+    def _straggler_check(self, step, dt):
+        if self._ewma is None:
+            self._ewma = dt          # first step: dominated by compile
+            self._compiled = False
+            return
+        if not getattr(self, "_compiled", True):
+            self._ewma = dt          # second step: first steady-state time
+            self._compiled = True
+            return
+        if dt > self.tcfg.straggler_factor * self._ewma and step > 2:
+            self.straggler_steps.append((step, dt))
+            if self.on_straggler is not None:
+                self.on_straggler(step, dt)
+            else:
+                print(f"[trainer] straggler: step {step} took {dt:.2f}s "
+                      f"(ewma {self._ewma:.2f}s)")
+        self._ewma = 0.9 * self._ewma + 0.1 * dt
+
+
+def _pack2(out):
+    params, opt, metrics = out
+    return {"params": params, "opt": opt}, metrics
+
+
+def _pack3(out):
+    params, opt, residual, metrics = out
+    return {"params": params, "opt": opt, "residual": residual}, metrics

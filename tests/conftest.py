@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA device-count flag here on purpose —
+smoke tests and benches must see the real single CPU device; only
+launch/dryrun.py (its own process) forces 512 placeholder devices."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

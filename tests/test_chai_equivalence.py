@@ -1,0 +1,140 @@
+"""CHAI decode-path correctness against plain MHA decode.
+
+The decisive invariants:
+  1. **k == H, identity membership** -> CHAI decode == MHA decode exactly
+     (every head is its own representative; nothing is pruned).
+  2. **Duplicated heads** (wq/wk rows copied) -> CHAI with those heads
+     clustered matches MHA to numerical tolerance, because the pruned
+     heads' scores were genuinely redundant — the paper's core claim.
+  3. CHAI-QKV ablation runs and differs (V sharing changes the output).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as chai_cache
+from repro.core import clustering
+from repro.launch import steps as steps_mod
+from repro.models import transformer as tfm
+
+
+def _mha_arch(n_heads=8):
+    cfg = reduced(get_config("musicgen-large"), n_heads=n_heads,
+                  d_model=64, vocab=128, n_layers=2)
+    return cfg.replace(frontend="none", dtype="float32")
+
+
+def _setup(cfg, rng, b=2, t=8, s=32):
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, t)),
+                       jnp.int32)
+    prefill = steps_mod.make_serve_prefill(cfg, b, s)
+    _, state = prefill(params, {"tokens": toks})
+    return params, toks, state
+
+
+def _identity_ctx(cfg, b):
+    """Every head its own cluster: h2c = reps = arange(H)."""
+    na, h = cfg.n_attn_layers, cfg.n_heads
+    ar = jnp.tile(jnp.arange(h, dtype=jnp.int32), (na, b, 1))
+    return {"h2c": ar, "reps": ar}
+
+
+def test_chai_equals_mha_with_identity_clusters(rng):
+    cfg = _mha_arch().with_chai(enabled=True,
+                                cluster_counts=(8, 8))   # k == H
+    b = 2
+    params, toks, state = _setup(cfg, rng, b=b)
+    ctx = _identity_ctx(cfg, b)
+
+    mha_step = steps_mod.make_serve_step(cfg, chai=False)
+    chai_step = steps_mod.make_serve_step(cfg, chai=True)
+    state_chai = chai_cache.compact_kv(dict(state), ctx, cfg)
+
+    nxt = jnp.asarray([5, 7], jnp.int32)
+    logits_mha, st_m = mha_step(params, {"tokens": nxt}, dict(state))
+    logits_chai, st_c = chai_step(params, {"tokens": nxt}, state_chai, ctx)
+    np.testing.assert_allclose(np.asarray(logits_mha),
+                               np.asarray(logits_chai), rtol=2e-4, atol=2e-4)
+    # multi-step agreement
+    for tok in ((1, 2), (3, 4)):
+        nxt = jnp.asarray(tok, jnp.int32)
+        logits_mha, st_m = mha_step(params, {"tokens": nxt}, st_m)
+        logits_chai, st_c = chai_step(params, {"tokens": nxt}, st_c, ctx)
+        np.testing.assert_allclose(np.asarray(logits_mha),
+                                   np.asarray(logits_chai),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_chai_exact_on_duplicated_heads(rng):
+    """Duplicate head 0's Q/K into heads 1..3: clustering those four heads
+    to one representative must reproduce MHA exactly (scores identical)."""
+    cfg = _mha_arch().with_chai(enabled=True, cluster_counts=(5, 5))
+    b = 2
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    # duplicate q/k projections of head 0 into heads 1-3, all layers
+    for nm in ("wq", "wk"):
+        w = params["attn"][nm]
+        for hdup in (1, 2, 3):
+            w = w.at[:, :, hdup].set(w[:, :, 0])
+        params["attn"][nm] = w
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, 8)),
+                       jnp.int32)
+    prefill = steps_mod.make_serve_prefill(cfg, b, 32)
+    _, state = prefill(params, {"tokens": toks})
+
+    # heads {0,1,2,3} -> cluster 0 (rep 0); heads 4..7 singleton clusters
+    na, h = cfg.n_attn_layers, cfg.n_heads
+    h2c = jnp.asarray([0, 0, 0, 0, 1, 2, 3, 4], jnp.int32)
+    reps = jnp.asarray([0, 4, 5, 6, 7], jnp.int32)
+    ctx = {"h2c": jnp.tile(h2c, (na, b, 1)),
+           "reps": jnp.tile(reps, (na, b, 1))}
+
+    mha_step = steps_mod.make_serve_step(cfg, chai=False)
+    chai_step = steps_mod.make_serve_step(cfg, chai=True)
+    state_chai = chai_cache.compact_kv(dict(state), ctx, cfg)
+    nxt = jnp.asarray([5, 7], jnp.int32)
+    lm, _ = mha_step(params, {"tokens": nxt}, dict(state))
+    lc, _ = chai_step(params, {"tokens": nxt}, state_chai, ctx)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(lc),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chai_qkv_ablation_shares_values(rng):
+    cfg = _mha_arch().with_chai(enabled=True, cluster_counts=(4, 4),
+                                share_values=True)
+    b = 2
+    params, toks, state = _setup(cfg, rng, b=b)
+    na, h = cfg.n_attn_layers, cfg.n_heads
+    h2c = jnp.tile(jnp.arange(h, dtype=jnp.int32) % 4, (na, b, 1))
+    reps = jnp.tile(jnp.arange(4, dtype=jnp.int32), (na, b, 1))
+    ctx = {"h2c": h2c, "reps": reps}
+    state_chai = chai_cache.compact_kv(dict(state), ctx, cfg)
+    assert "vg_chai" in state_chai and "vg" not in state_chai
+    chai_step = steps_mod.make_serve_step(cfg, chai=True)
+    logits, st = chai_step(params, {"tokens": jnp.asarray([5, 7])},
+                           state_chai, ctx)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_gqa_chai_decode_runs_and_matches_identity(rng):
+    """GQA arch with identity within-group clustering == plain decode."""
+    cfg = reduced(get_config("nemotron-4-15b"), n_heads=8, d_model=64,
+                  vocab=128, n_layers=2).replace(dtype="float32")
+    cfg = cfg.with_chai(enabled=True)
+    b = 2
+    params, toks, state = _setup(cfg, rng, b=b)
+    na, kv, qpk = cfg.n_attn_layers, cfg.n_kv_heads, cfg.q_per_kv
+    ar = jnp.tile(jnp.arange(qpk, dtype=jnp.int32), (na, b, kv, 1))
+    ctx = {"cluster_of": ar, "reps": ar}
+    mha_step = steps_mod.make_serve_step(cfg, chai=False)
+    chai_step = steps_mod.make_serve_step(cfg, chai=True)
+    nxt = jnp.asarray([5, 7], jnp.int32)
+    lm, _ = mha_step(params, {"tokens": nxt}, dict(state))
+    lc, _ = chai_step(params, {"tokens": nxt}, dict(state), ctx)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(lc),
+                               rtol=2e-4, atol=2e-4)

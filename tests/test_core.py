@@ -1,0 +1,176 @@
+"""CHAI core: K-Means, clustering, correlation, elbow, cache compaction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as chai_cache
+from repro.core import clustering, correlation, elbow
+from repro.core.kmeans import kmeans, representatives
+
+
+# ---------------------------------------------------------------- kmeans ----
+def test_kmeans_recovers_planted_clusters(rng):
+    """Three well-separated blobs -> three pure clusters."""
+    centers = np.array([[10.0, 0], [0, 10.0], [-10.0, -10.0]])
+    x = np.concatenate([c + 0.1 * rng.normal(size=(8, 2)) for c in centers])
+    assign, _, err = kmeans(jnp.asarray(x, jnp.float32), 3)
+    a = np.asarray(assign)
+    groups = [set(a[i * 8:(i + 1) * 8]) for i in range(3)]
+    assert all(len(g) == 1 for g in groups)
+    assert len(set.union(*groups)) == 3
+    assert float(err) < 1.0
+
+
+def test_kmeans_error_monotone_in_k(rng):
+    x = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    errs = [float(kmeans(x, k)[2]) for k in (1, 2, 4, 8, 16)]
+    assert all(errs[i] >= errs[i + 1] - 1e-4 for i in range(len(errs) - 1))
+    assert errs[-1] < 1e-4          # k == n -> ~zero error (f32 roundoff)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 24), f=st.integers(2, 10), k=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_kmeans_properties(n, f, k, seed):
+    """Property: assignments in range; every cluster's rep is a member."""
+    k = min(k, n)
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n, f)),
+                    jnp.float32)
+    assign, centers, err = kmeans(x, k)
+    a = np.asarray(assign)
+    assert a.min() >= 0 and a.max() < k
+    assert float(err) >= -1e-5
+    reps, valid = representatives(x, assign, centers, k)
+    r, v = np.asarray(reps), np.asarray(valid)
+    for c in range(k):
+        if v[c]:
+            assert a[r[c]] == c     # rep belongs to its own cluster
+
+
+# ----------------------------------------------------------- clustering ----
+def test_standardize_correlation_geometry(rng):
+    """|z_i - z_j|^2 == 2(1 - corr_ij) after standardization."""
+    x = jnp.asarray(rng.normal(size=(6, 40)), jnp.float32)
+    z = clustering.standardize(x)
+    corr = correlation.head_correlation(x)
+    d2 = jnp.sum(jnp.square(z[:, None] - z[None, :]), -1)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(2 * (1 - corr)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_identify_membership_mha_groups_duplicate_heads(rng):
+    """Heads with (noisy) duplicated score patterns land in one cluster."""
+    cfg = reduced(get_config("musicgen-large"), n_heads=8)   # MHA family
+    cfg = cfg.with_chai(enabled=True, cluster_counts=(2,) * cfg.n_attn_layers)
+    na, b, h, f = cfg.n_attn_layers, 2, cfg.n_heads, 32
+    base = rng.normal(size=(na, b, 2, f))                     # 2 patterns
+    pattern_of = np.array([0, 0, 0, 1, 1, 1, 0, 1])
+    scores = base[:, :, pattern_of] + 0.01 * rng.normal(size=(na, b, h, f))
+    ctx = clustering.identify_membership(jnp.asarray(scores, jnp.float32),
+                                         cfg)
+    h2c = np.asarray(ctx["h2c"])
+    for l in range(na):
+        for bb in range(b):
+            ids = h2c[l, bb]
+            assert (ids[pattern_of == 0] == ids[0]).all()
+            assert (ids[pattern_of == 1] == ids[3]).all()
+            assert ids[0] != ids[3]
+    # reps must point at heads inside their own cluster
+    reps = np.asarray(ctx["reps"])
+    for l in range(na):
+        for bb in range(b):
+            for c, rep in enumerate(reps[l, bb]):
+                assert h2c[l, bb, rep] == c
+
+
+def test_identify_membership_gqa_block_diagonal(rng):
+    """GQA: clustering stays within KV groups (rep K validity)."""
+    cfg = reduced(get_config("nemotron-4-15b"), n_heads=8)    # GQA family
+    assert not cfg.is_mha
+    cfg = cfg.with_chai(enabled=True)
+    na, b = cfg.n_attn_layers, 2
+    scores = rng.normal(size=(na, b, cfg.n_heads, 16))
+    ctx = clustering.identify_membership(jnp.asarray(scores, jnp.float32),
+                                         cfg)
+    assert ctx["cluster_of"].shape == (na, b, cfg.n_kv_heads, cfg.q_per_kv)
+    r_max = ctx["reps"].shape[-1]
+    assert np.asarray(ctx["cluster_of"]).max() < r_max
+    assert np.asarray(ctx["reps"]).max() < cfg.q_per_kv
+
+
+def test_membership_churn():
+    a = {"h2c": jnp.asarray([[0, 1, 2, 0]])}
+    b = {"h2c": jnp.asarray([[0, 1, 0, 0]])}
+    assert float(clustering.membership_churn(a, a)) == 0.0
+    assert float(clustering.membership_churn(a, b)) == pytest.approx(0.25)
+
+
+def test_shared_ctx_valid(rng):
+    for arch in ("musicgen-large", "gemma2-9b"):
+        cfg = reduced(get_config(arch)).with_chai(enabled=True)
+        ctx = clustering.shared_ctx(cfg)
+        key = "h2c" if cfg.is_mha else "cluster_of"
+        k_max, r_max = clustering.chai_widths(cfg)
+        width = k_max if cfg.is_mha else r_max
+        assert np.asarray(ctx[key]).max() < width
+        # every cluster id referenced by reps is a valid head index
+        assert np.asarray(ctx["reps"]).max() < (
+            cfg.n_heads if cfg.is_mha else cfg.q_per_kv)
+
+
+# ---------------------------------------------------------------- elbow ----
+def test_select_k_plateau():
+    ks = [1, 2, 4, 8, 16]
+    errors = [100.0, 30.0, 10.0, 9.5, 9.4]   # plateaus after 4
+    assert elbow.select_k(errors, ks) == 4
+
+
+def test_offline_cluster_counts_planted(rng):
+    """Features with exactly 3 planted patterns -> k close to 3."""
+    h, f = 16, 64
+    base = rng.normal(size=(3, f))
+    feats = base[rng.integers(0, 3, size=h)] + 0.01 * rng.normal(size=(h, f))
+    feats = clustering.standardize(jnp.asarray(feats, jnp.float32))
+    (k,) = elbow.offline_cluster_counts([feats], h)
+    assert 2 <= k <= 6
+
+
+# ---------------------------------------------------------------- cache ----
+def test_compact_kv_gathers_rep_rows(rng):
+    cfg = reduced(get_config("musicgen-large"), n_heads=8)
+    cfg = cfg.with_chai(enabled=True, cluster_counts=(3,) * cfg.n_attn_layers)
+    b, s = 2, 16
+    from repro.models.transformer import init_decode_state
+    state = init_decode_state(cfg, b, s)
+    state["kg"] = jnp.asarray(
+        rng.normal(size=state["kg"].shape), state["kg"].dtype)
+    k_max, _ = clustering.chai_widths(cfg)
+    reps = jnp.asarray(
+        rng.integers(0, cfg.n_heads, size=(cfg.n_attn_layers, b, k_max)),
+        jnp.int32)
+    new = chai_cache.compact_kv(state, {"reps": reps}, cfg)
+    assert "kg" not in new and "kg_chai" in new
+    assert new["kg_chai"].shape == (cfg.n_global_layers, b, k_max, s,
+                                    cfg.head_dim)
+    kg, out, r = (np.asarray(state["kg"]), np.asarray(new["kg_chai"]),
+                  np.asarray(reps))
+    for l in range(cfg.n_global_layers):
+        for bb in range(b):
+            for c in range(k_max):
+                np.testing.assert_array_equal(out[l, bb, c],
+                                              kg[l, bb, r[l, bb, c]])
+
+
+def test_kv_cache_bytes_saving():
+    """Full-config LLaMA-7B: CHAI K-cache saving in the paper's ballpark
+    (K rows drop from H to k_max; V unchanged)."""
+    cfg = get_config("chai-llama-7b")
+    full = chai_cache.kv_cache_bytes(cfg, 1, 2048, chai=False)
+    ch = chai_cache.kv_cache_bytes(cfg, 1, 2048, chai=True)
+    saving = 1 - ch / full
+    assert 0.10 < saving < 0.50      # paper: up to 21.4%
+    assert full == 2 * 32 * 2048 * 128 * 32 * 2  # 2(K+V) H S hd L bytes

@@ -1,0 +1,156 @@
+"""Perf-iteration features: EP MoE, int8 KV cache, ZeRO sharding rules.
+
+The expert-parallel MoE and the int8 cache are correctness-tested here on
+CPU (single device / small meshes); their roofline effect is measured by
+the dry-run (EXPERIMENTS.md §Perf).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as chai_cache
+from repro.launch import steps as steps_mod
+from repro.models import moe, transformer as tfm
+from repro.sharding import rules
+from repro.sharding.context import current_ctx, sharding_ctx
+
+
+# ------------------------------------------------------------- EP MoE ----
+def _moe_cfg():
+    cfg = reduced(get_config("deepseek-moe-16b"), d_model=32, n_experts=8,
+                  top_k=2, moe_d_ff=16)
+    return cfg.replace(dtype="float32", capacity_factor=4.0)
+
+
+def _moe_params(cfg, rng):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    mk = lambda *s: jnp.asarray(rng.normal(size=s) * 0.1, jnp.float32)
+    p = {"router": mk(d, e), "w_gate": mk(e, d, f), "w_up": mk(e, d, f),
+         "w_down": mk(e, f, d)}
+    if cfg.n_shared_experts:
+        sf = cfg.n_shared_experts * f
+        p.update(shared_gate=mk(d, sf), shared_up=mk(d, sf),
+                 shared_down=mk(sf, d))
+    return p
+
+
+def test_ep_moe_matches_reference_on_1d_mesh(rng):
+    """Single-device mesh: all_to_all over size-1 axes == identity; the
+    EP path must equal the capacity reference exactly."""
+    cfg = _moe_cfg()
+    p = _moe_params(cfg, rng)
+    x = jnp.asarray(rng.normal(size=(4, 8, cfg.d_model)), jnp.float32)
+    y_ref = moe.moe_ffn(x, p, cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with sharding_ctx(mesh, batch_axes=("data",)) as ctx:
+        y_ep = jax.jit(lambda x, p: moe.moe_ffn_ep(x, p, cfg, ctx))(x, p)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ep_moe_falls_back_on_indivisible(rng):
+    """Odd token counts fall back to the capacity impl, not crash."""
+    cfg = _moe_cfg()
+    p = _moe_params(cfg, rng)
+    x = jnp.asarray(rng.normal(size=(3, 7, cfg.d_model)), jnp.float32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with sharding_ctx(mesh, batch_axes=("data",)) as ctx:
+        y = moe.moe_ffn_ep(x, p, cfg, ctx)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(moe.moe_ffn(x, p,
+                                                                     cfg)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_forward_fullseq_ep_without_ctx_is_reference(rng):
+    """moe_impl='ep' with no active ctx must equal the capacity impl."""
+    cfg = reduced(get_config("qwen3-moe-30b-a3b")).replace(
+        dtype="float32", capacity_factor=4.0)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    assert current_ctx() is None
+    l1, _, _ = tfm.forward_fullseq(params, cfg, toks, moe_impl="capacity")
+    l2, _, _ = tfm.forward_fullseq(params, cfg, toks, moe_impl="ep")
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ int8 KV ----
+def test_int8_kv_quant_roundtrip(rng):
+    x = jnp.asarray(rng.normal(size=(3, 4, 16)), jnp.float32)
+    q, s = chai_cache.quant_rows(x)
+    back = chai_cache.dequant_rows(q, s)
+    err = np.abs(np.asarray(back - x))
+    # max error <= half a quantization step per row
+    assert (err <= np.asarray(s)[..., None] / 2 + 1e-6).all()
+
+
+def test_int8_kv_decode_tracks_f32(rng):
+    cfg = reduced(get_config("chai-llama-7b"), n_layers=2, d_model=64,
+                  n_heads=8, vocab=128).replace(dtype="float32")
+    cfg8 = cfg.replace(kv_cache_dtype="int8")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    toks = jnp.asarray(rng.integers(0, 128, (2, 8)), jnp.int32)
+
+    outs = {}
+    for c in (cfg, cfg8):
+        pre = steps_mod.make_serve_prefill(c, 2, 32)
+        logits, state = pre(params, {"tokens": toks})
+        step = steps_mod.make_serve_step(c, chai=False)
+        for t in ((3, 4), (5, 6)):
+            logits, state = step(params, {"tokens": jnp.asarray(t)}, state)
+        outs[c.kv_cache_dtype] = logits
+    rel = float(jnp.abs(outs["int8"] - outs[""]).max()
+                / jnp.abs(outs[""]).max())
+    assert rel < 0.05, rel
+
+
+def test_int8_kv_compact_carries_scales(rng):
+    cfg = reduced(get_config("musicgen-large"), n_heads=8).replace(
+        dtype="float32", kv_cache_dtype="int8", frontend="none")
+    cfg = cfg.with_chai(enabled=True, cluster_counts=(3,) * cfg.n_attn_layers)
+    b, s = 2, 16
+    state = tfm.init_decode_state(cfg, b, s)
+    assert state["kg"].dtype == jnp.int8 and "kg_scale" in state
+    reps = jnp.zeros((cfg.n_attn_layers, b, 3), jnp.int32)
+    new = chai_cache.compact_kv(state, {"reps": reps}, cfg)
+    assert "kg_chai_scale" in new
+    assert new["kg_chai"].dtype == jnp.int8
+    assert new["kg_chai_scale"].shape == (cfg.n_global_layers, b, 3, s)
+
+
+def test_int8_kv_cache_bytes_halved():
+    cfg = get_config("chai-llama-7b")
+    full = chai_cache.kv_cache_bytes(cfg, 1, 2048)
+    i8 = chai_cache.kv_cache_bytes(cfg.replace(kv_cache_dtype="int8"),
+                                   1, 2048)
+    assert 0.48 < i8 / full < 0.55      # ~2x minus scale overhead
+
+
+# ---------------------------------------------------------------- ZeRO ----
+def test_zero_spec_adds_data_axis():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    # data axis size 1 -> unchanged
+    assert rules.zero_spec((8, 4), P(None, None), mesh) == P(None, None)
+
+
+def test_zero_spec_divisibility(rng):
+    """zero_spec never shards an indivisible dim (property over shapes)."""
+    import math
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    mesh = FakeMesh()
+    for shape in [(48, 8, 768), (34, 64), (7, 3), (256,), (1, 16)]:
+        spec = rules.zero_spec(shape, P(*([None] * len(shape))), mesh)
+        for dim, s in zip(shape, tuple(spec) + (None,) * 9):
+            if s is not None:
+                size = 16 if isinstance(s, str) else math.prod(
+                    [16 for _ in s])
+                assert dim % size == 0

@@ -1,0 +1,78 @@
+"""Policy layer (paper Tables 1-4, Figs 1/14 comparisons)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import POLICIES, apply_policy
+
+
+def _qkv(rng, b=2, t=16, h=8, hd=16):
+    mk = lambda: jnp.asarray(rng.normal(size=(b, t, h, hd)), jnp.float32)
+    return mk(), mk(), mk()
+
+
+def test_all_policies_run_and_shape(rng):
+    q, k, v = _qkv(rng)
+    for pol in POLICIES:
+        kw = dict(n_clusters=4)
+        if pol == "chai-static":
+            kw.update(h2c_static=jnp.arange(8) % 4,
+                      reps_static=jnp.arange(4))
+        out = apply_policy(pol, q, k, v, **kw)
+        assert out.out.shape == q.shape, pol
+        assert bool(jnp.isfinite(out.out).all()), pol
+        assert float(out.score_flops) > 0, pol
+
+
+def test_chai_with_h_clusters_equals_mha(rng):
+    """k == H: clustering is a permutation; output == MHA exactly."""
+    q, k, v = _qkv(rng, h=4)
+    mha = apply_policy("mha", q, k, v)
+    chai = apply_policy("chai", q, k, v, n_clusters=4)
+    np.testing.assert_allclose(np.asarray(chai.out), np.asarray(mha.out),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chai_exact_on_duplicated_heads(rng):
+    """Heads sharing identical Q,K cluster together losslessly."""
+    b, t, h, hd = 2, 16, 8, 16
+    q, k, v = _qkv(rng, b=b, t=t, h=h, hd=hd)
+    # heads 0-3 identical, 4-7 identical -> 2 true clusters
+    q = q.at[:, :, 1:4].set(q[:, :, :1])
+    k = k.at[:, :, 1:4].set(k[:, :, :1])
+    q = q.at[:, :, 5:].set(q[:, :, 4:5])
+    k = k.at[:, :, 5:].set(k[:, :, 4:5])
+    mha = apply_policy("mha", q, k, v)
+    chai = apply_policy("chai", q, k, v, n_clusters=2)
+    np.testing.assert_allclose(np.asarray(chai.out), np.asarray(mha.out),
+                               rtol=1e-4, atol=1e-4)
+    assert float(chai.score_flops) < float(mha.score_flops)
+
+
+def test_flops_ordering(rng):
+    """CHAI with fewer clusters does fewer score flops; DejaVu at sparsity
+    s saves s of head flops."""
+    q, k, v = _qkv(rng)
+    f_mha = float(apply_policy("mha", q, k, v).score_flops)
+    f4 = float(apply_policy("chai", q, k, v, n_clusters=4).score_flops)
+    f2 = float(apply_policy("chai", q, k, v, n_clusters=2).score_flops)
+    assert f2 < f4 < f_mha
+    f_dv = float(apply_policy("dejavu", q, k, v, sparsity=0.5).score_flops)
+    assert f_dv == pytest.approx(0.5 * f_mha)
+
+
+def test_chai_qkv_differs_from_chai(rng):
+    """Sharing V (Table 4 ablation) changes the output (accuracy cost)."""
+    q, k, v = _qkv(rng)
+    a = apply_policy("chai", q, k, v, n_clusters=3)
+    b = apply_policy("chai-qkv", q, k, v, n_clusters=3)
+    assert not np.allclose(np.asarray(a.out), np.asarray(b.out))
+
+
+def test_spatten_masks_tokens(rng):
+    q, k, v = _qkv(rng)
+    out = apply_policy("spatten", q, k, v, token_keep=0.5, sparsity=0.25)
+    kept = np.asarray(out.info["kept_tokens"])
+    assert kept.sum(axis=-1).max() <= 8   # 50% of 16

@@ -1,0 +1,57 @@
+"""Roofline derivation: HLO collective parsing + analytic model flops."""
+import pytest
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch import roofline as rl
+
+HLO = """
+ENTRY %main {
+  %ar = bf16[256,1024]{1,0} all-reduce(bf16[256,1024]{1,0} %x), replica_groups={}
+  %ag = f32[512,64]{1,0} all-gather(f32[256,64]{1,0} %y), dimensions={0}
+  %rs.1 = f32[128]{0} reduce-scatter(f32[256]{0} %z), dimensions={0}
+  %cp = u8[100]{0} collective-permute(u8[100]{0} %w)
+  %a2a = bf16[16,16]{1,0} all-to-all(bf16[16,16]{1,0} %v), dimensions={0}
+  %ags = (f32[8]{0}, f32[16]{0}) all-gather-start(f32[8]{0} %q), dimensions={0}
+  %agd = f32[16]{0} all-gather-done((f32[8]{0}, f32[16]{0}) %ags)
+  %dot = f32[4,4]{1,0} dot(f32[4,8]{1,0} %a, f32[8,4]{1,0} %b)
+}
+"""
+
+
+def test_collective_bytes_parses_kinds():
+    total, kinds, n = rl.collective_bytes(HLO)
+    assert kinds["all-reduce"] == 256 * 1024 * 2
+    assert kinds["all-gather"] == 512 * 64 * 4 + 16 * 4 + 8 * 4
+    assert kinds["reduce-scatter"] == 256 * 4
+    assert kinds["collective-permute"] == 100
+    assert kinds["all-to-all"] == 16 * 16 * 2
+    assert n == 6                       # -done not double counted
+    assert total == sum(kinds.values())
+
+
+def test_roofline_bottleneck():
+    r = rl.Roofline(flops_per_dev=197e12, bytes_per_dev=1.0,
+                    coll_bytes_per_dev=1.0, coll_breakdown={},
+                    n_collectives=0)
+    assert r.bottleneck == "compute"
+    assert r.t_compute == pytest.approx(1.0)
+    r2 = rl.Roofline(1.0, 819e9, 1.0, {}, 0)
+    assert r2.bottleneck == "memory"
+    r3 = rl.Roofline(1.0, 1.0, 50e9, {}, 0)
+    assert r3.bottleneck == "collective"
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("chai-llama-7b")
+    tr = rl.model_flops(cfg, SHAPES["train_4k"])
+    de = rl.model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.param_count()
+    assert tr == pytest.approx(6 * n * 4096 * 256)
+    assert de == pytest.approx(2 * n * 128)
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()
+    tr = rl.model_flops(cfg, SHAPES["train_4k"])
+    assert tr == pytest.approx(6 * cfg.active_param_count() * 4096 * 256)

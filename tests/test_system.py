@@ -1,0 +1,108 @@
+"""System-level test: full CHAI pipeline — offline elbow -> serve with the
+engine -> fidelity of CHAI vs MHA generations on a *trained* tiny model.
+
+This is the CPU-scale analogue of the paper's accuracy tables: after
+training a small LM on the synthetic Markov corpus, CHAI decode must track
+MHA decode closely (greedy tokens mostly equal), while random head
+clustering (Fig 1 baseline) degrades more.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core import clustering
+from repro.core.elbow import offline_cluster_counts
+from repro.data.pipeline import DataConfig, calibration_batches
+from repro.models import transformer as tfm
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    cfg = reduced(get_config("chai-llama-7b"), n_layers=2, d_model=64,
+                  n_heads=8, d_ff=128, vocab=128).replace(dtype="float32")
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    tr = Trainer(cfg, data, TrainerConfig(
+        total_steps=60, ckpt_every=1000, log_every=1000,
+        ckpt_dir=str(tmp_path_factory.mktemp("ck")),
+        lr_kw=dict(peak=3e-3, warmup=6, total=60)))
+    state, metrics = tr.run()
+    assert float(metrics["loss"]) < 4.0   # well under ln(128)=4.85
+    return cfg, state["params"], tr.pipe
+
+
+def _greedy(cfg, params, pipe, *, use_chai, n_req=4, max_new=16):
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(batch_slots=2, max_seq=128,
+                                     use_chai=use_chai))
+    for i in range(n_req):
+        prompt = pipe.batch(100 + i)["tokens"][0, :24]
+        eng.submit(prompt, max_new_tokens=max_new, uid=i)
+    return {r.uid: r.generated for r in eng.run()}
+
+
+def test_offline_elbow_on_real_activations(trained):
+    """Offline phase end-to-end: collect per-head scores on calibration
+    data, elbow-select k per layer."""
+    cfg, params, _ = trained
+    feats = []
+    for toks in calibration_batches(cfg.vocab_size, 32, n_samples=8):
+        toks = jnp.asarray(toks)
+        # per-head feature: accumulated attention of a decode step, via the
+        # warmup score-buffer path (prefill then one decode)
+        state = tfm.init_decode_state(cfg, toks.shape[0], 64)
+        from repro.core.cache import add_score_buffer, pop_score_buffer
+        _, state, _ = tfm.forward_fullseq(params, cfg, toks, state=state)
+        state = add_score_buffer(state, cfg, toks.shape[0])
+        _, state = tfm.decode_step(params, cfg, toks[:, -1], state)
+        state, scores = pop_score_buffer(state)   # (nA, B, H, Wf)
+        feats.append(np.asarray(scores).mean(axis=1))   # avg over batch
+    per_layer = np.mean(feats, axis=0)            # (nA, H, Wf)
+    ks = offline_cluster_counts(
+        [clustering.standardize(jnp.asarray(f)) for f in per_layer],
+        cfg.n_heads)
+    assert len(ks) == cfg.n_attn_layers
+    assert all(1 <= k <= cfg.n_heads for k in ks)
+
+
+def test_chai_tracks_mha_generations(trained):
+    cfg, params, pipe = trained
+    cfg_chai = cfg.with_chai(enabled=True, cluster_counts=(6, 6))
+    mha = _greedy(cfg, params, pipe, use_chai=False)
+    chai = _greedy(cfg_chai, params, pipe, use_chai=True)
+    agree = np.mean([
+        np.mean(np.asarray(mha[u]) == np.asarray(chai[u])) for u in mha])
+    # paper: <=3.2% accuracy deviation; tiny-model greedy-token proxy
+    assert agree > 0.7, agree
+
+
+def test_chai_beats_random_clustering(trained):
+    """CHAI (correlation clustering) should track MHA at least as well as
+    round-robin membership with the same k (paper Fig 1 baselines)."""
+    cfg, params, pipe = trained
+    mha = _greedy(cfg, params, pipe, use_chai=False)
+
+    cfg_chai = cfg.with_chai(enabled=True, cluster_counts=(4, 4))
+    chai = _greedy(cfg_chai, params, pipe, use_chai=True)
+
+    # random baseline: round-robin shared_ctx (ignores activations)
+    eng = ServingEngine(cfg_chai, params,
+                        EngineConfig(batch_slots=2, max_seq=128))
+    rand_ctx = clustering.shared_ctx(cfg_chai)
+    rand_ctx = jax.tree.map(
+        lambda a: jnp.repeat(a[:, None], 2, axis=1), rand_ctx)
+    eng._identify = lambda sc: rand_ctx
+    for i in range(4):
+        prompt = pipe.batch(100 + i)["tokens"][0, :24]
+        eng.submit(prompt, max_new_tokens=16, uid=i)
+    rand = {r.uid: r.generated for r in eng.run()}
+
+    def score(gen):
+        return np.mean([np.mean(np.asarray(mha[u]) == np.asarray(gen[u]))
+                        for u in mha])
+
+    assert score(chai) >= score(rand) - 0.05
