@@ -30,9 +30,16 @@ import jax
 import numpy as np
 
 
+def _flatten_with_path(tree):
+    try:
+        return jax.tree.flatten_with_path(tree)
+    except AttributeError:              # older jax: tree_util spelling
+        return jax.tree_util.tree_flatten_with_path(tree)
+
+
 def _leaf_paths(tree):
     """[(path-string, leaf)] with '/'-joined dict/tuple keys."""
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = _flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         keys = []

@@ -1,0 +1,74 @@
+"""jax API-surface compatibility shims.
+
+The codebase targets recent jax; pinned container images may lag by a few
+releases. Every shim resolves the new-style API when present and falls
+back to the older spelling otherwise, so the same source runs on both.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                    # jax >= 0.5 top-level alias
+    _shard_map = jax.shard_map
+except AttributeError:                  # older: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None):
+    """shard_map accepting the new-style kwargs on every jax version.
+
+    ``axis_names`` (manual axes; the rest stay Auto) maps to the legacy
+    ``auto`` complement set; ``check_vma`` maps to legacy ``check_rep``.
+    """
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if "check_vma" in _SM_PARAMS:       # new API
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+    else:                               # legacy experimental API
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        if axis_names is not None:
+            kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, **kw)
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """jax.make_mesh with explicit-Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes),
+                             devices=devices)
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes, devices=devices)
+    except AttributeError:      # pre-0.4.35: no jax.make_mesh at all
+        from jax.sharding import Mesh
+        import numpy as _np
+        devs = devices if devices is not None else jax.devices()
+        return Mesh(_np.asarray(devs).reshape(shape), axes)
+
+
+@jax.custom_jvp
+def opt_barrier(x):
+    """``lax.optimization_barrier`` that is transparent to autodiff.
+
+    Older jax releases ship no differentiation rule for the barrier
+    primitive; training paths that barrier activations (rms_norm, rwkv
+    mixes) would fail to trace under grad. The custom JVP keeps the
+    barrier in the primal computation and passes tangents straight
+    through (the barrier is semantically the identity).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@opt_barrier.defjvp
+def _opt_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jax.lax.optimization_barrier(x), t

@@ -1,9 +1,20 @@
-"""CHAI KV-cache layouts: full (MHA warmup) and clustered (steady state).
+"""CHAI KV-cache layouts: full (MHA warmup), clustered (steady state), and
+the *unified per-slot* layout used by the continuous-batching engine.
 
 ``compact_kv`` is the paper's "remove the Key tokens associated [with pruned
 heads]" step (§3.5): after membership identification, the dense K cache is
 gathered down to representative rows. Run it as a donated jit so the full
 cache's buffer is released on device.
+
+The unified layout (``unified_state_structs``) keeps the dense K/V buffers
+(``kg``/``vg``) and the clustered buffers (``kg_chai``, plus scales /
+``vg_chai`` variants) resident side by side, with a per-slot ``phase``
+vector. Each batch slot independently walks PREFILL -> WARMUP -> CLUSTER ->
+STEADY: ``insert_slot`` writes a freshly prefilled request into one slot,
+``compact_kv_slot`` gathers that slot's representative K rows into the
+clustered cache (donated slot-indexed gather), and the mixed-phase decode
+step commits each attention path's cache writes under a per-slot write
+mask (mask-and-select inside one jit; see models/transformer.py).
 """
 from __future__ import annotations
 
@@ -14,6 +25,15 @@ from repro.configs.base import ModelConfig
 from repro.core.clustering import chai_widths
 from repro.models.transformer import decode_state_structs
 from repro.sharding.rules import Ax
+
+# Per-slot lifecycle phases (paper Fig 10). PREFILL and CLUSTER are
+# transient (they happen synchronously inside a host-driven jit call); the
+# device-resident ``phase`` vector only ever holds FREE / WARMUP / STEADY.
+PHASE_FREE = 0
+PHASE_PREFILL = 1
+PHASE_WARMUP = 2
+PHASE_CLUSTER = 3
+PHASE_STEADY = 4
 
 
 def quant_rows(x):
@@ -110,6 +130,129 @@ def compact_kv(state, chai_ctx, cfg: ModelConfig):
         new_state.pop("vg")
         new_state["vg_chai"] = vg_chai
     return new_state
+
+
+# ---------------------------------------------------------------------------
+# Unified per-slot layout (continuous batching)
+# ---------------------------------------------------------------------------
+
+def unified_state_structs(cfg: ModelConfig, batch: int, max_seq: int, *,
+                          chai: bool = True):
+    """Decode-state structs for the continuous-batching engine.
+
+    Dense (``kg``/``vg``) and clustered (``kg_chai``) caches are BOTH
+    resident so warmup and steady slots coexist in one batch; ``phase``
+    tracks each slot's lifecycle stage and ``chai_scores`` accumulates
+    warmup clustering features per slot.
+    """
+    shapes, logical = decode_state_structs(cfg, batch, max_seq)
+    shapes, logical = dict(shapes), dict(logical)
+    shapes["phase"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    logical["phase"] = Ax("batch")
+    if not (chai and cfg.chai.enabled and cfg.k_max > 0):
+        return shapes, logical
+    wf = min(cfg.chai.feature_window, max_seq)
+    shapes["chai_scores"] = jax.ShapeDtypeStruct(
+        (cfg.n_attn_layers, batch, cfg.n_heads, wf), jnp.float32)
+    logical["chai_scores"] = Ax("layers", "batch", "heads", None)
+    if cfg.is_mha and "kg" in shapes:
+        k_max, _ = chai_widths(cfg)
+        dt = shapes["kg"].dtype
+        ng, b, _, s, hd = shapes["kg"].shape
+        shapes["kg_chai"] = jax.ShapeDtypeStruct((ng, b, k_max, s, hd), dt)
+        logical["kg_chai"] = Ax("layers", "batch", "clusters", "seq",
+                                "head_dim")
+        if cfg.kv_cache_dtype == "int8":
+            shapes["kg_chai_scale"] = jax.ShapeDtypeStruct(
+                (ng, b, k_max, s), jnp.float32)
+            logical["kg_chai_scale"] = Ax("layers", "batch", "clusters",
+                                          "seq")
+        if cfg.chai.share_values:
+            shapes["vg_chai"] = jax.ShapeDtypeStruct((ng, b, k_max, s, hd),
+                                                     dt)
+            logical["vg_chai"] = Ax("layers", "batch", "clusters", "seq",
+                                    "head_dim")
+    return shapes, logical
+
+
+def init_unified_state(cfg: ModelConfig, batch: int, max_seq: int, *,
+                       chai: bool = True):
+    shapes, _ = unified_state_structs(cfg, batch, max_seq, chai=chai)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def insert_slot(state, mini, slot, *, phase=PHASE_WARMUP):
+    """Write a freshly prefilled batch=1 decode state into batch slot
+    ``slot`` of a unified state and reset the slot's CHAI bookkeeping.
+    Donate ``state`` when jitting (in-place slot update on device).
+    """
+    state = dict(state)
+    for k, v in mini.items():
+        axis = 0 if state[k].ndim == 1 else 1
+        state[k] = jax.lax.dynamic_update_index_in_dim(
+            state[k], v.astype(state[k].dtype), slot, axis)
+    if "chai_scores" in state:
+        nA, _, h, wf = state["chai_scores"].shape
+        state["chai_scores"] = jax.lax.dynamic_update_index_in_dim(
+            state["chai_scores"], jnp.zeros((nA, 1, h, wf), jnp.float32),
+            slot, 1)
+    state["phase"] = state["phase"].at[slot].set(phase)
+    return state
+
+
+def compact_kv_slot(state, slot_ctx, cfg: ModelConfig, slot):
+    """Per-slot compaction (unified layout): gather ONE batch slot's
+    representative K rows from the dense cache into the clustered cache
+    and advance that slot's phase to STEADY.
+
+    ``slot_ctx``: batch-free ctx for this request (reps (nA, k)). Donate
+    ``state`` when jitting — the gather updates the clustered buffers in
+    place; the dense buffers stay resident for the other slots.
+    """
+    state = dict(state)
+    if cfg.is_mha and cfg.chai.enabled and "kg_chai" in state:
+        reps = slot_ctx["reps"]                           # (nA, k)
+
+        def gather(dense, clustered, tail_dims):
+            row = jax.lax.dynamic_index_in_dim(dense, slot, 1,
+                                               keepdims=False)
+            idx = reps.reshape(reps.shape + (1,) * tail_dims)
+            g = jnp.take_along_axis(row, idx, axis=1)
+            return jax.lax.dynamic_update_index_in_dim(clustered, g, slot, 1)
+
+        # All-global MHA archs: attention layer i == global layer i.
+        state["kg_chai"] = gather(state["kg"], state["kg_chai"], 2)
+        if cfg.kv_cache_dtype == "int8":
+            state["kg_chai_scale"] = gather(state["kg_scale"],
+                                            state["kg_chai_scale"], 1)
+        if cfg.chai.share_values:
+            state["vg_chai"] = gather(state["vg"], state["vg_chai"], 2)
+    state["phase"] = state["phase"].at[slot].set(PHASE_STEADY)
+    return state
+
+
+def reset_slot(state, slot):
+    """Retire a slot: mark FREE and rewind its write position."""
+    state = dict(state)
+    state["phase"] = state["phase"].at[slot].set(PHASE_FREE)
+    state["pos"] = state["pos"].at[slot].set(0)
+    return state
+
+
+def unified_kv_bytes(cfg: ModelConfig, batch: int, seq: int, *,
+                     chai: bool = True):
+    """Resident KV bytes of the continuous engine's unified layout.
+
+    Unlike the analytic ``kv_cache_bytes`` (cohort steady state: the
+    dense cache is freed after compaction), the unified layout keeps
+    dense AND clustered buffers allocated — summed exactly from the
+    layout's own structs."""
+    import numpy as np
+    shapes, _ = unified_state_structs(cfg, batch, seq, chai=chai)
+    kv_keys = ("kg", "vg", "kg_scale", "vg_scale", "kl", "vl",
+               "kg_chai", "kg_chai_scale", "vg_chai")
+    return int(sum(np.prod(s.shape) * s.dtype.itemsize
+                   for k, s in shapes.items() if k in kv_keys))
 
 
 def kv_cache_bytes(cfg: ModelConfig, batch: int, seq: int, *,

@@ -32,16 +32,23 @@ def _qk_norm(x, scale, cfg):
     return rms_norm(x, scale, cfg.norm_eps) if cfg.qk_norm else x
 
 
-def chai_decode_attention(xn, p, cfg, state, idxs, chai_ctx, *, local):
-    """xn: (B, d) normed hidden. Returns (out (B, H, hd), new_state)."""
+def chai_decode_attention(xn, p, cfg, state, idxs, chai_ctx, *, local,
+                          write_mask=None):
+    """xn: (B, d) normed hidden. Returns (out (B, H, hd), new_state).
+
+    ``write_mask`` (B,) bool: cache rows are committed only for masked
+    slots (the mixed-phase continuous step runs this path alongside the
+    plain MHA path on one batch)."""
     if cfg.is_mha and not local:
-        return _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx)
+        return _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx,
+                                write_mask)
     if not cfg.is_mha:
         return _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx,
-                                local=local)
+                                local=local, write_mask=write_mask)
     # MHA arch with a local layer (none of the assigned archs hit this):
     from repro.models.transformer import _plain_decode_attention
-    return _plain_decode_attention(xn, p, cfg, state, idxs, local=local)
+    return _plain_decode_attention(xn, p, cfg, state, idxs, local=local,
+                                   write_mask=write_mask)
 
 
 def _layer_ctx(chai_ctx, attn_idx):
@@ -51,9 +58,11 @@ def _layer_ctx(chai_ctx, attn_idx):
 
 
 # ---------------------------------------------------------------- MHA ------
-def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx):
-    from repro.models.transformer import tree_index, tree_update
+def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
+    from repro.models.transformer import _masked_rows, tree_index, \
+        tree_update
     b, d = xn.shape
+    ar = jnp.arange(b)
     hd, h = cfg.head_dim, cfg.n_heads
     pos = state["pos"]
     ctx = _layer_ctx(chai_ctx, idxs["attn"])
@@ -91,12 +100,16 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx):
     kc = tree_index(state["kg_chai"], idxs["global"])   # (B, k, S, hd)
     if int8:
         kq, ks = quant_rows(k_rep)
-        kc = kc.at[jnp.arange(b), :, pos, :].set(kq)
+        kc = kc.at[ar, :, pos, :].set(
+            _masked_rows(write_mask, kq, kc[ar, :, pos, :]))
         ksc = tree_index(state["kg_chai_scale"], idxs["global"])
-        ksc = ksc.at[jnp.arange(b), :, pos].set(ks)
+        ksc = ksc.at[ar, :, pos].set(
+            _masked_rows(write_mask, ks, ksc[ar, :, pos]))
         kc_f = dequant_rows(kc, ksc)
     else:
-        kc = kc.at[jnp.arange(b), :, pos, :].set(k_rep.astype(kc.dtype))
+        kc = kc.at[ar, :, pos, :].set(
+            _masked_rows(write_mask, k_rep.astype(kc.dtype),
+                         kc[ar, :, pos, :]))
         kc_f = kc
     s = kc.shape[2]
 
@@ -109,19 +122,25 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx):
             wv_r = jnp.take(p["wv"], reps, axis=1)
             v_new = jnp.einsum("bd,dke->bke", xn, wv_r)
         vc = tree_index(state["vg_chai"], idxs["global"])
-        vc = vc.at[jnp.arange(b), :, pos, :].set(v_new.astype(vc.dtype))
+        vc = vc.at[ar, :, pos, :].set(
+            _masked_rows(write_mask, v_new.astype(vc.dtype),
+                         vc[ar, :, pos, :]))
         vc_f = vc
     else:
         v_new = jnp.einsum("bd,dhe->bhe", xn, p["wv"])
         vc = tree_index(state["vg"], idxs["global"])
         if int8:
             vq, vs = quant_rows(v_new)
-            vc = vc.at[jnp.arange(b), :, pos, :].set(vq)
+            vc = vc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, vq, vc[ar, :, pos, :]))
             vsc = tree_index(state["vg_scale"], idxs["global"])
-            vsc = vsc.at[jnp.arange(b), :, pos].set(vs)
+            vsc = vsc.at[ar, :, pos].set(
+                _masked_rows(write_mask, vs, vsc[ar, :, pos]))
             vc_f = dequant_rows(vc, vsc)
         else:
-            vc = vc.at[jnp.arange(b), :, pos, :].set(v_new.astype(vc.dtype))
+            vc = vc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, v_new.astype(vc.dtype),
+                             vc[ar, :, pos, :]))
             vc_f = vc
 
     scale = 1.0 / math.sqrt(hd)
@@ -158,9 +177,12 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx):
 
 
 # ---------------------------------------------------------------- GQA ------
-def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local):
-    from repro.models.transformer import tree_index, tree_update
+def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
+                     write_mask=None):
+    from repro.models.transformer import _masked_rows, tree_index, \
+        tree_update
     b, d = xn.shape
+    ar = jnp.arange(b)
     hd, h, n_kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     qpk = cfg.q_per_kv
     pos = state["pos"]
@@ -196,16 +218,24 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local):
         kc = tree_index(state["kl"], idxs["local"])
         vc = tree_index(state["vl"], idxs["local"])
         slot = jnp.mod(pos, w)
-        kc = kc.at[jnp.arange(b), :, slot, :].set(k_new.astype(kc.dtype))
-        vc = vc.at[jnp.arange(b), :, slot, :].set(v_new.astype(vc.dtype))
+        kc = kc.at[ar, :, slot, :].set(
+            _masked_rows(write_mask, k_new.astype(kc.dtype),
+                         kc[ar, :, slot, :]))
+        vc = vc.at[ar, :, slot, :].set(
+            _masked_rows(write_mask, v_new.astype(vc.dtype),
+                         vc[ar, :, slot, :]))
         kv_pos = jax.vmap(lambda pp: attn_mod.ring_positions(pp + 1, w))(pos)
         window = cfg.window_size
     else:
         s = state["kg"].shape[3]
         kc = tree_index(state["kg"], idxs["global"])
         vc = tree_index(state["vg"], idxs["global"])
-        kc = kc.at[jnp.arange(b), :, pos, :].set(k_new.astype(kc.dtype))
-        vc = vc.at[jnp.arange(b), :, pos, :].set(v_new.astype(vc.dtype))
+        kc = kc.at[ar, :, pos, :].set(
+            _masked_rows(write_mask, k_new.astype(kc.dtype),
+                         kc[ar, :, pos, :]))
+        vc = vc.at[ar, :, pos, :].set(
+            _masked_rows(write_mask, v_new.astype(vc.dtype),
+                         vc[ar, :, pos, :]))
         kv_pos = jnp.broadcast_to(
             jnp.arange(s, dtype=jnp.int32), (b, s))
         window = 0

@@ -83,6 +83,37 @@ def identify_membership(scores, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
     return {"cluster_of": cluster_of, "reps": reps}
 
 
+def identify_membership_slot(scores, cfg: ModelConfig, identify_fn=None):
+    """Membership identification for ONE request. scores: (nA, H, F).
+
+    Returns a batch-free ctx (MHA: h2c (nA,H) / reps (nA,k); GQA:
+    cluster_of (nA,KV,qpk) / reps (nA,KV,r)) — the continuous engine
+    scatters it into its batched ctx buffer with ``update_ctx_slot``.
+
+    ``identify_fn``: optional batched identification hook (scores with a
+    batch dim -> batched ctx); defaults to ``identify_membership``. The
+    engine threads its monkeypatchable hook through here.
+    """
+    fn = identify_fn if identify_fn is not None else (
+        lambda s: identify_membership(s, cfg))
+    return jax.tree.map(lambda a: a[:, 0], fn(scores[:, None]))
+
+
+def init_batched_ctx(cfg: ModelConfig, batch: int):
+    """All-zero per-request membership buffers (zeros are valid indices:
+    every head in cluster 0, representative head 0). Slots are overwritten
+    by ``update_ctx_slot`` before their first STEADY decode."""
+    shapes, _ = ctx_structs(cfg, batch)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def update_ctx_slot(ctx, slot_ctx, slot):
+    """Scatter one request's batch-free ctx into batch slot ``slot``."""
+    return jax.tree.map(
+        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+            a, u.astype(a.dtype), slot, 1), ctx, slot_ctx)
+
+
 def shared_ctx(cfg: ModelConfig, seed: int = 0):
     """Deterministic shared (batch-free) membership — used by the dry-run
     and by CHAI-static (offline membership, paper §3.3 'CHAI-static').

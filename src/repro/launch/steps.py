@@ -102,3 +102,72 @@ def make_compact_step(cfg: ModelConfig):
     def compact(state, chai_ctx):
         return chai_cache.compact_kv(state, chai_ctx, cfg)
     return compact
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (slot-level) steps
+# ---------------------------------------------------------------------------
+
+def make_mixed_step(cfg: ModelConfig, *, moe_impl="ragged", unroll=False):
+    """Mixed-phase decode step: each batch slot is routed to the MHA path
+    (WARMUP) or the CHAI path (STEADY) by ``state["phase"]`` — one jit,
+    static shapes, mask-and-select inside the attention branch."""
+    def mixed_step(params, batch_inputs, state, chai_ctx):
+        kw = {}
+        if "embeddings" in batch_inputs:
+            kw["embeddings"] = batch_inputs["embeddings"]
+            tokens = None
+        else:
+            tokens = batch_inputs["tokens"]
+        logits, state = tfm.decode_step(params, cfg, tokens, state,
+                                        chai_ctx=chai_ctx, mixed_phase=True,
+                                        moe_impl=moe_impl, unroll=unroll,
+                                        **kw)
+        return logits, state
+
+    return mixed_step
+
+
+def make_slot_prefill(cfg: ModelConfig, max_seq: int, *,
+                      moe_impl="capacity", unroll=False):
+    """Prefill ONE request (batch=1 forward) and insert it into batch slot
+    ``slot`` of a unified decode state. Donate the state when jitting.
+
+    The returned callable is shape-specialized to the prompt length of
+    ``tokens`` — the engine keeps one jit per observed prompt length.
+    """
+    def slot_prefill(params, tokens, state, slot):
+        mini = tfm.init_decode_state(cfg, 1, max_seq)
+        logits, mini, _ = tfm.forward_fullseq(
+            params, cfg, tokens, state=mini, logits_slice="last",
+            moe_impl=moe_impl, unroll=unroll)
+        state = chai_cache.insert_slot(state, mini, slot)
+        return logits[:, 0], state
+
+    return slot_prefill
+
+
+def make_slot_cluster(cfg: ModelConfig, identify_fn):
+    """CLUSTER transition for one slot: identify membership from the
+    slot's accumulated warmup scores (via ``identify_fn``, the engine's
+    batched identification hook), scatter it into the batched ctx, and
+    compact the slot's dense K rows into the clustered cache."""
+    def cluster_slot(state, ctx, slot):
+        # Batch-of-1 through the batched hook: K-Means runs only for this
+        # slot, and monkeypatched hooks (CHAI-static, tests) still apply.
+        from repro.core import clustering
+        scores = jax.lax.dynamic_slice_in_dim(state["chai_scores"], slot, 1,
+                                              axis=1)[:, 0]
+        slot_ctx = clustering.identify_membership_slot(scores, cfg,
+                                                       identify_fn)
+        ctx = clustering.update_ctx_slot(ctx, slot_ctx, slot)
+        state = chai_cache.compact_kv_slot(state, slot_ctx, cfg, slot)
+        return state, ctx
+
+    return cluster_slot
+
+
+def make_slot_reset(cfg: ModelConfig):
+    def reset(state, slot):
+        return chai_cache.reset_slot(state, slot)
+    return reset

@@ -544,7 +544,7 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
 # Decode step (one token). CHAI hooks: see repro/core/chai_attention.py
 # ---------------------------------------------------------------------------
 
-def _mixer_decode_branch(kind, cfg, params, chai_ctx):
+def _mixer_decode_branch(kind, cfg, params, chai_ctx, mixed_phase=False):
     from repro.core import chai_attention as chai_mod
 
     def attn_branch(op, *, local):
@@ -552,7 +552,23 @@ def _mixer_decode_branch(kind, cfg, params, chai_ctx):
         p = tree_index(params["attn"], idxs["attn"])
         xn = rms_norm(x, p["ln"], cfg.norm_eps)
         pos = state["pos"]      # (B,)
-        if chai_ctx is not None:
+        if chai_ctx is not None and mixed_phase:
+            # Continuous batching: warmup and steady slots share the batch.
+            # Run both attention paths in one jit and mask-and-select per
+            # slot (static shapes). Each path commits its cache writes only
+            # for its own slots (write_mask), so every buffer keeps a
+            # single linear update chain — donation aliases in place, no
+            # whole-buffer merge copies.
+            from repro.core import cache as chai_cache
+            steady = state["phase"] >= chai_cache.PHASE_STEADY   # (B,)
+            y_m, state = _plain_decode_attention(xn, p, cfg, state, idxs,
+                                                 local=local,
+                                                 write_mask=~steady)
+            y_c, state = chai_mod.chai_decode_attention(
+                xn, p, cfg, state, idxs, chai_ctx, local=local,
+                write_mask=steady)
+            y = jnp.where(steady[:, None, None], y_c, y_m)
+        elif chai_ctx is not None:
             y, state = chai_mod.chai_decode_attention(
                 xn, p, cfg, state, idxs, chai_ctx, local=local)
         else:
@@ -596,10 +612,24 @@ def _mixer_decode_branch(kind, cfg, params, chai_ctx):
     return rwkv_branch
 
 
-def _plain_decode_attention(xn, p, cfg, state, idxs, *, local):
-    """MHA/GQA decode for one token. xn: (B, d). Returns ((B, H, hd), state)."""
+def _masked_rows(write_mask, new, old):
+    """Commit ``new`` only for slots in ``write_mask`` (mixed-phase step);
+    identity when no mask. new/old: (B, ...)."""
+    if write_mask is None:
+        return new
+    m = write_mask.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
+def _plain_decode_attention(xn, p, cfg, state, idxs, *, local,
+                            write_mask=None):
+    """MHA/GQA decode for one token. xn: (B, d). Returns ((B, H, hd), state).
+
+    ``write_mask`` (B,) bool: cache rows are committed only for masked
+    slots (the mixed-phase step runs this path alongside the CHAI path)."""
     b = xn.shape[0]
     pos = state["pos"]
+    ar = jnp.arange(b)
     # positions (B, 1): per-example rotary phase for the new token
     q, k, v = attn_mod.project_qkv(xn[:, None], p, cfg, pos[:, None])
     q = q[:, 0]      # (B, H, hd)
@@ -610,8 +640,10 @@ def _plain_decode_attention(xn, p, cfg, state, idxs, *, local):
         kc = tree_index(state["kl"], idxs["local"])
         vc = tree_index(state["vl"], idxs["local"])
         slot = jnp.mod(pos, w)
-        kc = kc.at[jnp.arange(b), :, slot, :].set(k.astype(kc.dtype))
-        vc = vc.at[jnp.arange(b), :, slot, :].set(v.astype(vc.dtype))
+        kc = kc.at[ar, :, slot, :].set(
+            _masked_rows(write_mask, k.astype(kc.dtype), kc[ar, :, slot, :]))
+        vc = vc.at[ar, :, slot, :].set(
+            _masked_rows(write_mask, v.astype(vc.dtype), vc[ar, :, slot, :]))
         kv_pos = jax.vmap(lambda pp: attn_mod.ring_positions(pp + 1, w))(pos)
         state = dict(state)
         state["kl"] = tree_update(state["kl"], idxs["local"], kc)
@@ -626,20 +658,28 @@ def _plain_decode_attention(xn, p, cfg, state, idxs, *, local):
             from repro.core.cache import dequant_rows, quant_rows
             kq, ks = quant_rows(k)              # (B, KV, hd), (B, KV)
             vq, vs = quant_rows(v)
-            kc = kc.at[jnp.arange(b), :, pos, :].set(kq)
-            vc = vc.at[jnp.arange(b), :, pos, :].set(vq)
+            kc = kc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, kq, kc[ar, :, pos, :]))
+            vc = vc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, vq, vc[ar, :, pos, :]))
             ksc = tree_index(state["kg_scale"], idxs["global"])
             vsc = tree_index(state["vg_scale"], idxs["global"])
-            ksc = ksc.at[jnp.arange(b), :, pos].set(ks)
-            vsc = vsc.at[jnp.arange(b), :, pos].set(vs)
+            ksc = ksc.at[ar, :, pos].set(
+                _masked_rows(write_mask, ks, ksc[ar, :, pos]))
+            vsc = vsc.at[ar, :, pos].set(
+                _masked_rows(write_mask, vs, vsc[ar, :, pos]))
             state["kg_scale"] = tree_update(state["kg_scale"],
                                             idxs["global"], ksc)
             state["vg_scale"] = tree_update(state["vg_scale"],
                                             idxs["global"], vsc)
             kc_f, vc_f = dequant_rows(kc, ksc), dequant_rows(vc, vsc)
         else:
-            kc = kc.at[jnp.arange(b), :, pos, :].set(k.astype(kc.dtype))
-            vc = vc.at[jnp.arange(b), :, pos, :].set(v.astype(vc.dtype))
+            kc = kc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, k.astype(kc.dtype),
+                             kc[ar, :, pos, :]))
+            vc = vc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, v.astype(vc.dtype),
+                             vc[ar, :, pos, :]))
             kc_f, vc_f = kc, vc
         kv_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         state["kg"] = tree_update(state["kg"], idxs["global"], kc)
@@ -655,6 +695,8 @@ def _plain_decode_attention(xn, p, cfg, state, idxs, *, local):
         pw = probs.reshape(b, -1, probs.shape[-1])[:, :, :wf]  # (B, H, Wf)
         if pw.shape[-1] < wf:   # local ring narrower than feature window
             pw = jnp.pad(pw, ((0, 0), (0, 0), (0, wf - pw.shape[-1])))
+        if write_mask is not None:   # steady slots: features stay frozen
+            pw = pw * write_mask[:, None, None]
         buf = tree_index(state["chai_scores"], idxs["attn"])
         state["chai_scores"] = tree_update(state["chai_scores"],
                                            idxs["attn"], buf + pw)
@@ -712,9 +754,15 @@ def _ffn_decode_branch(kind, cfg, params, moe_impl="ragged"):
 
 
 def decode_step(params, cfg: ModelConfig, tokens, state, *, chai_ctx=None,
-                embeddings=None, moe_impl="ragged", unroll=False):
+                mixed_phase=False, embeddings=None, moe_impl="ragged",
+                unroll=False):
     """One decode step. tokens: (B,) int32 (or embeddings (B, d) for stub
-    frontends). Returns (logits (B, V), new_state)."""
+    frontends). Returns (logits (B, V), new_state).
+
+    ``mixed_phase``: with a ``chai_ctx``, route each batch slot through the
+    MHA or CHAI attention path according to ``state["phase"]`` (unified
+    per-slot layout — continuous batching).
+    """
     plan = layer_plan(cfg)
     if embeddings is not None:
         h = frontends.adapt(embeddings[:, None].astype(_dtype(cfg)),
@@ -728,7 +776,8 @@ def decode_step(params, cfg: ModelConfig, tokens, state, *, chai_ctx=None,
         "idxs": {k: jnp.asarray(plan[k]) for k in
                  ("attn", "global", "local", "dense", "moe", "rec", "rwkv")},
     }
-    mixer_branches = [_mixer_decode_branch(k, cfg, params, chai_ctx)
+    mixer_branches = [_mixer_decode_branch(k, cfg, params, chai_ctx,
+                                           mixed_phase)
                       for k in plan["present_mixers"]]
     ffn_branches = [_ffn_decode_branch(k, cfg, params, moe_impl)
                     for k in plan["present_ffns"]]

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _quantize(g):
     """Symmetric per-tensor int8. Returns (q int8, scale f32)."""
@@ -77,6 +79,6 @@ def wrap_pod_manual(fn, mesh, in_specs, out_specs, *, pod_axis: str = "pod"):
     mechanism that lets the train step intercept the cross-pod gradient
     reduction and run it int8 (see repro.train.train_step).
     """
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+    return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, axis_names={pod_axis},
                          check_vma=False)

@@ -1,36 +1,46 @@
-"""Batched serving engine with the CHAI phase machine.
+"""Continuous-batching serving engine with a per-slot CHAI phase machine.
 
-Request lifecycle (paper Fig 10):
+Request lifecycle (paper Fig 10), tracked PER BATCH SLOT:
 
-    PREFILL  --(full MHA forward, fills dense KV cache)-->
-    WARMUP   --(``warmup_tokens`` MHA decode steps; per-head attention
-                scores accumulate into a feature buffer)-->
-    CLUSTER  --(K-Means membership identification per request; the dense
-                K cache is **compacted** to representative rows — the
-                paper's 21.4% KV saving — via a donated jit)-->
-    STEADY   --(Clustered Head Attention decode until EOS/max_tokens)
+    PREFILL  --(batch=1 full forward; KV rows written into the slot)-->
+    WARMUP   --(MHA decode steps; per-head attention scores accumulate
+                into the slot's clustering-feature buffer)-->
+    CLUSTER  --(per-slot K-Means membership identification; the slot's
+                dense K rows are compacted to representative rows — the
+                paper's 21.4% KV saving — via a donated slot-indexed
+                gather)-->
+    STEADY   --(Clustered Head Attention decode until max_tokens)
 
-The engine runs *slot-batched continuous decode*: a fixed number of batch
-slots (static shapes for XLA), a FIFO queue, and per-slot phase tracking.
-All slots advance together every step; slots in WARMUP use the MHA step,
-slots in STEADY the CHAI step. Because phase-switch requires a cache-layout
-change (MHA archs), the engine keeps batch *cohorts*: requests admitted
-together move through phases together (bucketed admission). This matches
-the paper's serving setting (all-MHA decode for 5 tokens, then CHAI).
+Two schedulers (``EngineConfig.scheduler``):
 
-Straggler/deadline mitigation: each cohort has a decode deadline; cohorts
-that exceed it (slow host, preempted chip) are re-dispatched onto a fresh
-cohort from the still-queued state (generated tokens are kept).
+* ``"continuous"`` (default) — slot-level continuous batching. A fixed
+  pool of batch slots (static shapes for XLA) holds requests at
+  *different* phases simultaneously: each slot is admitted, warmed up,
+  clustered, retired, and reused independently every step, so a short
+  request never waits for a long one (no head-of-line blocking). The
+  decode step is one jit that routes each slot to the MHA or CHAI
+  attention path according to the per-slot ``phase`` vector
+  (mask-and-select, static shapes); when no slot is mid-transition the
+  engine host-dispatches to the cheaper all-MHA / all-CHAI jits. The
+  cache is the *unified per-slot KV layout*
+  (``repro.core.cache.unified_state_structs``): dense ``kg``/``vg`` and
+  clustered ``kg_chai`` buffers resident side by side.
 
-On-CPU usage: reduced configs; the same engine code drives TPU meshes by
-passing ``mesh`` + shardings.
+* ``"cohort"`` — the legacy lockstep path, kept for A/B parity testing:
+  requests admitted together move through phases together, with the
+  cohort-deadline straggler re-dispatch mitigation.
+
+Every Request records arrival, admission (slot id + engine step), first
+token, and completion, so per-request TTFT / latency and engine
+throughput fall out directly. On-CPU usage: reduced configs; the same
+engine code drives TPU meshes by passing ``mesh`` + shardings.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +50,6 @@ from repro.configs.base import ModelConfig
 from repro.core import cache as chai_cache
 from repro.core import clustering
 from repro.launch import steps as steps_mod
-from repro.models import transformer as tfm
 
 
 @dataclasses.dataclass
@@ -51,24 +60,29 @@ class Request:
     # -- filled by the engine --
     generated: Optional[List[int]] = None
     t_enqueue: float = 0.0
+    t_arrival: float = 0.0             # Poisson workloads: earliest admit
     t_first_token: float = 0.0
     t_done: float = 0.0
+    slot: int = -1                     # continuous: slot the request ran in
+    admit_step: int = -1               # continuous: engine step at admission
+    retire_step: int = -1              # continuous: engine step at retire
 
     @property
     def ttft(self):
-        return self.t_first_token - self.t_enqueue
+        return self.t_first_token - self.t_arrival
 
     @property
     def latency(self):
-        return self.t_done - self.t_enqueue
+        return self.t_done - self.t_arrival
 
 
 @dataclasses.dataclass
 class EngineConfig:
-    batch_slots: int = 4               # cohort size (static)
+    batch_slots: int = 4               # slot-pool / cohort size (static)
     max_seq: int = 256                 # KV capacity (static)
     greedy: bool = True
-    cohort_deadline_s: float = 120.0   # straggler re-dispatch deadline
+    scheduler: str = "continuous"      # "continuous" | "cohort"
+    cohort_deadline_s: float = 120.0   # cohort straggler re-dispatch
     use_chai: bool = True
 
 
@@ -76,45 +90,187 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
         assert cfg.n_attn_layers > 0 or not ecfg.use_chai, \
             "CHAI needs attention layers"
+        assert ecfg.scheduler in ("continuous", "cohort"), ecfg.scheduler
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.queue: deque = deque()
         self.done: List[Request] = []
         self.redispatched = 0
+        self.steps_executed = 0        # continuous: batched decode steps
         b, s = ecfg.batch_slots, ecfg.max_seq
 
         chai_on = ecfg.use_chai and cfg.chai.enabled and cfg.k_max > 0
         self.chai_on = chai_on
-        self._prefill = jax.jit(steps_mod.make_serve_prefill(cfg, b, s))
+        # jax.jit wrappers are lazy (no tracing until the first call), so
+        # both schedulers' steps are declared here unconditionally.
         self._mha_step = jax.jit(steps_mod.make_serve_step(cfg, chai=False),
                                  donate_argnums=(2,))
+        self._prefill = jax.jit(steps_mod.make_serve_prefill(cfg, b, s))
+        self._reset_slot = jax.jit(steps_mod.make_slot_reset(cfg),
+                                   donate_argnums=(0,))
+        self._slot_prefills: dict = {}       # prompt length -> jit
+        self._cluster_slot = None            # built lazily (identify hook)
         if chai_on:
             self._chai_step = jax.jit(
                 steps_mod.make_serve_step(cfg, chai=True),
                 donate_argnums=(2,))
+            self._mixed_step = jax.jit(steps_mod.make_mixed_step(cfg),
+                                       donate_argnums=(2,))
             self._compact = jax.jit(steps_mod.make_compact_step(cfg),
                                     donate_argnums=(0,))
             self._identify = jax.jit(
                 lambda sc: clustering.identify_membership(sc, cfg))
 
     # -- public API --------------------------------------------------------
-    def submit(self, prompt, max_new_tokens=32, uid=None):
+    def submit(self, prompt, max_new_tokens=32, uid=None, *,
+               arrival_delay: float = 0.0):
+        """Enqueue a request. ``arrival_delay`` (seconds from now) models
+        open-loop arrivals: the scheduler will not admit the request
+        before its arrival time."""
         req = Request(uid=uid if uid is not None else len(self.queue)
                       + len(self.done),
                       prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens)
         req.t_enqueue = time.time()
+        req.t_arrival = req.t_enqueue + arrival_delay
         req.generated = []
         self.queue.append(req)
         return req
 
     def run(self):
         """Drain the queue; returns completed requests."""
+        if self.ecfg.scheduler == "cohort":
+            return self._run_cohort_loop()
+        return self._run_continuous()
+
+    # -- continuous scheduler ----------------------------------------------
+    def _slot_prefill_fn(self, t: int):
+        fn = self._slot_prefills.get(t)
+        if fn is None:
+            fn = jax.jit(
+                steps_mod.make_slot_prefill(self.cfg, self.ecfg.max_seq),
+                donate_argnums=(2,))
+            self._slot_prefills[t] = fn
+        return fn
+
+    def _cluster_fn(self):
+        # Built on first use so a monkeypatched ``_identify`` hook (tests,
+        # CHAI-static ablations) is honored.
+        if self._cluster_slot is None:
+            self._cluster_slot = jax.jit(
+                steps_mod.make_slot_cluster(self.cfg, self._identify),
+                donate_argnums=(0, 1))
+        return self._cluster_slot
+
+    def _run_continuous(self):
+        cfg, ecfg = self.cfg, self.ecfg
+        b = ecfg.batch_slots
+        warm = cfg.chai.warmup_tokens if self.chai_on else 0
+        state = chai_cache.init_unified_state(cfg, b, ecfg.max_seq,
+                                              chai=self.chai_on)
+        ctx = clustering.init_batched_ctx(cfg, b) if self.chai_on else None
+        slot_req: List[Optional[Request]] = [None] * b
+        slot_count = [0] * b            # tokens generated this admission
+        next_tok = np.zeros((b,), np.int32)   # host mirror
+        next_tok_dev = jnp.zeros((b,), jnp.int32)
+        phases = np.full((b,), chai_cache.PHASE_FREE, np.int32)
+
+        def retire(i):
+            r = slot_req[i]
+            r.generated = r.generated[:r.max_new_tokens]
+            r.t_done = time.time()
+            r.retire_step = self.steps_executed
+            self.done.append(r)
+            slot_req[i] = None
+            phases[i] = chai_cache.PHASE_FREE
+            return self._reset_slot(state, jnp.int32(i))
+
+        while self.queue or any(r is not None for r in slot_req):
+            now = time.time()
+            # ---- admit: fill free slots from the arrived FIFO prefix ----
+            admitted = False
+            for i in range(b):
+                if slot_req[i] is not None or not self.queue:
+                    continue
+                if self.queue[0].t_arrival > now:
+                    break
+                req = self.queue.popleft()
+                phases[i] = chai_cache.PHASE_PREFILL
+                toks = jnp.asarray(req.prompt[None, :])
+                logits, state = self._slot_prefill_fn(len(req.prompt))(
+                    self.params, toks, state, jnp.int32(i))
+                tok = int(np.asarray(self._sample(logits))[0])
+                req.t_first_token = time.time()
+                req.generated.append(tok)
+                req.slot, req.admit_step = i, self.steps_executed
+                next_tok[i] = tok
+                admitted = True
+                slot_req[i] = req
+                slot_count[i] = 1
+                phases[i] = chai_cache.PHASE_WARMUP
+                if len(req.generated) >= req.max_new_tokens:
+                    state = retire(i)
+
+            active = [i for i in range(b) if slot_req[i] is not None]
+            if not active:
+                if self.queue:      # open-loop idle: wait for next arrival
+                    time.sleep(max(1e-4,
+                                   self.queue[0].t_arrival - time.time()))
+                    continue
+                break
+
+            # ---- cluster + compact slots whose warmup just completed ----
+            if self.chai_on:
+                for i in active:
+                    if (slot_count[i] == warm + 1
+                            and phases[i] == chai_cache.PHASE_WARMUP):
+                        phases[i] = chai_cache.PHASE_CLUSTER
+                        state, ctx = self._cluster_fn()(state, ctx,
+                                                        jnp.int32(i))
+                        phases[i] = chai_cache.PHASE_STEADY
+
+            # ---- one batched decode step; host-dispatch the cheapest jit
+            # that covers the current phase mix. The token vector lives on
+            # device between steps; the host mirror is re-uploaded only
+            # after an admission edited it. ----
+            if admitted:
+                next_tok_dev = jnp.asarray(next_tok)
+            inputs = {"tokens": next_tok_dev}
+            occupied = phases[phases != chai_cache.PHASE_FREE]
+            if not self.chai_on:
+                logits, state = self._mha_step(self.params, inputs, state)
+            elif (occupied == chai_cache.PHASE_STEADY).all():
+                logits, state = self._chai_step(self.params, inputs, state,
+                                                ctx)
+            elif (occupied == chai_cache.PHASE_WARMUP).all():
+                logits, state = self._mha_step(self.params, inputs, state)
+            else:
+                logits, state = self._mixed_step(self.params, inputs, state,
+                                                 ctx)
+            next_tok_dev = self._sample(logits)
+            toks = np.asarray(next_tok_dev)
+            next_tok[:] = toks
+            self.steps_executed += 1
+            for i in active:
+                r = slot_req[i]
+                r.generated.append(int(toks[i]))
+                slot_count[i] += 1
+                if len(r.generated) >= r.max_new_tokens:
+                    state = retire(i)
+        return self.done
+
+    # -- cohort scheduler --------------------------------------------------
+    def _run_cohort_loop(self):
         while self.queue:
-            cohort = [self.queue.popleft()
-                      for _ in range(min(self.ecfg.batch_slots,
-                                         len(self.queue)))]
+            if self.queue[0].t_arrival > time.time():
+                time.sleep(max(1e-4,
+                               self.queue[0].t_arrival - time.time()))
+                continue
+            cohort = []
+            while (self.queue and len(cohort) < self.ecfg.batch_slots
+                   and self.queue[0].t_arrival <= time.time()):
+                cohort.append(self.queue.popleft())
             try:
                 self._run_cohort(cohort)
             except TimeoutError:
@@ -127,7 +283,6 @@ class ServingEngine:
                         self.done.append(r)
         return self.done
 
-    # -- cohort execution ----------------------------------------------------
     def _pad_prompts(self, cohort):
         b, s = self.ecfg.batch_slots, self.ecfg.max_seq
         t = max(len(r.prompt) for r in cohort)
@@ -162,6 +317,7 @@ class ServingEngine:
                 self.params, {"tokens": next_tok}, state)
             next_tok = self._sample(logits)
             self._record(cohort, next_tok)
+            self.steps_executed += 1
             step += 1
 
         # ---- CLUSTER + COMPACT: membership ID, K-cache gather ----
@@ -183,6 +339,7 @@ class ServingEngine:
                     self.params, {"tokens": next_tok}, state)
             next_tok = self._sample(logits)
             self._record(cohort, next_tok)
+            self.steps_executed += 1
             step += 1
 
         t_done = time.time()
@@ -204,6 +361,24 @@ class ServingEngine:
 
     # -- metrics ------------------------------------------------------------
     def kv_bytes(self, *, chai: Optional[bool] = None):
+        """KV-cache bytes. With explicit ``chai=``: the paper's analytic
+        steady-state size (Fig 11 A/B comparisons). With no argument:
+        this engine's actual resident footprint — for the continuous
+        scheduler's unified layout that is dense + clustered buffers
+        side by side (MORE than plain MHA; the cohort scheduler frees
+        the dense cache at compaction and reports the analytic size)."""
+        if chai is None and self.ecfg.scheduler == "continuous":
+            return chai_cache.unified_kv_bytes(
+                self.cfg, self.ecfg.batch_slots, self.ecfg.max_seq,
+                chai=self.chai_on)
         chai = self.chai_on if chai is None else chai
         return chai_cache.kv_cache_bytes(
             self.cfg, self.ecfg.batch_slots, self.ecfg.max_seq, chai=chai)
+
+    def throughput(self):
+        """Completed requests per second of engine wall time."""
+        if not self.done:
+            return 0.0
+        t0 = min(r.t_arrival for r in self.done)
+        t1 = max(r.t_done for r in self.done)
+        return len(self.done) / max(t1 - t0, 1e-9)

@@ -1,0 +1,139 @@
+"""Unified per-slot KV layout: quantization round-trips and per-slot
+compaction parity with the whole-batch gather."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as chai_cache
+from repro.core import clustering
+from repro.models.transformer import init_decode_state
+
+
+# ------------------------------------------------------------- quant -------
+@pytest.mark.parametrize("shape,seed,scale", [
+    ((4, 16), 0, 1.0), ((2, 3, 8), 1, 100.0), ((7,  64), 2, 1e-3),
+    ((1, 1, 1, 4), 3, 1.0), ((5, 32), 4, 1e4),
+])
+def test_quant_rows_roundtrip_bound(shape, seed, scale):
+    """Property: per-row symmetric int8 reconstructs within half a grid
+    step of the row scale, for any shape/magnitude."""
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=shape) * scale,
+                    jnp.float32)
+    q, s = chai_cache.quant_rows(x)
+    assert q.dtype == jnp.int8 and s.shape == shape[:-1]
+    err = np.abs(np.asarray(chai_cache.dequant_rows(q, s)) - np.asarray(x))
+    bound = 0.5 * np.asarray(s)[..., None] + 1e-7
+    assert (err <= bound).all()
+    # int8 range respected, scale strictly positive
+    assert np.asarray(q).min() >= -127 and np.asarray(q).max() <= 127
+    assert (np.asarray(s) > 0).all()
+
+
+def test_quant_rows_zero_row_stable():
+    q, s = chai_cache.quant_rows(jnp.zeros((3, 8)))
+    assert (np.asarray(q) == 0).all() and np.isfinite(np.asarray(s)).all()
+    assert (np.asarray(chai_cache.dequant_rows(q, s)) == 0).all()
+
+
+# ----------------------------------------------------- per-slot compact ----
+def _mha_cfg(share_values, int8):
+    cfg = reduced(get_config("chai-llama-7b"), n_layers=2, d_model=32,
+                  d_ff=64, vocab=64).replace(dtype="float32")
+    if int8:
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    return cfg.with_chai(enabled=True, share_values=share_values,
+                         cluster_counts=(3,) * cfg.n_attn_layers)
+
+
+@pytest.mark.parametrize("share_values", [False, True])
+@pytest.mark.parametrize("int8", [False, True])
+def test_compact_kv_slot_matches_whole_batch(rng, share_values, int8):
+    """Per-slot donated gather == the cohort path's whole-batch
+    ``compact_kv`` for every share_values / int8 cache combination."""
+    cfg = _mha_cfg(share_values, int8)
+    b, s = 3, 16
+    dense = init_decode_state(cfg, b, s)
+    for k in dense:
+        if k == "pos":
+            continue
+        if dense[k].dtype == jnp.int8:
+            dense[k] = jnp.asarray(
+                rng.integers(-127, 128, size=dense[k].shape), jnp.int8)
+        else:
+            dense[k] = jnp.asarray(rng.normal(size=dense[k].shape),
+                                   dense[k].dtype)
+    k_max, _ = clustering.chai_widths(cfg)
+    reps = jnp.asarray(
+        rng.integers(0, cfg.n_heads, size=(cfg.n_attn_layers, b, k_max)),
+        jnp.int32)
+
+    whole = chai_cache.compact_kv(dict(dense), {"reps": reps}, cfg)
+
+    unified = chai_cache.init_unified_state(cfg, b, s)
+    for k, v in dense.items():
+        unified[k] = v
+    compact = jax.jit(chai_cache.compact_kv_slot,
+                      static_argnames=("cfg",), donate_argnums=(0,))
+    for i in range(b):
+        slot_ctx = {"reps": reps[:, i]}
+        unified = compact(unified, slot_ctx, cfg, jnp.int32(i))
+
+    for key in ("kg_chai", "kg_chai_scale", "vg_chai"):
+        if key in whole:
+            np.testing.assert_array_equal(np.asarray(whole[key]),
+                                          np.asarray(unified[key]), key)
+    # phase machine advanced every slot to STEADY
+    assert (np.asarray(unified["phase"]) == chai_cache.PHASE_STEADY).all()
+    # unified layout: the dense cache stays resident for warmup slots
+    assert "kg" in unified and "kg" not in whole
+
+
+@pytest.mark.parametrize("share_values", [False, True])
+@pytest.mark.parametrize("int8", [False, True])
+def test_unified_kv_bytes_accounts_both_layouts(share_values, int8):
+    """The unified layout is honest about its cost: resident bytes =
+    dense cache + the clustered extension (MORE than dense alone; the
+    21.4%-style saving is the cohort/steady-state analytic number)."""
+    cfg = _mha_cfg(share_values, int8)
+    b, s = 2, 32
+    dense = chai_cache.kv_cache_bytes(cfg, b, s, chai=False)
+    unified = chai_cache.unified_kv_bytes(cfg, b, s)
+    assert unified > dense
+    # exact: sum of the layout's own KV buffers
+    shapes, _ = chai_cache.unified_state_structs(cfg, b, s)
+    expect = sum(int(np.prod(st.shape)) * st.dtype.itemsize
+                 for k, st in shapes.items()
+                 if k not in ("pos", "phase", "chai_scores"))
+    assert unified == expect
+    # without CHAI the unified layout reduces to the dense cache
+    assert chai_cache.unified_kv_bytes(cfg, b, s, chai=False) == dense
+
+
+def test_insert_and_reset_slot_roundtrip(rng):
+    """insert_slot writes one request's prefill into a slot (phase ->
+    WARMUP, scores cleared); reset_slot frees it (phase -> FREE, pos 0);
+    other slots are untouched."""
+    cfg = _mha_cfg(False, False)
+    b, s = 2, 16
+    state = chai_cache.init_unified_state(cfg, b, s)
+    state["chai_scores"] = jnp.ones_like(state["chai_scores"])
+    mini = init_decode_state(cfg, 1, s)
+    mini["kg"] = jnp.asarray(rng.normal(size=mini["kg"].shape),
+                             mini["kg"].dtype)
+    mini["pos"] = jnp.full((1,), 7, jnp.int32)
+
+    out = chai_cache.insert_slot(state, mini, 1)
+    np.testing.assert_array_equal(np.asarray(out["kg"][:, 1]),
+                                  np.asarray(mini["kg"][:, 0]))
+    assert (np.asarray(out["kg"][:, 0]) == 0).all()      # slot 0 untouched
+    assert int(out["pos"][1]) == 7 and int(out["pos"][0]) == 0
+    assert int(out["phase"][1]) == chai_cache.PHASE_WARMUP
+    assert (np.asarray(out["chai_scores"][:, 1]) == 0).all()
+    assert (np.asarray(out["chai_scores"][:, 0]) == 1).all()
+
+    out = chai_cache.reset_slot(out, 1)
+    assert int(out["phase"][1]) == chai_cache.PHASE_FREE
+    assert int(out["pos"][1]) == 0

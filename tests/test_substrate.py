@@ -3,7 +3,13 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:    # property tests run when hypothesis is installed (the [test]
+        # extra); a bare CPU env still collects and runs everything else.
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 import jax
 import jax.numpy as jnp
@@ -168,13 +174,7 @@ def test_rules_divisibility_fallback():
     assert spec == jax.sharding.PartitionSpec()
 
 
-@settings(max_examples=30, deadline=None)
-@given(dims=st.lists(st.sampled_from([1, 2, 3, 5, 8, 16, 48, 256]),
-                     min_size=1, max_size=4),
-       names=st.lists(st.sampled_from(
-           ["batch", "heads", "mlp", "vocab", "embed", None]),
-           min_size=1, max_size=4))
-def test_rules_never_violate_divisibility(dims, names):
+def _rules_divisibility_body(dims, names):
     """Property: any spec produced divides the dims it shards."""
     from repro.sharding import rules
     n = min(len(dims), len(names))
@@ -183,6 +183,30 @@ def test_rules_never_violate_divisibility(dims, names):
     spec = rules.spec_for(tuple(dims), tuple(names), mesh)
     # with a single device no axis may be assigned at all
     assert all(s is None for s in spec)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(dims=st.lists(st.sampled_from([1, 2, 3, 5, 8, 16, 48, 256]),
+                         min_size=1, max_size=4),
+           names=st.lists(st.sampled_from(
+               ["batch", "heads", "mlp", "vocab", "embed", None]),
+               min_size=1, max_size=4))
+    def test_rules_never_violate_divisibility(dims, names):
+        _rules_divisibility_body(dims, names)
+else:
+    def test_rules_never_violate_divisibility():
+        pytest.importorskip("hypothesis")   # randomized search needs it;
+        # the pinned grid below still exercises the property.
+
+
+@pytest.mark.parametrize("dims,names", [
+    ((8,), ("heads",)), ((1, 256), ("batch", "embed")),
+    ((3, 5, 16), ("mlp", None, "vocab")), ((48, 2), ("embed", "heads")),
+])
+def test_rules_divisibility_pinned(dims, names):
+    """Hypothesis-free pinned cases so the property holds on bare envs."""
+    _rules_divisibility_body(list(dims), list(names))
 
 
 def test_adamw_decreases_loss_quadratic():

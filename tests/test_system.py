@@ -20,6 +20,8 @@ from repro.models import transformer as tfm
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.train.trainer import Trainer, TrainerConfig
 
+pytestmark = pytest.mark.slow   # trains a model; CI runs it in the slow lane
+
 
 @pytest.fixture(scope="module")
 def trained(tmp_path_factory):
