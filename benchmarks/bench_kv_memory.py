@@ -1,13 +1,75 @@
 """Paper Fig 11: K,V-cache memory, MHA vs CHAI, across sequence lengths.
 
-Exact analytic bytes for the full LLaMA-7B config (the paper's model) and
-for every assigned MHA-regime arch. The paper's 21.4% saving comes from
-dropping non-representative K rows; V is kept (Table 4)."""
+Two lanes:
+  1. **Analytic** — exact steady-state bytes for the full LLaMA-7B config
+     (the paper's model) and every assigned MHA-regime arch. The paper's
+     21.4% saving comes from dropping non-representative K rows; V is
+     kept (Table 4).
+  2. **Paged allocator** — the continuous-batching engine with
+     ``kv_layout="paged"`` on a tiny MHA model: resident (allocated-page)
+     bytes sampled across PREFILL -> WARMUP -> CLUSTER -> STEADY. The
+     claim check asserts the saving is *realized by the allocator*:
+     steady-state paged-CHAI bytes fall below the dense-MHA rectangle
+     the dense layouts keep resident (the unified layout exceeds it)."""
 from __future__ import annotations
 
+import numpy as np
+
+import jax
+
 from benchmarks.common import save_result
-from repro.configs.base import get_config, list_configs
-from repro.core.cache import kv_cache_bytes
+from repro.configs.base import get_config, list_configs, reduced
+from repro.core.cache import kv_cache_bytes, unified_kv_bytes
+from repro.models import transformer as tfm
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+def _paged_allocator_lane(slots=2, max_seq=64, page_size=16, n_req=4):
+    """PREFILL->STEADY allocated-bytes trajectory of the paged engine."""
+    cfg = reduced(get_config("chai-llama-7b"), n_layers=2, d_model=32,
+                  d_ff=64, vocab=64).replace(dtype="float32")
+    cfg = cfg.with_chai(enabled=True, warmup_tokens=3)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(batch_slots=slots, max_seq=max_seq,
+                                     kv_layout="paged",
+                                     page_size=page_size))
+    rng = np.random.default_rng(0)
+    for i in range(n_req):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8),
+                   max_new_tokens=24, uid=i)
+    eng.run()
+    hist = eng.kv_bytes_history
+    dense_mha = unified_kv_bytes(cfg, slots, max_seq, chai=False)
+    dense_unified = unified_kv_bytes(cfg, slots, max_seq, chai=True)
+    # steady state = every occupied slot past CLUSTER (no warmup slot is
+    # holding dense K pages); churn steps with a fresh WARMUP admission
+    # are transient and excluded. No steady sample means the workload
+    # never exercised the saving — fail loudly rather than report a
+    # vacuous (drained-engine) number.
+    steady = [h for h in hist
+              if h.get("n_warmup") == 0 and h.get("n_steady", 0) > 0]
+    if not steady:
+        raise RuntimeError(
+            "paged allocator lane produced no steady-state sample "
+            f"(warmup_tokens={cfg.chai.warmup_tokens}, history={hist}); "
+            "the claim check would be vacuous")
+    steady_bytes = max(h["kv_bytes"] for h in steady)
+    return {
+        "note": "allocated-page bytes from the serving engine's PagePool "
+                "accounting (tiny model; layout-level numbers, not "
+                "hardware-level)",
+        "workload": {"slots": slots, "max_seq": max_seq,
+                     "page_size": page_size, "n_req": n_req,
+                     "prompt_len": 8, "max_new": 24},
+        "timeline": hist,
+        "peak_bytes": eng.kv_bytes_peak(),
+        "steady_chai_bytes": steady_bytes,
+        "dense_mha_bytes": dense_mha,
+        "dense_unified_bytes": dense_unified,
+        "paged_steady_saving_vs_dense_mha":
+            1 - steady_bytes / dense_mha,
+    }
 
 
 def run():
@@ -25,11 +87,13 @@ def run():
                             "saving_frac": 1 - ch / full}
         per_arch[arch] = rows
 
+    paged = _paged_allocator_lane()
     llama = per_arch["chai-llama-7b"]["2048"]
     result = {
         "note": "exact analytic bytes; MHA-regime archs only (GQA archs "
                 "get compute-only wins, DESIGN.md §4)",
         "per_arch": per_arch,
+        "paged_allocator": paged,
         "paper_claim": "LLaMA-7B seq 2048: ~1.2 GB KV cache, up to 21.4% "
                        "saving",
         "claim_check": {
@@ -37,6 +101,15 @@ def run():
             "llama_saving_frac": llama["saving_frac"],
             "saving_in_paper_range": 0.10 <= llama["saving_frac"] <= 0.30,
             "kv_close_to_1.2GB": 0.8 <= llama["mha_bytes"] / 2**30 <= 1.6,
+            # the tentpole: the allocator (not just the formula) realizes
+            # the saving — steady paged-CHAI below the dense-MHA
+            # rectangle, which the unified layout exceeds
+            "paged_steady_below_dense_mha":
+                paged["steady_chai_bytes"] < paged["dense_mha_bytes"],
+            "unified_layout_exceeds_dense_mha":
+                paged["dense_unified_bytes"] > paged["dense_mha_bytes"],
+            "compaction_frees_pages":
+                paged["steady_chai_bytes"] < paged["peak_bytes"],
         },
     }
     save_result("bench_kv_memory", result)

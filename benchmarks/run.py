@@ -2,16 +2,20 @@
 
   python -m benchmarks.run            # all benches
   python -m benchmarks.run --only bench_kv_memory,bench_flops
+  python -m benchmarks.run --list     # available bench names
 
 Each bench saves JSON under benchmarks/results/ and returns a dict with a
 ``claim_check`` section verifying the paper's claims (or their CPU-proxy
-analogues — labeled). Exit code is non-zero if any claim check fails.
+analogues — labeled). The end-of-run summary is printed AND written to
+benchmarks/results/summary.json (CI uploads results/*.json as artifacts).
+Exit code is non-zero if any claim check fails.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import os
 import time
 import traceback
 
@@ -21,16 +25,23 @@ BENCHES = [
     "bench_flops",             # Figs 1/14
     "bench_elbow",             # Fig 8
     "bench_membership",        # Fig 9
-    "bench_kv_memory",         # Fig 11
-    "bench_latency",           # Fig 12
+    "bench_kv_memory",         # Fig 11 + paged-allocator lane
+    "bench_latency",           # Fig 12 + paged scheduler lane
     "bench_cluster_dist",      # Fig 13
 ]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench names (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="print available bench names and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for name in BENCHES:
+            print(name)
+        return 0
     names = args.only.split(",") if args.only else BENCHES
 
     failures, summaries = [], {}
@@ -57,6 +68,11 @@ def main(argv=None):
             traceback.print_exc()
     print("\n=== summary ===")
     print(json.dumps(summaries, indent=1, default=str))
+    results_dir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(results_dir, exist_ok=True)
+    with open(os.path.join(results_dir, "summary.json"), "w") as f:
+        json.dump({"benches": summaries, "failures": failures},
+                  f, indent=1, default=str)
     return 1 if failures else 0
 
 

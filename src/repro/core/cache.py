@@ -1,20 +1,41 @@
-"""CHAI KV-cache layouts: full (MHA warmup), clustered (steady state), and
-the *unified per-slot* layout used by the continuous-batching engine.
+"""CHAI KV-cache layouts: cohort (dense -> clustered), unified per-slot,
+and the *paged* layout the continuous-batching engine serves from.
 
-``compact_kv`` is the paper's "remove the Key tokens associated [with pruned
-heads]" step (§3.5): after membership identification, the dense K cache is
-gathered down to representative rows. Run it as a donated jit so the full
-cache's buffer is released on device.
+Three layouts, one phase machine (PREFILL -> WARMUP -> CLUSTER -> STEADY):
 
-The unified layout (``unified_state_structs``) keeps the dense K/V buffers
-(``kg``/``vg``) and the clustered buffers (``kg_chai``, plus scales /
-``vg_chai`` variants) resident side by side, with a per-slot ``phase``
-vector. Each batch slot independently walks PREFILL -> WARMUP -> CLUSTER ->
-STEADY: ``insert_slot`` writes a freshly prefilled request into one slot,
-``compact_kv_slot`` gathers that slot's representative K rows into the
-clustered cache (donated slot-indexed gather), and the mixed-phase decode
-step commits each attention path's cache writes under a per-slot write
-mask (mask-and-select inside one jit; see models/transformer.py).
+1. **Cohort** (``chai_state_structs`` / ``compact_kv``) — the paper's
+   batch-lockstep flow. ``compact_kv`` is §3.5's "remove the Key tokens
+   associated [with pruned heads]": after membership identification the
+   dense K cache is gathered down to representative rows. Run it as a
+   donated jit so the full cache's buffer is released on device.
+
+2. **Unified per-slot** (``unified_state_structs``) — the legacy
+   continuous-batching layout (``EngineConfig.kv_layout="dense"``). Dense
+   ``kg``/``vg`` AND clustered ``kg_chai`` rectangles stay resident side
+   by side for the whole ``batch x max_seq`` envelope, with a per-slot
+   ``phase`` vector; ``insert_slot`` / ``compact_kv_slot`` /
+   ``reset_slot`` move one slot through its lifecycle. Honest but
+   wasteful: resident bytes EXCEED plain MHA.
+
+3. **Paged** (``paged_state_structs``, the engine default) — fixed-size
+   pages of ``page_size`` tokens spanning all global layers, drawn from
+   two device pools (``kvp``: dense K/V rows, ``n_kv_heads`` wide;
+   ``cp``: clustered rows, ``k_max`` wide), addressed through per-slot
+   int32 block tables (``bt_kg``/``bt_vg`` -> ``kvp``, ``bt_kc``/
+   ``bt_vc`` -> ``cp``). Page 0 of every pool is a reserved *null sink*:
+   unallocated block-table entries point at it, so masked/oob writes land
+   harmlessly and reads from it are always masked by ``pos`` validity.
+   ``PagePool`` is the host-side allocator (free list, page 0 excluded).
+   ``insert_slot_paged`` scatters a prefilled request into its pages,
+   ``compact_kv_slot_paged`` gathers the representative rows into
+   clustered pages and *nulls the dense block-table row* — the engine
+   then returns the dense pages to the pool, realizing the paper's KV
+   saving at the allocator level (``paged_kv_bytes``) instead of only
+   analytically. int8 caches keep per-row scales in mirror-shaped scale
+   pools (``kvp_scale``/``cp_scale``) indexed by the same block tables.
+
+``quant_rows``/``dequant_rows`` implement the per-(head, position)
+symmetric int8 cache quantization shared by all layouts.
 """
 from __future__ import annotations
 
@@ -253,6 +274,299 @@ def unified_kv_bytes(cfg: ModelConfig, batch: int, seq: int, *,
                "kg_chai", "kg_chai_scale", "vg_chai")
     return int(sum(np.prod(s.shape) * s.dtype.itemsize
                    for k, s in shapes.items() if k in kv_keys))
+
+
+# ---------------------------------------------------------------------------
+# Paged layout (continuous batching, EngineConfig.kv_layout="paged")
+# ---------------------------------------------------------------------------
+
+NULL_PAGE = 0   # reserved per-pool sink; never allocated, never read valid
+
+
+class PagePool:
+    """Host-side page allocator for one device pool.
+
+    ``num_pages`` is the pool array's page dimension; page ``NULL_PAGE``
+    is reserved as the sink for unallocated block-table entries, so the
+    usable capacity is ``num_pages - 1``. Allocation state lives on the
+    host (the device only ever sees block tables); ``alloc``/``free``
+    are O(n) list ops on the free list.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2, "pool needs the null page plus capacity"
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        # LIFO free list (reuse-hot pages first); page 0 excluded.
+        self._free = list(range(self.num_pages - 1, NULL_PAGE, -1))
+
+    @property
+    def capacity(self):
+        return self.num_pages - 1
+
+    @property
+    def free_pages(self):
+        return len(self._free)
+
+    @property
+    def pages_in_use(self):
+        return self.capacity - len(self._free)
+
+    def alloc(self, n: int):
+        """Pop ``n`` pages; raises if the pool cannot cover them."""
+        if n > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: want {n}, have {len(self._free)} "
+                f"of {self.capacity}")
+        pages, self._free = self._free[:n], self._free[n:]
+        return pages
+
+    def free(self, pages):
+        """Return pages to the pool (double-free / null-free guarded)."""
+        for p in pages:
+            p = int(p)
+            assert p != NULL_PAGE, "freeing the null page"
+            assert p not in self._free, f"double free of page {p}"
+            assert 0 < p < self.num_pages, p
+            self._free.append(p)
+
+
+def pages_needed(tokens: int, page_size: int):
+    return -(-int(tokens) // int(page_size))
+
+
+def gather_pages(pool, bt):
+    """Dense logical view of one pool through block tables.
+
+    pool: (nP, rows, page[, hd]); bt: (B, P) int32 ->
+    (B, rows, P*page[, hd]). Entries pointing at the null page yield
+    garbage rows — callers mask by ``pos`` validity, exactly as the dense
+    rectangles mask their zero tail."""
+    g = pool[bt]                                  # (B, P, rows, page[, hd])
+    m = jnp.moveaxis(g, 2, 1)                     # (B, rows, P, page[, hd])
+    b, rows, p, ps = m.shape[:4]
+    return m.reshape((b, rows, p * ps) + m.shape[4:])
+
+
+def paged_state_structs(cfg: ModelConfig, batch: int, max_seq: int, *,
+                        page_size: int, dense_pages: int,
+                        chai_pages: int = 0, chai: bool = True):
+    """Decode-state structs for the paged continuous-batching layout.
+
+    The dense per-slot ``kg``/``vg`` rectangles are replaced by one
+    shared pool ``kvp`` of ``dense_pages`` pages (page = ``page_size``
+    tokens x all global layers x ``n_kv_heads`` rows) plus per-slot
+    block tables ``bt_kg``/``bt_vg``; MHA+CHAI archs add the clustered
+    pool ``cp`` (``k_max`` rows) with tables ``bt_kc`` (and ``bt_vc``
+    under ``share_values``). Everything else (local ring caches,
+    recurrent state, ``pos``/``phase``/``chai_scores``) matches the
+    unified layout."""
+    from repro.models.transformer import decode_state_structs as _structs
+    assert max_seq % page_size == 0, (max_seq, page_size)
+    n_slot_pages = max_seq // page_size
+    shapes, logical = _structs(cfg, batch, max_seq)
+    shapes, logical = dict(shapes), dict(logical)
+    shapes["phase"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    logical["phase"] = Ax("batch")
+    chai_on = chai and cfg.chai.enabled and cfg.k_max > 0
+    int8 = cfg.kv_cache_dtype == "int8"
+    bt_sds = jax.ShapeDtypeStruct((batch, n_slot_pages), jnp.int32)
+    if cfg.n_global_layers:
+        ng, kv, hd = cfg.n_global_layers, cfg.n_kv_heads, cfg.head_dim
+        cache_dt = shapes["kg"].dtype
+        for k in ("kg", "vg", "kg_scale", "vg_scale"):
+            shapes.pop(k, None)
+            logical.pop(k, None)
+        shapes["kvp"] = jax.ShapeDtypeStruct(
+            (ng, dense_pages, kv, page_size, hd), cache_dt)
+        logical["kvp"] = Ax("layers", None, "kv_heads", None, "head_dim")
+        if int8:
+            shapes["kvp_scale"] = jax.ShapeDtypeStruct(
+                (ng, dense_pages, kv, page_size), jnp.float32)
+            logical["kvp_scale"] = Ax("layers", None, "kv_heads", None)
+        shapes["bt_kg"] = bt_sds
+        shapes["bt_vg"] = bt_sds
+        logical["bt_kg"] = Ax("batch", None)
+        logical["bt_vg"] = Ax("batch", None)
+    if not chai_on:
+        return shapes, logical
+    wf = min(cfg.chai.feature_window, max_seq)
+    shapes["chai_scores"] = jax.ShapeDtypeStruct(
+        (cfg.n_attn_layers, batch, cfg.n_heads, wf), jnp.float32)
+    logical["chai_scores"] = Ax("layers", "batch", "heads", None)
+    if cfg.is_mha and "kvp" in shapes:
+        k_max, _ = chai_widths(cfg)
+        ng, hd = cfg.n_global_layers, cfg.head_dim
+        cache_dt = shapes["kvp"].dtype
+        shapes["cp"] = jax.ShapeDtypeStruct(
+            (ng, chai_pages, k_max, page_size, hd), cache_dt)
+        logical["cp"] = Ax("layers", None, "clusters", None, "head_dim")
+        if int8:
+            shapes["cp_scale"] = jax.ShapeDtypeStruct(
+                (ng, chai_pages, k_max, page_size), jnp.float32)
+            logical["cp_scale"] = Ax("layers", None, "clusters", None)
+        shapes["bt_kc"] = bt_sds
+        logical["bt_kc"] = Ax("batch", None)
+        if cfg.chai.share_values:
+            shapes["bt_vc"] = bt_sds
+            logical["bt_vc"] = Ax("batch", None)
+    return shapes, logical
+
+
+def init_paged_state(cfg: ModelConfig, batch: int, max_seq: int, *,
+                     page_size: int, dense_pages: int, chai_pages: int = 0,
+                     chai: bool = True):
+    shapes, _ = paged_state_structs(cfg, batch, max_seq,
+                                    page_size=page_size,
+                                    dense_pages=dense_pages,
+                                    chai_pages=chai_pages, chai=chai)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def _scatter_pages(pool, x, pages):
+    """Scatter a dense batch-1 rectangle into pool pages.
+
+    pool: (nG, nP, rows, page[, hd]); x: (nG, 1, rows, S[, hd]);
+    pages: (P,) int32 with null-padding (trailing writes land in the
+    null sink). S == P * page."""
+    ng, _, rows, s = x.shape[:4]
+    page = pool.shape[3]
+    p = s // page
+    m = x.reshape((ng, rows, p, page) + x.shape[4:])
+    m = jnp.moveaxis(m, 2, 1)                    # (nG, P, rows, page[, hd])
+    return pool.at[:, pages].set(m.astype(pool.dtype))
+
+
+def insert_slot_paged(state, mini, slot, kg_pages, vg_pages):
+    """Paged ``insert_slot``: write a prefilled batch=1 dense decode state
+    into slot ``slot``, scattering its global K/V rows into the slot's
+    freshly allocated pages and recording the block tables. Donate
+    ``state`` when jitting."""
+    state = dict(state)
+    paged_keys = ("kg", "vg", "kg_scale", "vg_scale")
+    for k, v in mini.items():
+        if k in paged_keys:
+            continue
+        axis = 0 if state[k].ndim == 1 else 1
+        state[k] = jax.lax.dynamic_update_index_in_dim(
+            state[k], v.astype(state[k].dtype), slot, axis)
+    if "kvp" in state and "kg" in mini:
+        state["kvp"] = _scatter_pages(state["kvp"], mini["kg"], kg_pages)
+        state["kvp"] = _scatter_pages(state["kvp"], mini["vg"], vg_pages)
+        if "kvp_scale" in state:
+            state["kvp_scale"] = _scatter_pages(
+                state["kvp_scale"], mini["kg_scale"], kg_pages)
+            state["kvp_scale"] = _scatter_pages(
+                state["kvp_scale"], mini["vg_scale"], vg_pages)
+        state["bt_kg"] = state["bt_kg"].at[slot].set(kg_pages)
+        state["bt_vg"] = state["bt_vg"].at[slot].set(vg_pages)
+    if "chai_scores" in state:
+        nA, _, h, wf = state["chai_scores"].shape
+        state["chai_scores"] = jax.lax.dynamic_update_index_in_dim(
+            state["chai_scores"], jnp.zeros((nA, 1, h, wf), jnp.float32),
+            slot, 1)
+    state["phase"] = state["phase"].at[slot].set(PHASE_WARMUP)
+    return state
+
+
+def compact_kv_slot_paged(state, slot_ctx, cfg: ModelConfig, slot,
+                          kc_pages, vc_pages=None):
+    """Paged per-slot compaction: gather slot ``slot``'s representative K
+    rows out of its dense pages into the clustered pages ``kc_pages``,
+    then *null the dense block-table row* — after this jit returns, the
+    engine hands the dense pages back to the ``PagePool`` (the
+    allocator-level realization of the paper's §3.5 KV saving).
+
+    Under ``share_values`` the dense V pages are compacted into
+    ``vc_pages`` and freed the same way; otherwise V stays page-resident
+    in the dense pool until retire. Donate ``state`` when jitting."""
+    state = dict(state)
+    if cfg.is_mha and cfg.chai.enabled and "cp" in state:
+        reps = slot_ctx["reps"]                              # (nA, k)
+        null_row = jnp.zeros_like(kc_pages)
+
+        def gather(pool_key, scale_key, bt_key, dst_pages):
+            bt_row = jax.lax.dynamic_index_in_dim(
+                state[bt_key], slot, 0, keepdims=False)      # (P,)
+            rows = state["kvp"][:, bt_row]       # (nG, P, KV, page, hd)
+            idx = reps[:, None, :, None, None]
+            g = jnp.take_along_axis(rows, idx, axis=2)
+            state[pool_key] = state[pool_key].at[:, dst_pages].set(
+                g.astype(state[pool_key].dtype))
+            if scale_key in state:
+                srows = state["kvp_scale"][:, bt_row]
+                sg = jnp.take_along_axis(srows, reps[:, None, :, None],
+                                         axis=2)
+                state[scale_key] = state[scale_key].at[:, dst_pages].set(sg)
+            state[bt_key] = state[bt_key].at[slot].set(null_row)
+
+        gather("cp", "cp_scale", "bt_kg", kc_pages)
+        state["bt_kc"] = state["bt_kc"].at[slot].set(kc_pages)
+        if cfg.chai.share_values:
+            # V codes move scale-less, mirroring the unified layout's
+            # vg -> vg_chai gather (int8 codes are reinterpreted).
+            vd_pages = kc_pages if vc_pages is None else vc_pages
+            bt_row = jax.lax.dynamic_index_in_dim(
+                state["bt_vg"], slot, 0, keepdims=False)
+            rows = state["kvp"][:, bt_row]
+            g = jnp.take_along_axis(rows, reps[:, None, :, None, None],
+                                    axis=2)
+            state["cp"] = state["cp"].at[:, vd_pages].set(
+                g.astype(state["cp"].dtype))
+            state["bt_vc"] = state["bt_vc"].at[slot].set(vd_pages)
+            state["bt_vg"] = state["bt_vg"].at[slot].set(null_row)
+    state["phase"] = state["phase"].at[slot].set(PHASE_STEADY)
+    return state
+
+
+def reset_slot_paged(state, slot):
+    """Paged retire: phase -> FREE, rewind ``pos``, null every block-table
+    row (the engine frees the physical pages host-side)."""
+    state = dict(state)
+    state["phase"] = state["phase"].at[slot].set(PHASE_FREE)
+    state["pos"] = state["pos"].at[slot].set(0)
+    for key in ("bt_kg", "bt_vg", "bt_kc", "bt_vc"):
+        if key in state:
+            state[key] = state[key].at[slot].set(
+                jnp.zeros((state[key].shape[1],), jnp.int32))
+    return state
+
+
+def paged_page_bytes(cfg: ModelConfig, page_size: int, *, kind: str):
+    """Bytes of ONE page (``page_size`` tokens x all global layers).
+
+    kind="dense": ``n_kv_heads`` rows (+ f32 scales under int8);
+    kind="chai": ``k_max`` clustered rows (+ scales)."""
+    if cfg.n_global_layers == 0:
+        return 0
+    if kind == "dense":
+        rows = cfg.n_kv_heads
+    else:
+        rows, _ = chai_widths(cfg)
+    int8 = cfg.kv_cache_dtype == "int8"
+    esize = 1 if int8 else jnp.dtype(cfg.dtype).itemsize
+    n = cfg.n_global_layers * rows * page_size * cfg.head_dim * esize
+    if int8:
+        n += cfg.n_global_layers * rows * page_size * 4      # f32 scales
+    return int(n)
+
+
+def paged_kv_bytes(cfg: ModelConfig, page_size: int, dense_in_use: int,
+                   chai_in_use: int = 0, *, batch: int = 0,
+                   max_seq: int = 0):
+    """ACTUAL allocated KV bytes of the paged layout: pages in use times
+    page bytes, plus the (non-paged) local ring caches. This is the
+    number the continuous engine reports — it falls when dense pages are
+    freed at compaction, unlike the unified layout's constant
+    dense+clustered residency."""
+    total = (dense_in_use * paged_page_bytes(cfg, page_size, kind="dense")
+             + chai_in_use * paged_page_bytes(cfg, page_size, kind="chai"))
+    if batch and cfg.n_local_layers:
+        w = min(cfg.window_size, max_seq)
+        dt = jnp.dtype(cfg.dtype).itemsize
+        total += int(2 * cfg.n_local_layers * batch * cfg.n_kv_heads
+                     * w * cfg.head_dim * dt)
+    return int(total)
 
 
 def kv_cache_bytes(cfg: ModelConfig, batch: int, seq: int, *,

@@ -14,6 +14,7 @@ ctx arrays may be shared across the batch (ndim without B) or per-request
 """
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
@@ -95,23 +96,45 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
     int8 = cfg.kv_cache_dtype == "int8"
     if int8:
         from repro.core.cache import dequant_rows, quant_rows
+    paged = "cp" in state
+    if paged:
+        from repro.core.cache import gather_pages
+        from repro.models.transformer import (_paged_write_rows,
+                                              paged_token_coords)
+        mask = functools.partial(_masked_rows, write_mask)
 
     # Clustered K cache update (k rows, not H).
-    kc = tree_index(state["kg_chai"], idxs["global"])   # (B, k, S, hd)
-    if int8:
-        kq, ks = quant_rows(k_rep)
-        kc = kc.at[ar, :, pos, :].set(
-            _masked_rows(write_mask, kq, kc[ar, :, pos, :]))
-        ksc = tree_index(state["kg_chai_scale"], idxs["global"])
-        ksc = ksc.at[ar, :, pos].set(
-            _masked_rows(write_mask, ks, ksc[ar, :, pos]))
-        kc_f = dequant_rows(kc, ksc)
+    if paged:
+        cp = tree_index(state["cp"], idxs["global"])      # (nP, k, page, hd)
+        page = cp.shape[2]
+        pk, row = paged_token_coords(state["bt_kc"], pos, page)
+        if int8:
+            kq, ks = quant_rows(k_rep)
+            cp = _paged_write_rows(cp, pk, row, kq, mask)
+            csc = tree_index(state["cp_scale"], idxs["global"])
+            csc = _paged_write_rows(csc, pk, row, ks, mask)
+            kc_f = dequant_rows(gather_pages(cp, state["bt_kc"]),
+                                gather_pages(csc, state["bt_kc"]))
+        else:
+            cp = _paged_write_rows(cp, pk, row, k_rep, mask)
+            kc_f = gather_pages(cp, state["bt_kc"])
+        s = kc_f.shape[2]
     else:
-        kc = kc.at[ar, :, pos, :].set(
-            _masked_rows(write_mask, k_rep.astype(kc.dtype),
-                         kc[ar, :, pos, :]))
-        kc_f = kc
-    s = kc.shape[2]
+        kc = tree_index(state["kg_chai"], idxs["global"])   # (B, k, S, hd)
+        if int8:
+            kq, ks = quant_rows(k_rep)
+            kc = kc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, kq, kc[ar, :, pos, :]))
+            ksc = tree_index(state["kg_chai_scale"], idxs["global"])
+            ksc = ksc.at[ar, :, pos].set(
+                _masked_rows(write_mask, ks, ksc[ar, :, pos]))
+            kc_f = dequant_rows(kc, ksc)
+        else:
+            kc = kc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, k_rep.astype(kc.dtype),
+                             kc[ar, :, pos, :]))
+            kc_f = kc
+        s = kc.shape[2]
 
     # V: full per-head (or clustered for the CHAI-QKV ablation).
     if share_v:
@@ -121,27 +144,48 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
         else:
             wv_r = jnp.take(p["wv"], reps, axis=1)
             v_new = jnp.einsum("bd,dke->bke", xn, wv_r)
-        vc = tree_index(state["vg_chai"], idxs["global"])
-        vc = vc.at[ar, :, pos, :].set(
-            _masked_rows(write_mask, v_new.astype(vc.dtype),
-                         vc[ar, :, pos, :]))
-        vc_f = vc
-    else:
-        v_new = jnp.einsum("bd,dhe->bhe", xn, p["wv"])
-        vc = tree_index(state["vg"], idxs["global"])
-        if int8:
-            vq, vs = quant_rows(v_new)
-            vc = vc.at[ar, :, pos, :].set(
-                _masked_rows(write_mask, vq, vc[ar, :, pos, :]))
-            vsc = tree_index(state["vg_scale"], idxs["global"])
-            vsc = vsc.at[ar, :, pos].set(
-                _masked_rows(write_mask, vs, vsc[ar, :, pos]))
-            vc_f = dequant_rows(vc, vsc)
+        if paged:
+            # Clustered V pages live in the same cp pool (scale-less,
+            # mirroring the unified vg_chai gather).
+            pv, vrow = paged_token_coords(state["bt_vc"], pos, page)
+            cp = _paged_write_rows(cp, pv, vrow, v_new, mask)
+            vc_f = gather_pages(cp, state["bt_vc"])
         else:
+            vc = tree_index(state["vg_chai"], idxs["global"])
             vc = vc.at[ar, :, pos, :].set(
                 _masked_rows(write_mask, v_new.astype(vc.dtype),
                              vc[ar, :, pos, :]))
             vc_f = vc
+    else:
+        v_new = jnp.einsum("bd,dhe->bhe", xn, p["wv"])
+        if paged:
+            vp = tree_index(state["kvp"], idxs["global"])
+            pv, vrow = paged_token_coords(state["bt_vg"], pos, page)
+            if int8:
+                vq, vs = quant_rows(v_new)
+                vp = _paged_write_rows(vp, pv, vrow, vq, mask)
+                vsp = tree_index(state["kvp_scale"], idxs["global"])
+                vsp = _paged_write_rows(vsp, pv, vrow, vs, mask)
+                vc_f = dequant_rows(gather_pages(vp, state["bt_vg"]),
+                                    gather_pages(vsp, state["bt_vg"]))
+            else:
+                vp = _paged_write_rows(vp, pv, vrow, v_new, mask)
+                vc_f = gather_pages(vp, state["bt_vg"])
+        else:
+            vc = tree_index(state["vg"], idxs["global"])
+            if int8:
+                vq, vs = quant_rows(v_new)
+                vc = vc.at[ar, :, pos, :].set(
+                    _masked_rows(write_mask, vq, vc[ar, :, pos, :]))
+                vsc = tree_index(state["vg_scale"], idxs["global"])
+                vsc = vsc.at[ar, :, pos].set(
+                    _masked_rows(write_mask, vs, vsc[ar, :, pos]))
+                vc_f = dequant_rows(vc, vsc)
+            else:
+                vc = vc.at[ar, :, pos, :].set(
+                    _masked_rows(write_mask, v_new.astype(vc.dtype),
+                                 vc[ar, :, pos, :]))
+                vc_f = vc
 
     scale = 1.0 / math.sqrt(hd)
     sc = jnp.einsum("bke,bkse->bks", q_rep.astype(jnp.float32),
@@ -162,17 +206,29 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
         out = jnp.einsum("bhs,bhsd->bhd", a_full, vc_f.astype(jnp.float32))
 
     state = dict(state)
-    state["kg_chai"] = tree_update(state["kg_chai"], idxs["global"], kc)
-    if int8:
-        state["kg_chai_scale"] = tree_update(state["kg_chai_scale"],
-                                             idxs["global"], ksc)
+    if paged:
+        state["cp"] = tree_update(state["cp"], idxs["global"], cp)
+        if int8:
+            state["cp_scale"] = tree_update(state["cp_scale"],
+                                            idxs["global"], csc)
         if not share_v:
-            state["vg_scale"] = tree_update(state["vg_scale"],
-                                            idxs["global"], vsc)
-    if share_v:
-        state["vg_chai"] = tree_update(state["vg_chai"], idxs["global"], vc)
+            state["kvp"] = tree_update(state["kvp"], idxs["global"], vp)
+            if int8:
+                state["kvp_scale"] = tree_update(state["kvp_scale"],
+                                                 idxs["global"], vsp)
     else:
-        state["vg"] = tree_update(state["vg"], idxs["global"], vc)
+        state["kg_chai"] = tree_update(state["kg_chai"], idxs["global"], kc)
+        if int8:
+            state["kg_chai_scale"] = tree_update(state["kg_chai_scale"],
+                                                 idxs["global"], ksc)
+            if not share_v:
+                state["vg_scale"] = tree_update(state["vg_scale"],
+                                                idxs["global"], vsc)
+        if share_v:
+            state["vg_chai"] = tree_update(state["vg_chai"], idxs["global"],
+                                           vc)
+        else:
+            state["vg"] = tree_update(state["vg"], idxs["global"], vc)
     return out.astype(xn.dtype), state
 
 
@@ -213,6 +269,7 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
     k_new = _rope1(k_new, pos, cfg.rope_theta)
     v_new = jnp.einsum("bd,dke->bke", xn, p["wv"])
 
+    paged = not local and "kvp" in state
     if local:
         w = state["kl"].shape[3]
         kc = tree_index(state["kl"], idxs["local"])
@@ -226,6 +283,15 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
                          vc[ar, :, slot, :]))
         kv_pos = jax.vmap(lambda pp: attn_mod.ring_positions(pp + 1, w))(pos)
         window = cfg.window_size
+    elif paged:
+        # GQA paged: K and V stay page-resident in the dense pool for the
+        # whole request (no clustered cache — compute-only saving).
+        from repro.models.transformer import _paged_global_update
+        state, kc, vc = _paged_global_update(state, idxs, k_new, v_new,
+                                             pos, write_mask, cfg)
+        s = kc.shape[2]
+        kv_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        window = 0
     else:
         s = state["kg"].shape[3]
         kc = tree_index(state["kg"], idxs["global"])
@@ -260,7 +326,7 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
     if local:
         state["kl"] = tree_update(state["kl"], idxs["local"], kc)
         state["vl"] = tree_update(state["vl"], idxs["local"], vc)
-    else:
+    elif not paged:     # paged: _paged_global_update already committed
         state["kg"] = tree_update(state["kg"], idxs["global"], kc)
         state["vg"] = tree_update(state["vg"], idxs["global"], vc)
     return out.astype(xn.dtype), state

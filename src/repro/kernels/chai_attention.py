@@ -17,6 +17,12 @@ Why not one fused kernel: normalized A for head h requires the rep's full
 row max/denominator, which is only known after the last S tile; splitting at
 the (B, R, S) score tensor costs one extra HBM round-trip of size S*R —
 ~R/(H*hd) of the cache traffic (<1%) — and keeps every kernel single-pass.
+
+Paged variants (``paged_chai_qk`` / ``paged_chai_av``): K/V live in page
+pools addressed through scalar-prefetched int32 block tables (one S-tile ==
+one page), composing the ``chai_av`` head->cluster gather with the
+paged-attention page gather — the serving engine's clustered pages stream
+straight from the ``PagePool`` layout without densification.
 """
 from __future__ import annotations
 
@@ -103,6 +109,58 @@ def row_softmax(scores, *, interpret=None):
         out_shape=jax.ShapeDtypeStruct((b, r, s), jnp.float32),
         interpret=interpret,
     )(scores)
+
+
+# ------------------------------------------------------- paged QK ---------
+def _paged_qk_kernel(pos_ref, bt_ref, q_ref, k_ref, o_ref, *, scale, page,
+                     window):
+    b = pl.program_id(0)
+    s = pl.program_id(2)               # logical page index
+    q = q_ref[0, 0, :].astype(jnp.float32)[None, :]        # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (page, hd)
+    sc = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * scale
+    idx = s * page + jax.lax.broadcasted_iota(jnp.int32, (page, 1), 0)
+    pos = pos_ref[b]
+    valid = idx <= pos
+    if window:
+        valid &= (pos - idx) < window
+    o_ref[0, 0, :] = jnp.where(valid, sc, NEG_INF)[:, 0]
+
+
+def paged_chai_qk(q_rep, k_pool, bt, pos, *, reps_per_group=1, window=0,
+                  interpret=None):
+    """Paged clustered scores. q_rep: (B, R, hd); k_pool: (nP, KV, page,
+    hd) page pool with KV * reps_per_group == R (MHA clustered pool:
+    KV == k_max, reps_per_group == 1); bt: (B, P) int32 block table;
+    pos: (B,). Returns raw scores (B, R, P*page) — feed ``row_softmax``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, r_total, hd = q_rep.shape
+    page = k_pool.shape[2]
+    n_pages = bt.shape[1]
+    s = n_pages * page
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_paged_qk_kernel, scale=scale, page=page,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, r_total, n_pages),
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda bb, rr, ss, pos_r, bt_r:
+                             (bb, rr, 0)),
+                pl.BlockSpec((1, 1, page, hd),
+                             lambda bb, rr, ss, pos_r, bt_r:
+                             (bt_r[bb, ss], rr // reps_per_group, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, page),
+                                   lambda bb, rr, ss, pos_r, bt_r:
+                                   (bb, rr, ss)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, r_total, s), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), bt.astype(jnp.int32), q_rep, k_pool)
 
 
 # ------------------------------------------------------- int8 QK ----------
@@ -209,3 +267,50 @@ def chai_av(a, v_cache, h2c, *, ts=512, interpret=None):
         out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
         interpret=interpret,
     )(h2c.astype(jnp.int32), a, v_cache)
+
+
+# ------------------------------------------------------- paged AV ---------
+def _paged_av_kernel(h2c_ref, bt_ref, a_ref, v_ref, o_ref, acc_scr, *,
+                     n_tiles):
+    # Same accumulate as _av_kernel; both scalar refs are consumed by the
+    # index_maps (A row via h2c, V page via the block table).
+    _av_kernel(h2c_ref, a_ref, v_ref, o_ref, acc_scr, n_tiles=n_tiles)
+
+
+def paged_chai_av(a, v_pool, bt_v, h2c, *, interpret=None):
+    """Paged broadcast-and-accumulate: head h reads the A row of its
+    cluster (scalar-prefetched ``h2c``) and its own V rows from the page
+    pool (scalar-prefetched block table) — the two gathers compose in
+    one index_map pair. a: (B, R, S) normalized clustered scores with
+    S == P * page; v_pool: (nP, H, page, hd); bt_v: (B, P) int32;
+    h2c: (B, H) or (H,) int32. Returns (B, H, hd) fp32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    _, h, page, hd = v_pool.shape
+    b = a.shape[0]
+    if h2c.ndim == 1:
+        h2c = jnp.broadcast_to(h2c, (b, h))
+    n_pages = bt_v.shape[1]
+    assert a.shape[2] == n_pages * page, (a.shape, n_pages, page)
+    kernel = functools.partial(_paged_av_kernel, n_tiles=n_pages)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, h, n_pages),
+            in_specs=[
+                pl.BlockSpec((1, 1, page),
+                             lambda bb, hh, ss, h2c_r, bt_r:
+                             (bb, h2c_r[bb, hh], ss)),
+                pl.BlockSpec((1, 1, page, hd),
+                             lambda bb, hh, ss, h2c_r, bt_r:
+                             (bt_r[bb, ss], hh, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, hd),
+                                   lambda bb, hh, ss, h2c_r, bt_r:
+                                   (bb, hh, 0)),
+            scratch_shapes=[pltpu.VMEM((1, hd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+        interpret=interpret,
+    )(h2c.astype(jnp.int32), bt_v.astype(jnp.int32), a, v_pool)

@@ -1,9 +1,16 @@
-"""Pallas TPU flash attention: decode (one query token) and prefill.
+"""Pallas TPU flash attention: decode (one query token), paged decode, and
+prefill.
 
 Decode: grid (B, H, S/Ts), online-softmax carried in VMEM scratch across the
 sequentially-iterated S-tile axis; K/V stream HBM->VMEM via BlockSpecs; the
 GQA group map (h -> h // q_per_kv) is a static index_map. Valid-length
 masking uses a scalar-prefetched per-example ``pos`` vector.
+
+Paged decode: same online softmax, but K/V live in a shared page pool
+(nP, KV, page, hd) and each slot's pages are located through
+scalar-prefetched int32 block tables — the tables drive the K/V BlockSpec
+index_maps, so the pool pages stream HBM->VMEM exactly like dense tiles
+(the paged-attention idiom; one S-tile == one page).
 
 Prefill: grid (B, H, Tq/Tb, S/Ts) with causal block skipping.
 """
@@ -105,6 +112,96 @@ def flash_decode(q, k_cache, v_cache, pos, *, window=0, ts=512,
         out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
         interpret=interpret,
     )(pos.astype(jnp.int32), q, k_cache, v_cache)
+
+
+# ------------------------------------------------------------ paged decode
+def _paged_decode_kernel(pos_ref, btk_ref, btv_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *, scale, window,
+                         page, n_pages):
+    b = pl.program_id(0)
+    s = pl.program_id(2)               # logical page index
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)[None, :]          # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (page, hd)
+    sc = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * scale
+    idx = s * page + jax.lax.broadcasted_iota(jnp.int32, (page, 1), 0)
+    pos = pos_ref[b]
+    valid = idx <= pos
+    if window:
+        valid &= (pos - idx) < window
+    sc = jnp.where(valid, sc, NEG_INF)                       # (page, 1)
+
+    m_prev = m_scr[0, 0]
+    m_new = jnp.maximum(jnp.maximum(m_prev, jnp.max(sc)), -1e30)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(sc - m_new)
+    l_new = l_scr[0, 0] * alpha + jnp.sum(p)
+    v = v_ref[0, 0].astype(jnp.float32)                      # (page, hd)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.T, v, preferred_element_type=jnp.float32)          # (1, hd)
+    m_scr[0, 0] = m_new
+    l_scr[0, 0] = l_new
+
+    @pl.when(s == n_pages - 1)
+    def _fin():
+        o_ref[0, 0, :] = (acc_scr[0, :]
+                          / jnp.maximum(l_scr[0, 0], 1e-37)).astype(
+                              o_ref.dtype)
+
+
+def paged_decode(q, kv_pool, bt_k, bt_v, pos, *, window=0, interpret=None):
+    """Paged flash decode. q: (B, H, hd); kv_pool: (nP, KV, page, hd)
+    shared K/V page pool; bt_k/bt_v: (B, P) int32 block tables (a slot's
+    logical page j lives in physical page bt[b, j]; null entries point at
+    the reserved page 0 and are masked by ``pos``); pos: (B,) int32.
+    Logical sequence length is P * page. Returns (B, H, hd) fp32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h, hd = q.shape
+    n_kv, page = kv_pool.shape[1], kv_pool.shape[2]
+    n_pages = bt_k.shape[1]
+    assert bt_v.shape == bt_k.shape == (b, n_pages)
+    qpk = h // n_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (b, h, n_pages)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               window=window, page=page, n_pages=n_pages)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, hd),
+                             lambda bb, hh, ss, pos_r, btk_r, btv_r:
+                             (bb, hh, 0)),
+                pl.BlockSpec((1, 1, page, hd),
+                             lambda bb, hh, ss, pos_r, btk_r, btv_r:
+                             (btk_r[bb, ss], hh // qpk, 0, 0)),
+                pl.BlockSpec((1, 1, page, hd),
+                             lambda bb, hh, ss, pos_r, btk_r, btv_r:
+                             (btv_r[bb, ss], hh // qpk, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, hd),
+                                   lambda bb, hh, ss, pos_r, btk_r, btv_r:
+                                   (bb, hh, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), bt_k.astype(jnp.int32), bt_v.astype(jnp.int32),
+      q, kv_pool, kv_pool)
 
 
 # ------------------------------------------------------------------ prefill

@@ -47,6 +47,32 @@ def chai_decode_attention(q_rep, k_cache, v_cache, h2c, pos, *,
     return ck.chai_av(a, v_cache, h2c, ts=ts, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, kv_pool, bt_k, bt_v, pos, *, window=0,
+                           interpret=None):
+    """Paged flash decode over a block-table page pool. q: (B, H, hd);
+    kv_pool: (nP, KV, page, hd); bt_k/bt_v: (B, P) int32; pos: (B,).
+    Returns (B, H, hd) fp32."""
+    return fk.paged_decode(q, kv_pool, bt_k, bt_v, pos, window=window,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("reps_per_group", "window", "interpret"))
+def paged_chai_decode_attention(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
+                                pos, *, reps_per_group=1, window=0,
+                                interpret=None):
+    """The paper's decode op over the serving engine's paged layout.
+    q_rep: (B, R, hd); k_pool: (nP, KV, page, hd) clustered pages (MHA:
+    KV == k_max); v_pool: (nP, H, page, hd) per-head V pages; bt_k/bt_v:
+    (B, P) int32 block tables; h2c: (B, H) or (H,). Returns (B, H, hd)."""
+    sc = ck.paged_chai_qk(q_rep, k_pool, bt_k, pos,
+                          reps_per_group=reps_per_group, window=window,
+                          interpret=interpret)
+    a = ck.row_softmax(sc, interpret=interpret)
+    return ck.paged_chai_av(a, v_pool, bt_v, h2c, interpret=interpret)
+
+
 def decode_flop_estimate(b, h, r, s, hd):
     """Analytic decode-attention FLOPs: clustered scores + full AV."""
     scores = 2.0 * b * r * s * hd

@@ -84,3 +84,41 @@ def chai_av_ref(a, v_cache, h2c):
 def chai_decode_ref(q_rep, k_cache, v_cache, h2c, pos, *, reps_per_group=0):
     a = chai_scores_ref(q_rep, k_cache, pos, reps_per_group=reps_per_group)
     return chai_av_ref(a, v_cache, h2c)
+
+
+# -------------------------------------------------------------- paged ------
+def gather_pages_ref(pool, bt):
+    """Densify a page pool through block tables. pool: (nP, rows, page,
+    hd); bt: (B, P) int32 -> (B, rows, P*page, hd). Null-page entries
+    yield garbage rows that the ``pos`` masks of the oracles below hide —
+    the same contract the paged kernels rely on. Reuses the production
+    gather (its correctness is pinned independently by the
+    scatter-then-compare kernel tests); the oracle value here is the
+    dense attention math it feeds."""
+    from repro.core.cache import gather_pages
+    return gather_pages(pool, bt)
+
+
+def paged_decode_ref(q, kv_pool, bt_k, bt_v, pos, *, window=0):
+    """Oracle for ``paged_decode``: densify then flash-decode."""
+    return flash_decode_ref(q, gather_pages_ref(kv_pool, bt_k),
+                            gather_pages_ref(kv_pool, bt_v), pos,
+                            window=window)
+
+
+def paged_chai_scores_ref(q_rep, k_pool, bt, pos, *, reps_per_group=0):
+    """Oracle for ``paged_chai_qk`` + ``row_softmax``."""
+    return chai_scores_ref(q_rep, gather_pages_ref(k_pool, bt), pos,
+                           reps_per_group=reps_per_group)
+
+
+def paged_chai_av_ref(a, v_pool, bt_v, h2c):
+    """Oracle for ``paged_chai_av``."""
+    return chai_av_ref(a, gather_pages_ref(v_pool, bt_v), h2c)
+
+
+def paged_chai_decode_ref(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
+                          reps_per_group=0):
+    a = paged_chai_scores_ref(q_rep, k_pool, bt_k, pos,
+                              reps_per_group=reps_per_group)
+    return paged_chai_av_ref(a, v_pool, bt_v, h2c)

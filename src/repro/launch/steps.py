@@ -171,3 +171,50 @@ def make_slot_reset(cfg: ModelConfig):
     def reset(state, slot):
         return chai_cache.reset_slot(state, slot)
     return reset
+
+
+# ---------------------------------------------------------------------------
+# Paged KV layout (continuous batching over a block-table page pool)
+# ---------------------------------------------------------------------------
+
+def make_paged_slot_prefill(cfg: ModelConfig, max_seq: int, *,
+                            moe_impl="capacity", unroll=False):
+    """Paged ``make_slot_prefill``: the batch=1 forward fills a dense mini
+    state, which is then scattered into the slot's freshly allocated
+    pages (``kg_pages``/``vg_pages``: (P,) int32, null-padded). Donate
+    the state when jitting; shape-specialized per prompt length."""
+    def slot_prefill(params, tokens, state, slot, kg_pages, vg_pages):
+        mini = tfm.init_decode_state(cfg, 1, max_seq)
+        logits, mini, _ = tfm.forward_fullseq(
+            params, cfg, tokens, state=mini, logits_slice="last",
+            moe_impl=moe_impl, unroll=unroll)
+        state = chai_cache.insert_slot_paged(state, mini, slot, kg_pages,
+                                             vg_pages)
+        return logits[:, 0], state
+
+    return slot_prefill
+
+
+def make_paged_slot_cluster(cfg: ModelConfig, identify_fn):
+    """Paged CLUSTER transition: identify membership, scatter it into the
+    batched ctx, gather the slot's representative K rows from its dense
+    pages into the clustered pages, and null the dense block-table row —
+    the engine frees those dense pages host-side right after this jit."""
+    def cluster_slot(state, ctx, slot, kc_pages, vc_pages):
+        from repro.core import clustering
+        scores = jax.lax.dynamic_slice_in_dim(state["chai_scores"], slot, 1,
+                                              axis=1)[:, 0]
+        slot_ctx = clustering.identify_membership_slot(scores, cfg,
+                                                       identify_fn)
+        ctx = clustering.update_ctx_slot(ctx, slot_ctx, slot)
+        state = chai_cache.compact_kv_slot_paged(state, slot_ctx, cfg, slot,
+                                                 kc_pages, vc_pages)
+        return state, ctx
+
+    return cluster_slot
+
+
+def make_paged_slot_reset(cfg: ModelConfig):
+    def reset(state, slot):
+        return chai_cache.reset_slot_paged(state, slot)
+    return reset

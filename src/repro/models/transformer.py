@@ -621,6 +621,61 @@ def _masked_rows(write_mask, new, old):
     return jnp.where(m, new, old)
 
 
+def paged_token_coords(bt, pos, page):
+    """(physical page, in-page row) for each slot's current write position.
+    bt: (B, P) block table; pos: (B,). Unallocated logical pages map to
+    the null sink page 0 — writes there are harmless by construction."""
+    b = pos.shape[0]
+    return bt[jnp.arange(b), pos // page], pos % page
+
+
+def _paged_write_rows(pool, page_idx, row, new, old_masker):
+    """Commit one token's rows into pool pages. pool: (nP, rows, page, hd)
+    or (nP, rows, page); page_idx/row: (B,)."""
+    if pool.ndim == 4:
+        old = pool[page_idx, :, row, :]
+        return pool.at[page_idx, :, row, :].set(
+            old_masker(new.astype(pool.dtype), old))
+    old = pool[page_idx, :, row]
+    return pool.at[page_idx, :, row].set(old_masker(new, old))
+
+
+def _paged_global_update(state, idxs, k, v, pos, write_mask, cfg):
+    """Paged-layout global-cache decode update: write the new K/V rows
+    into each slot's current page of the shared dense pool, then return
+    dense logical views (B, KV, S, hd) gathered through the block tables
+    — the attention math downstream is identical to the dense layout's.
+    """
+    from repro.core.cache import dequant_rows, gather_pages, quant_rows
+    pool = tree_index(state["kvp"], idxs["global"])   # (nP, KV, page, hd)
+    page = pool.shape[2]
+    pk, row = paged_token_coords(state["bt_kg"], pos, page)
+    pv, _ = paged_token_coords(state["bt_vg"], pos, page)
+    mask = functools.partial(_masked_rows, write_mask)
+    state = dict(state)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = quant_rows(k)
+        vq, vs = quant_rows(v)
+        pool = _paged_write_rows(pool, pk, row, kq, mask)
+        pool = _paged_write_rows(pool, pv, row, vq, mask)
+        spool = tree_index(state["kvp_scale"], idxs["global"])
+        spool = _paged_write_rows(spool, pk, row, ks, mask)
+        spool = _paged_write_rows(spool, pv, row, vs, mask)
+        state["kvp_scale"] = tree_update(state["kvp_scale"],
+                                         idxs["global"], spool)
+        kc_f = dequant_rows(gather_pages(pool, state["bt_kg"]),
+                            gather_pages(spool, state["bt_kg"]))
+        vc_f = dequant_rows(gather_pages(pool, state["bt_vg"]),
+                            gather_pages(spool, state["bt_vg"]))
+    else:
+        pool = _paged_write_rows(pool, pk, row, k, mask)
+        pool = _paged_write_rows(pool, pv, row, v, mask)
+        kc_f = gather_pages(pool, state["bt_kg"])
+        vc_f = gather_pages(pool, state["bt_vg"])
+    state["kvp"] = tree_update(state["kvp"], idxs["global"], pool)
+    return state, kc_f, vc_f
+
+
 def _plain_decode_attention(xn, p, cfg, state, idxs, *, local,
                             write_mask=None):
     """MHA/GQA decode for one token. xn: (B, d). Returns ((B, H, hd), state).
@@ -649,6 +704,14 @@ def _plain_decode_attention(xn, p, cfg, state, idxs, *, local,
         state["kl"] = tree_update(state["kl"], idxs["local"], kc)
         state["vl"] = tree_update(state["vl"], idxs["local"], vc)
         window = cfg.window_size
+    elif "kvp" in state:
+        # Paged layout: same math over block-table-gathered views.
+        state, kc_f, vc_f = _paged_global_update(state, idxs, k, v, pos,
+                                                 write_mask, cfg)
+        s = kc_f.shape[2]
+        kv_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        window = 0
+        kc, vc = kc_f, vc_f
     else:
         s = state["kg"].shape[3]
         kc = tree_index(state["kg"], idxs["global"])

@@ -21,10 +21,24 @@ Two schedulers (``EngineConfig.scheduler``):
   decode step is one jit that routes each slot to the MHA or CHAI
   attention path according to the per-slot ``phase`` vector
   (mask-and-select, static shapes); when no slot is mid-transition the
-  engine host-dispatches to the cheaper all-MHA / all-CHAI jits. The
-  cache is the *unified per-slot KV layout*
-  (``repro.core.cache.unified_state_structs``): dense ``kg``/``vg`` and
-  clustered ``kg_chai`` buffers resident side by side.
+  engine host-dispatches to the cheaper all-MHA / all-CHAI jits.
+
+  Two KV layouts (``EngineConfig.kv_layout``):
+
+  - ``"paged"`` (default) — block-table paged KV
+    (``repro.core.cache.paged_state_structs``). Admission is
+    page-budget-based (a request is admitted only when the pools cover
+    its prompt + generation headroom), and the CLUSTER transition frees
+    the slot's dense K pages back to the ``PagePool`` the moment the
+    representative rows are gathered into clustered pages — steady-state
+    CHAI occupies less allocator memory than dense MHA, realizing the
+    paper's 21.4%-class saving in ``kv_bytes()`` rather than only
+    analytically. Mixed prompt/output lengths stop paying the
+    ``max_seq`` rectangle: a slot holds only the pages it needs.
+  - ``"dense"`` — the legacy *unified per-slot layout*
+    (``unified_state_structs``): dense ``kg``/``vg`` and clustered
+    ``kg_chai`` rectangles resident side by side (kept for parity
+    testing and as the lowering target for dense-only backends).
 
 * ``"cohort"`` — the legacy lockstep path, kept for A/B parity testing:
   requests admitted together move through phases together, with the
@@ -79,11 +93,24 @@ class Request:
 @dataclasses.dataclass
 class EngineConfig:
     batch_slots: int = 4               # slot-pool / cohort size (static)
-    max_seq: int = 256                 # KV capacity (static)
+    max_seq: int = 256                 # KV capacity per slot (static)
     greedy: bool = True
     scheduler: str = "continuous"      # "continuous" | "cohort"
     cohort_deadline_s: float = 120.0   # cohort straggler re-dispatch
     use_chai: bool = True
+    # -- KV layout (continuous scheduler only) --------------------------
+    # "paged": block-table page pool; a slot's dense K pages are FREED at
+    # compaction, so steady-state CHAI occupies less allocator memory
+    # than dense MHA (the paper's saving, realized). "dense": the legacy
+    # unified per-slot rectangles (dense + clustered resident together).
+    kv_layout: str = "paged"           # "paged" | "dense"
+    page_size: int = 16                # tokens per page (divides max_seq)
+    # Pool capacities in pages, INCLUDING the reserved null page 0.
+    # 0 = auto: worst case for batch_slots requests of max_seq tokens
+    # (admission is then never page-limited — shrink to exercise the
+    # page-budget admission path).
+    num_pages: int = 0                 # dense K/V pool
+    num_chai_pages: int = 0            # clustered pool (MHA+CHAI archs)
 
 
 class ServingEngine:
@@ -91,6 +118,7 @@ class ServingEngine:
         assert cfg.n_attn_layers > 0 or not ecfg.use_chai, \
             "CHAI needs attention layers"
         assert ecfg.scheduler in ("continuous", "cohort"), ecfg.scheduler
+        assert ecfg.kv_layout in ("paged", "dense"), ecfg.kv_layout
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -102,13 +130,38 @@ class ServingEngine:
 
         chai_on = ecfg.use_chai and cfg.chai.enabled and cfg.k_max > 0
         self.chai_on = chai_on
+        # Paged layout: continuous scheduler over global-attention KV
+        # (archs without global layers have nothing to page).
+        self.paged = (ecfg.scheduler == "continuous"
+                      and ecfg.kv_layout == "paged"
+                      and cfg.n_global_layers > 0)
+        # MHA+CHAI archs carry the clustered page pool.
+        self.chai_clustered = (self.paged and chai_on and cfg.is_mha)
+        self.dense_pool = None
+        self.chai_pool = None
+        # Paged allocated-bytes trajectory (benchmarks/tests). Bounded:
+        # recording stops at _HISTORY_MAX entries (the PREFILL->STEADY
+        # head is what the benches read); the peak is a running int.
+        self.kv_bytes_history: List[dict] = []
+        self._kv_peak = 0
+        if self.paged:
+            assert s % ecfg.page_size == 0, (s, ecfg.page_size)
+            p_slot = s // ecfg.page_size
+            self._slot_pages_max = p_slot
+            n_dense = ecfg.num_pages or (2 * b * p_slot + 1)
+            self.dense_pool = chai_cache.PagePool(n_dense, ecfg.page_size)
+            if self.chai_clustered:
+                share = 2 if cfg.chai.share_values else 1
+                n_chai = ecfg.num_chai_pages or (share * b * p_slot + 1)
+                self.chai_pool = chai_cache.PagePool(n_chai, ecfg.page_size)
         # jax.jit wrappers are lazy (no tracing until the first call), so
         # both schedulers' steps are declared here unconditionally.
         self._mha_step = jax.jit(steps_mod.make_serve_step(cfg, chai=False),
                                  donate_argnums=(2,))
         self._prefill = jax.jit(steps_mod.make_serve_prefill(cfg, b, s))
-        self._reset_slot = jax.jit(steps_mod.make_slot_reset(cfg),
-                                   donate_argnums=(0,))
+        reset_maker = (steps_mod.make_paged_slot_reset if self.paged
+                       else steps_mod.make_slot_reset)
+        self._reset_slot = jax.jit(reset_maker(cfg), donate_argnums=(0,))
         self._slot_prefills: dict = {}       # prompt length -> jit
         self._cluster_slot = None            # built lazily (identify hook)
         if chai_on:
@@ -128,6 +181,12 @@ class ServingEngine:
         """Enqueue a request. ``arrival_delay`` (seconds from now) models
         open-loop arrivals: the scheduler will not admit the request
         before its arrival time."""
+        if len(prompt) + max_new_tokens > self.ecfg.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_seq "
+                f"({self.ecfg.max_seq}): the KV capacity (dense slot or "
+                f"page budget) cannot hold the request")
         req = Request(uid=uid if uid is not None else len(self.queue)
                       + len(self.done),
                       prompt=np.asarray(prompt, np.int32),
@@ -148,9 +207,10 @@ class ServingEngine:
     def _slot_prefill_fn(self, t: int):
         fn = self._slot_prefills.get(t)
         if fn is None:
-            fn = jax.jit(
-                steps_mod.make_slot_prefill(self.cfg, self.ecfg.max_seq),
-                donate_argnums=(2,))
+            maker = (steps_mod.make_paged_slot_prefill if self.paged
+                     else steps_mod.make_slot_prefill)
+            fn = jax.jit(maker(self.cfg, self.ecfg.max_seq),
+                         donate_argnums=(2,))
             self._slot_prefills[t] = fn
         return fn
 
@@ -158,20 +218,88 @@ class ServingEngine:
         # Built on first use so a monkeypatched ``_identify`` hook (tests,
         # CHAI-static ablations) is honored.
         if self._cluster_slot is None:
-            self._cluster_slot = jax.jit(
-                steps_mod.make_slot_cluster(self.cfg, self._identify),
-                donate_argnums=(0, 1))
+            maker = (steps_mod.make_paged_slot_cluster if self.paged
+                     else steps_mod.make_slot_cluster)
+            self._cluster_slot = jax.jit(maker(self.cfg, self._identify),
+                                         donate_argnums=(0, 1))
         return self._cluster_slot
+
+    # -- paged-pool bookkeeping (host side) --------------------------------
+    def _pages_for(self, req) -> int:
+        """Logical pages a request can touch over its lifetime."""
+        n = chai_cache.pages_needed(
+            len(req.prompt) + req.max_new_tokens, self.ecfg.page_size)
+        return min(n, self._slot_pages_max)
+
+    def _try_alloc(self, req):
+        """Page-budget admission: allocate the request's dense K + V pages
+        (and reserve its clustered pages, so the CLUSTER transition can
+        never deadlock mid-flight). Returns a page dict or None if the
+        pools cannot cover it yet."""
+        n = self._pages_for(req)
+        chai_n = n * (2 if self.cfg.chai.share_values else 1) \
+            if self.chai_clustered else 0
+        if self.dense_pool.free_pages < 2 * n:
+            return None
+        if chai_n and self.chai_pool.free_pages < chai_n:
+            return None
+        pages = {"kg": self.dense_pool.alloc(n),
+                 "vg": self.dense_pool.alloc(n)}
+        if self.chai_clustered:
+            pages["kc"] = self.chai_pool.alloc(n)
+            if self.cfg.chai.share_values:
+                pages["vc"] = self.chai_pool.alloc(n)
+        return pages
+
+    def _free_pages(self, pages: dict):
+        for key, pool in (("kg", self.dense_pool), ("vg", self.dense_pool),
+                          ("kc", self.chai_pool), ("vc", self.chai_pool)):
+            if key in pages:
+                pool.free(pages.pop(key))
+
+    def _page_vec(self, pages):
+        """Null-padded (P,) int32 device vector of a page list."""
+        vec = np.zeros((self._slot_pages_max,), np.int32)
+        vec[:len(pages)] = pages
+        return jnp.asarray(vec)
+
+    _HISTORY_MAX = 1 << 16
+
+    def _record_kv_bytes(self, phases=None):
+        bytes_now = self.kv_bytes()
+        self._kv_peak = max(self._kv_peak, bytes_now)
+        if len(self.kv_bytes_history) >= self._HISTORY_MAX:
+            return
+        rec = {
+            "step": self.steps_executed,
+            "kv_bytes": bytes_now,
+            "dense_pages": self.dense_pool.pages_in_use,
+            "chai_pages": (self.chai_pool.pages_in_use
+                           if self.chai_pool else 0),
+        }
+        if phases is not None:
+            rec["n_warmup"] = int((phases == chai_cache.PHASE_WARMUP).sum())
+            rec["n_steady"] = int((phases == chai_cache.PHASE_STEADY).sum())
+        self.kv_bytes_history.append(rec)
 
     def _run_continuous(self):
         cfg, ecfg = self.cfg, self.ecfg
         b = ecfg.batch_slots
         warm = cfg.chai.warmup_tokens if self.chai_on else 0
-        state = chai_cache.init_unified_state(cfg, b, ecfg.max_seq,
-                                              chai=self.chai_on)
+        if self.paged:
+            state = chai_cache.init_paged_state(
+                cfg, b, ecfg.max_seq, page_size=ecfg.page_size,
+                dense_pages=self.dense_pool.num_pages,
+                chai_pages=(self.chai_pool.num_pages if self.chai_pool
+                            else 0),
+                chai=self.chai_on)
+        else:
+            state = chai_cache.init_unified_state(cfg, b, ecfg.max_seq,
+                                                  chai=self.chai_on)
         ctx = clustering.init_batched_ctx(cfg, b) if self.chai_on else None
         slot_req: List[Optional[Request]] = [None] * b
         slot_count = [0] * b            # tokens generated this admission
+        slot_pages: List[dict] = [{} for _ in range(b)]   # paged: page ids
         next_tok = np.zeros((b,), np.int32)   # host mirror
         next_tok_dev = jnp.zeros((b,), jnp.int32)
         phases = np.full((b,), chai_cache.PHASE_FREE, np.int32)
@@ -184,22 +312,39 @@ class ServingEngine:
             self.done.append(r)
             slot_req[i] = None
             phases[i] = chai_cache.PHASE_FREE
-            return self._reset_slot(state, jnp.int32(i))
+            new_state = self._reset_slot(state, jnp.int32(i))
+            if self.paged:      # block tables are nulled; pages go back
+                self._free_pages(slot_pages[i])
+            return new_state
 
         while self.queue or any(r is not None for r in slot_req):
             now = time.time()
-            # ---- admit: fill free slots from the arrived FIFO prefix ----
+            # ---- admit: fill free slots from the arrived FIFO prefix,
+            # while the page budget covers prompt + generation headroom ----
             admitted = False
+            blocked_on_pages = False
             for i in range(b):
                 if slot_req[i] is not None or not self.queue:
                     continue
                 if self.queue[0].t_arrival > now:
                     break
+                if self.paged:
+                    pages = self._try_alloc(self.queue[0])
+                    if pages is None:   # FIFO holds until pages free up
+                        blocked_on_pages = True
+                        break
+                    slot_pages[i] = pages
                 req = self.queue.popleft()
                 phases[i] = chai_cache.PHASE_PREFILL
                 toks = jnp.asarray(req.prompt[None, :])
-                logits, state = self._slot_prefill_fn(len(req.prompt))(
-                    self.params, toks, state, jnp.int32(i))
+                if self.paged:
+                    logits, state = self._slot_prefill_fn(len(req.prompt))(
+                        self.params, toks, state, jnp.int32(i),
+                        self._page_vec(slot_pages[i]["kg"]),
+                        self._page_vec(slot_pages[i]["vg"]))
+                else:
+                    logits, state = self._slot_prefill_fn(len(req.prompt))(
+                        self.params, toks, state, jnp.int32(i))
                 tok = int(np.asarray(self._sample(logits))[0])
                 req.t_first_token = time.time()
                 req.generated.append(tok)
@@ -215,19 +360,52 @@ class ServingEngine:
             active = [i for i in range(b) if slot_req[i] is not None]
             if not active:
                 if self.queue:      # open-loop idle: wait for next arrival
+                    head = self.queue[0]
+                    if blocked_on_pages:
+                        # The failed _try_alloc ran with the engine idle
+                        # (no retire can intervene between the attempt
+                        # and here), so every page was free: the request
+                        # never fits. Name the pool that cannot cover it.
+                        n = self._pages_for(head)
+                        if self.dense_pool.free_pages < 2 * n:
+                            raise MemoryError(
+                                f"request uid={head.uid} needs {2 * n} "
+                                f"dense pages; pool capacity "
+                                f"{self.dense_pool.capacity}")
+                        share = 2 if self.cfg.chai.share_values else 1
+                        raise MemoryError(
+                            f"request uid={head.uid} needs {n * share} "
+                            f"clustered pages; pool capacity "
+                            f"{self.chai_pool.capacity}")
                     time.sleep(max(1e-4,
                                    self.queue[0].t_arrival - time.time()))
                     continue
                 break
 
-            # ---- cluster + compact slots whose warmup just completed ----
+            # ---- cluster + compact slots whose warmup just completed;
+            # paged: the slot's dense K pages return to the pool here ----
             if self.chai_on:
                 for i in active:
                     if (slot_count[i] == warm + 1
                             and phases[i] == chai_cache.PHASE_WARMUP):
                         phases[i] = chai_cache.PHASE_CLUSTER
-                        state, ctx = self._cluster_fn()(state, ctx,
-                                                        jnp.int32(i))
+                        if self.paged:
+                            kc_vec = self._page_vec(
+                                slot_pages[i].get("kc", []))
+                            vc_vec = self._page_vec(
+                                slot_pages[i].get("vc", []))
+                            state, ctx = self._cluster_fn()(
+                                state, ctx, jnp.int32(i), kc_vec, vc_vec)
+                            if self.chai_clustered:
+                                self.dense_pool.free(
+                                    slot_pages[i].pop("kg"))
+                                if cfg.chai.share_values:
+                                    self.dense_pool.free(
+                                        slot_pages[i].pop("vg"))
+                            self._record_kv_bytes(phases)
+                        else:
+                            state, ctx = self._cluster_fn()(state, ctx,
+                                                            jnp.int32(i))
                         phases[i] = chai_cache.PHASE_STEADY
 
             # ---- one batched decode step; host-dispatch the cheapest jit
@@ -258,6 +436,8 @@ class ServingEngine:
                 slot_count[i] += 1
                 if len(r.generated) >= r.max_new_tokens:
                     state = retire(i)
+            if self.paged:
+                self._record_kv_bytes(phases)
         return self.done
 
     # -- cohort scheduler --------------------------------------------------
@@ -361,19 +541,52 @@ class ServingEngine:
 
     # -- metrics ------------------------------------------------------------
     def kv_bytes(self, *, chai: Optional[bool] = None):
-        """KV-cache bytes. With explicit ``chai=``: the paper's analytic
-        steady-state size (Fig 11 A/B comparisons). With no argument:
-        this engine's actual resident footprint — for the continuous
-        scheduler's unified layout that is dense + clustered buffers
-        side by side (MORE than plain MHA; the cohort scheduler frees
-        the dense cache at compaction and reports the analytic size)."""
+        """KV-cache bytes. With explicit ``chai=``: the paper's ANALYTIC
+        steady-state size (Fig 11 A/B comparisons) — hardware-independent,
+        unchanged by the engine's layout. With no argument: this engine's
+        actual footprint for the continuous scheduler —
+
+        * ``kv_layout="paged"``: allocated-page bytes right now (pages in
+          use x page bytes + the non-paged local rings). This falls when
+          a slot's dense pages are freed at compaction, so steady-state
+          CHAI reports LESS than the dense-MHA rectangle — the paper's
+          saving realized by the allocator. ``kv_bytes_history`` records
+          the trajectory; ``kv_bytes_capacity()`` gives the pools' total
+          reservation.
+        * ``kv_layout="dense"``: the unified layout's constant residency
+          (dense + clustered rectangles side by side — MORE than plain
+          MHA; this over-count is what the paged layout removes).
+        """
         if chai is None and self.ecfg.scheduler == "continuous":
+            if self.paged:
+                return chai_cache.paged_kv_bytes(
+                    self.cfg, self.ecfg.page_size,
+                    self.dense_pool.pages_in_use,
+                    self.chai_pool.pages_in_use if self.chai_pool else 0,
+                    batch=self.ecfg.batch_slots, max_seq=self.ecfg.max_seq)
             return chai_cache.unified_kv_bytes(
                 self.cfg, self.ecfg.batch_slots, self.ecfg.max_seq,
                 chai=self.chai_on)
         chai = self.chai_on if chai is None else chai
         return chai_cache.kv_cache_bytes(
             self.cfg, self.ecfg.batch_slots, self.ecfg.max_seq, chai=chai)
+
+    def kv_bytes_peak(self):
+        """Paged: high-water allocated bytes over the run (O(1): a
+        running maximum, not a history scan)."""
+        if not self.paged:
+            return 0
+        return max(self._kv_peak, self.kv_bytes())
+
+    def kv_bytes_capacity(self):
+        """Paged: bytes if every pool page were in use (the device-side
+        reservation); dense layouts: the resident footprint."""
+        if not self.paged:
+            return self.kv_bytes()
+        return chai_cache.paged_kv_bytes(
+            self.cfg, self.ecfg.page_size, self.dense_pool.capacity,
+            self.chai_pool.capacity if self.chai_pool else 0,
+            batch=self.ecfg.batch_slots, max_seq=self.ecfg.max_seq)
 
     def throughput(self):
         """Completed requests per second of engine wall time."""

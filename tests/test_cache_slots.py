@@ -112,6 +112,85 @@ def test_unified_kv_bytes_accounts_both_layouts(share_values, int8):
     assert chai_cache.unified_kv_bytes(cfg, b, s, chai=False) == dense
 
 
+@pytest.mark.parametrize("share_values", [False, True])
+@pytest.mark.parametrize("int8", [False, True])
+def test_compact_kv_slot_paged_matches_whole_batch(rng, share_values, int8):
+    """Paged per-slot compaction == the cohort path's whole-batch
+    ``compact_kv``: inserting each slot's dense rows into pages,
+    compacting, and densifying the clustered pages reproduces
+    ``kg_chai`` (and scales / ``vg_chai``) bit-for-bit — while the dense
+    block-table rows are nulled (the pages become freeable)."""
+    cfg = _mha_cfg(share_values, int8)
+    b, s, page = 3, 16, 8
+    n_slot = s // page
+    dense = init_decode_state(cfg, b, s)
+    for k in dense:
+        if k == "pos":
+            dense[k] = jnp.full((b,), s - 1, jnp.int32)
+        elif dense[k].dtype == jnp.int8:
+            dense[k] = jnp.asarray(
+                rng.integers(-127, 128, size=dense[k].shape), jnp.int8)
+        else:
+            dense[k] = jnp.asarray(rng.normal(size=dense[k].shape),
+                                   dense[k].dtype)
+    k_max, _ = clustering.chai_widths(cfg)
+    reps = jnp.asarray(
+        rng.integers(0, cfg.n_heads, size=(cfg.n_attn_layers, b, k_max)),
+        jnp.int32)
+
+    whole = chai_cache.compact_kv(dict(dense), {"reps": reps}, cfg)
+
+    n_chai = (2 if share_values else 1) * b * n_slot + 1
+    paged = chai_cache.init_paged_state(
+        cfg, b, s, page_size=page, dense_pages=2 * b * n_slot + 1,
+        chai_pages=n_chai)
+    dense_pool = chai_cache.PagePool(2 * b * n_slot + 1, page)
+    chai_pool = chai_cache.PagePool(n_chai, page)
+    pages = []
+    for i in range(b):
+        mini = {k: v[:, i:i + 1] if v.ndim > 1 else v[i:i + 1]
+                for k, v in dense.items()}
+        pg = {"kg": dense_pool.alloc(n_slot), "vg": dense_pool.alloc(n_slot),
+              "kc": chai_pool.alloc(n_slot)}
+        if share_values:
+            pg["vc"] = chai_pool.alloc(n_slot)
+        pages.append(pg)
+        paged = chai_cache.insert_slot_paged(
+            paged, mini, i, jnp.asarray(pg["kg"], jnp.int32),
+            jnp.asarray(pg["vg"], jnp.int32))
+    compact = jax.jit(chai_cache.compact_kv_slot_paged,
+                      static_argnames=("cfg",), donate_argnums=(0,))
+    for i in range(b):
+        paged = compact(paged, {"reps": reps[:, i]}, cfg, jnp.int32(i),
+                        jnp.asarray(pages[i]["kc"], jnp.int32),
+                        jnp.asarray(pages[i].get("vc", pages[i]["kc"]),
+                                    jnp.int32))
+
+    def densify(pool, bt):     # (nG, nP, rows, page[,hd]), (b, P) -> slot i
+        return np.concatenate(
+            [np.asarray(pool[:, bt[i]]).swapaxes(1, 2).reshape(
+                pool.shape[0], pool.shape[2], -1, *pool.shape[4:])
+             [:, None] for i in range(b)], axis=1)
+
+    bt_kc = np.asarray(paged["bt_kc"])
+    np.testing.assert_array_equal(np.asarray(whole["kg_chai"]),
+                                  densify(np.asarray(paged["cp"]), bt_kc))
+    if int8:
+        np.testing.assert_array_equal(
+            np.asarray(whole["kg_chai_scale"]),
+            densify(np.asarray(paged["cp_scale"]), bt_kc))
+    if share_values:
+        np.testing.assert_array_equal(
+            np.asarray(whole["vg_chai"]),
+            densify(np.asarray(paged["cp"]), np.asarray(paged["bt_vc"])))
+    # dense K tables nulled (pages freeable); V tables nulled only under
+    # share_values; every slot advanced to STEADY
+    assert (np.asarray(paged["bt_kg"]) == chai_cache.NULL_PAGE).all()
+    assert ((np.asarray(paged["bt_vg"]) == chai_cache.NULL_PAGE).all()
+            == share_values)
+    assert (np.asarray(paged["phase"]) == chai_cache.PHASE_STEADY).all()
+
+
 def test_insert_and_reset_slot_roundtrip(rng):
     """insert_slot writes one request's prefill into a slot (phase ->
     WARMUP, scores cleared); reset_slot frees it (phase -> FREE, pos 0);

@@ -150,6 +150,137 @@ def test_decode_masks_future_positions(rng):
                                rtol=1e-6, atol=1e-6)
 
 
+# ---------------------------------------------------------------- paged ----
+def _mk_tables(rng, b, n_pages, n_pool, n=1):
+    """n block tables of distinct physical pages (page 0 = null sink,
+    never allocated; no two slots/tables share a page)."""
+    assert n_pool - 1 >= n * b * n_pages
+    perm = rng.permutation(np.arange(1, n_pool))[:n * b * n_pages]
+    tables = perm.reshape(n, b, n_pages)
+    out = tuple(jnp.asarray(t, jnp.int32) for t in tables)
+    return out[0] if n == 1 else out
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,n_pages,page,hd,window", [
+    (1, 4, 4, 4, 8, 16, 0),
+    (2, 8, 2, 4, 16, 32, 0),      # GQA 4:1
+    (3, 6, 1, 6, 8, 8, 0),        # MQA
+    (2, 4, 4, 1, 64, 32, 0),      # single page
+    (2, 8, 4, 4, 16, 16, 24),     # sliding window
+])
+def test_paged_decode_sweep(rng, dtype, b, h, kv, n_pages, page, hd,
+                            window):
+    n_pool = 2 * b * n_pages + 1
+    pool = _mk(rng, (n_pool, kv, page, hd), dtype)
+    bt_k, bt_v = _mk_tables(rng, b, n_pages, n_pool, n=2)
+    q = _mk(rng, (b, h, hd), dtype)
+    pos = jnp.asarray(rng.integers(1, n_pages * page, size=b), jnp.int32)
+    out = fk.paged_decode(q, pool, bt_k, bt_v, pos, window=window,
+                          interpret=True)
+    want = ref.paged_decode_ref(q, pool, bt_k, bt_v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_decode_matches_dense_flash_decode(rng):
+    """Scatter a dense cache into pool pages: the paged kernel must
+    reproduce the dense kernel on the same logical contents."""
+    b, h, kv, n_pages, page, hd = 2, 4, 4, 4, 8, 16
+    s = n_pages * page
+    kc = _mk(rng, (b, kv, s, hd), jnp.float32)
+    vc = _mk(rng, (b, kv, s, hd), jnp.float32)
+    n_pool = 2 * b * n_pages + 1
+    bt_k, bt_v = _mk_tables(rng, b, n_pages, n_pool, n=2)
+    pool = jnp.asarray(rng.normal(size=(n_pool, kv, page, hd)), jnp.float32)
+    kp = kc.reshape(b, kv, n_pages, page, hd).transpose(2, 0, 1, 3, 4)
+    vp = vc.reshape(b, kv, n_pages, page, hd).transpose(2, 0, 1, 3, 4)
+    for i in range(b):
+        for j in range(n_pages):
+            pool = pool.at[bt_k[i, j]].set(kp[j, i])
+            pool = pool.at[bt_v[i, j]].set(vp[j, i])
+    q = _mk(rng, (b, h, hd), jnp.float32)
+    pos = jnp.asarray([s - 1, 13], jnp.int32)
+    got = fk.paged_decode(q, pool, bt_k, bt_v, pos, interpret=True)
+    want = fk.flash_decode(q, kc, vc, pos, ts=page, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_paged_decode_null_pages_masked(rng):
+    """Unallocated block-table entries point at the null sink page 0;
+    whatever garbage lives there must not affect the output."""
+    b, h, n_pages, page, hd = 1, 4, 4, 8, 16
+    n_pool = 2 * n_pages + 1
+    pool = _mk(rng, (n_pool, h, page, hd), jnp.float32)
+    bt = _mk_tables(rng, b, n_pages, n_pool)
+    # only the first 2 logical pages are allocated; pos stays inside them
+    bt_trunc = bt.at[:, 2:].set(0)
+    pos = jnp.asarray([2 * page - 1], jnp.int32)
+    q = _mk(rng, (b, h, hd), jnp.float32)
+    out1 = fk.paged_decode(q, pool, bt_trunc, bt_trunc, pos, interpret=True)
+    poisoned = pool.at[0].set(999.0)
+    out2 = fk.paged_decode(q, poisoned, bt_trunc, bt_trunc, pos,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,kv,rpg,n_pages,page,hd", [
+    (2, 3, 1, 4, 8, 16),       # MHA clustered pool (KV == R == k_max)
+    (1, 2, 3, 4, 16, 32),      # GQA groups
+])
+def test_paged_chai_qk_sweep(rng, b, kv, rpg, n_pages, page, hd):
+    r_total = kv * rpg
+    n_pool = b * n_pages + 1
+    k_pool = _mk(rng, (n_pool, kv, page, hd), jnp.float32)
+    bt = _mk_tables(rng, b, n_pages, n_pool)
+    q_rep = _mk(rng, (b, r_total, hd), jnp.float32)
+    pos = jnp.asarray(rng.integers(1, n_pages * page, size=b), jnp.int32)
+    sc = ck.paged_chai_qk(q_rep, k_pool, bt, pos, reps_per_group=rpg,
+                          interpret=True)
+    a = ck.row_softmax(sc, interpret=True)
+    want = ref.paged_chai_scores_ref(q_rep, k_pool, bt, pos,
+                                     reps_per_group=rpg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("b,h,r,n_pages,page,hd", [
+    (2, 8, 3, 4, 8, 16),
+    (1, 4, 4, 2, 16, 32),      # k == H (degenerate)
+])
+def test_paged_chai_av_sweep(rng, b, h, r, n_pages, page, hd):
+    s = n_pages * page
+    n_pool = b * n_pages + 1
+    a = jnp.asarray(rng.random((b, r, s)), jnp.float32)
+    v_pool = _mk(rng, (n_pool, h, page, hd), jnp.float32)
+    bt_v = _mk_tables(rng, b, n_pages, n_pool)
+    h2c = jnp.asarray(rng.integers(0, r, size=(b, h)), jnp.int32)
+    got = ck.paged_chai_av(a, v_pool, bt_v, h2c, interpret=True)
+    want = ref.paged_chai_av_ref(a, v_pool, bt_v, h2c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_paged_chai_pipeline_matches_ref(rng):
+    """Full paged CHAI decode: paged QK -> row softmax -> paged AV vs the
+    densify-then-reference oracle (clustered K pool + per-head V pool)."""
+    b, h, r, n_pages, page, hd = 2, 8, 4, 4, 8, 16
+    nk, nv = b * n_pages + 1, b * n_pages + 1
+    k_pool = _mk(rng, (nk, r, page, hd), jnp.float32)
+    v_pool = _mk(rng, (nv, h, page, hd), jnp.float32)
+    bt_k = _mk_tables(rng, b, n_pages, nk)
+    bt_v = _mk_tables(rng, b, n_pages, nv)
+    q_rep = _mk(rng, (b, r, hd), jnp.float32)
+    h2c = jnp.asarray(rng.integers(0, r, size=(b, h)), jnp.int32)
+    pos = jnp.asarray([n_pages * page - 1, 11], jnp.int32)
+    sc = ck.paged_chai_qk(q_rep, k_pool, bt_k, pos, interpret=True)
+    a = ck.row_softmax(sc, interpret=True)
+    got = ck.paged_chai_av(a, v_pool, bt_v, h2c, interpret=True)
+    want = ref.paged_chai_decode_ref(q_rep, k_pool, bt_k, v_pool, bt_v,
+                                     h2c, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
 @pytest.mark.parametrize("b,kv,rpg,s,hd,ts", [
     (2, 4, 1, 32, 16, 8),      # MHA clustered cache (KV == R)
     (1, 2, 3, 64, 32, 16),     # GQA groups
