@@ -9,6 +9,20 @@ MHA archs additionally store a *clustered K cache* (k_max rows instead of
 H) — the paper's 21.4% KV-memory saving. GQA archs keep the per-group K
 cache (DESIGN.md §4) and get the compute-only saving.
 
+The attention math itself runs as ONE fused Pallas launch per decode step
+(``repro.kernels.ops.chai_decode_attention`` /
+``paged_chai_decode_attention``): online-softmax clustered scores +
+h2c-broadcast AV, streaming dense tiles or block-table pages through VMEM
+with in-kernel int8 dequant — no (B, R, S) score tensor and, on the paged
+layout, no densifying page gather. ``decode_ts`` (the engine passes its
+page size) pins the dense tile size to the paged page size so every KV
+layout performs bit-identical arithmetic (cross-layout greedy parity).
+The pure-jnp math is kept as the fallback for shapes the kernel does not
+cover (attention logit softcap, local ring caches) and as the reference
+path (``USE_FUSED_DECODE = False``). The legacy dense-GQA int8 layout —
+which stores reinterpreted codes with no scale gather — DOES run fused:
+the call simply passes no scales, preserving those semantics exactly.
+
 ctx arrays may be shared across the batch (ndim without B) or per-request
 (batched) — see repro.core.clustering.
 """
@@ -23,6 +37,10 @@ import jax.numpy as jnp
 from repro.models import attention as attn_mod
 from repro.models.layers import apply_rope, rms_norm, softcap
 
+# Module switch: tests flip this to pin fused-vs-jnp token parity; the
+# engine honors it at trace time (each ServingEngine builds fresh jits).
+USE_FUSED_DECODE = True
+
 
 def _rope1(x, pos, theta):
     """x: (B, n, hd) single-token heads; pos: (B,)."""
@@ -34,22 +52,35 @@ def _qk_norm(x, scale, cfg):
 
 
 def chai_decode_attention(xn, p, cfg, state, idxs, chai_ctx, *, local,
-                          write_mask=None):
+                          write_mask=None, decode_ts=0):
     """xn: (B, d) normed hidden. Returns (out (B, H, hd), new_state).
 
     ``write_mask`` (B,) bool: cache rows are committed only for masked
     slots (the mixed-phase continuous step runs this path alongside the
-    plain MHA path on one batch)."""
+    plain MHA path on one batch). ``decode_ts``: S-tile size for the
+    fused dense kernel (0 = whole sequence; the engine passes its page
+    size so dense and paged layouts tile identically)."""
     if cfg.is_mha and not local:
         return _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx,
-                                write_mask)
+                                write_mask, decode_ts=decode_ts)
     if not cfg.is_mha:
         return _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx,
-                                local=local, write_mask=write_mask)
+                                local=local, write_mask=write_mask,
+                                decode_ts=decode_ts)
     # MHA arch with a local layer (none of the assigned archs hit this):
     from repro.models.transformer import _plain_decode_attention
     return _plain_decode_attention(xn, p, cfg, state, idxs, local=local,
                                    write_mask=write_mask)
+
+
+def _fused_ok(cfg):
+    """The fused kernel covers everything the engine serves except the
+    gemma2-style attention-logit softcap (tanh inside the softmax)."""
+    return USE_FUSED_DECODE and not cfg.attn_logit_softcap
+
+
+def _dense_ts(decode_ts, s):
+    return decode_ts if decode_ts and s % decode_ts == 0 else s
 
 
 def _layer_ctx(chai_ctx, attn_idx):
@@ -59,7 +90,8 @@ def _layer_ctx(chai_ctx, attn_idx):
 
 
 # ---------------------------------------------------------------- MHA ------
-def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
+def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None, *,
+                     decode_ts=0):
     from repro.models.transformer import _masked_rows, tree_index, \
         tree_update
     b, d = xn.shape
@@ -103,7 +135,10 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
                                               paged_token_coords)
         mask = functools.partial(_masked_rows, write_mask)
 
-    # Clustered K cache update (k rows, not H).
+    # Clustered K cache update (k rows, not H). The fused kernel reads
+    # the raw (possibly int8) buffers directly, so the dequantized /
+    # page-gathered dense views are only built on the jnp fallback path.
+    ksc = csc = None
     if paged:
         cp = tree_index(state["cp"], idxs["global"])      # (nP, k, page, hd)
         page = cp.shape[2]
@@ -113,12 +148,8 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
             cp = _paged_write_rows(cp, pk, row, kq, mask)
             csc = tree_index(state["cp_scale"], idxs["global"])
             csc = _paged_write_rows(csc, pk, row, ks, mask)
-            kc_f = dequant_rows(gather_pages(cp, state["bt_kc"]),
-                                gather_pages(csc, state["bt_kc"]))
         else:
             cp = _paged_write_rows(cp, pk, row, k_rep, mask)
-            kc_f = gather_pages(cp, state["bt_kc"])
-        s = kc_f.shape[2]
     else:
         kc = tree_index(state["kg_chai"], idxs["global"])   # (B, k, S, hd)
         if int8:
@@ -128,15 +159,13 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
             ksc = tree_index(state["kg_chai_scale"], idxs["global"])
             ksc = ksc.at[ar, :, pos].set(
                 _masked_rows(write_mask, ks, ksc[ar, :, pos]))
-            kc_f = dequant_rows(kc, ksc)
         else:
             kc = kc.at[ar, :, pos, :].set(
                 _masked_rows(write_mask, k_rep.astype(kc.dtype),
                              kc[ar, :, pos, :]))
-            kc_f = kc
-        s = kc.shape[2]
 
     # V: full per-head (or clustered for the CHAI-QKV ablation).
+    vsc = vsp = None
     if share_v:
         if batched:
             v = jnp.einsum("bd,dhe->bhe", xn, p["wv"])
@@ -149,13 +178,11 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
             # mirroring the unified vg_chai gather).
             pv, vrow = paged_token_coords(state["bt_vc"], pos, page)
             cp = _paged_write_rows(cp, pv, vrow, v_new, mask)
-            vc_f = gather_pages(cp, state["bt_vc"])
         else:
             vc = tree_index(state["vg_chai"], idxs["global"])
             vc = vc.at[ar, :, pos, :].set(
                 _masked_rows(write_mask, v_new.astype(vc.dtype),
                              vc[ar, :, pos, :]))
-            vc_f = vc
     else:
         v_new = jnp.einsum("bd,dhe->bhe", xn, p["wv"])
         if paged:
@@ -166,11 +193,8 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
                 vp = _paged_write_rows(vp, pv, vrow, vq, mask)
                 vsp = tree_index(state["kvp_scale"], idxs["global"])
                 vsp = _paged_write_rows(vsp, pv, vrow, vs, mask)
-                vc_f = dequant_rows(gather_pages(vp, state["bt_vg"]),
-                                    gather_pages(vsp, state["bt_vg"]))
             else:
                 vp = _paged_write_rows(vp, pv, vrow, v_new, mask)
-                vc_f = gather_pages(vp, state["bt_vg"])
         else:
             vc = tree_index(state["vg"], idxs["global"])
             if int8:
@@ -180,30 +204,69 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
                 vsc = tree_index(state["vg_scale"], idxs["global"])
                 vsc = vsc.at[ar, :, pos].set(
                     _masked_rows(write_mask, vs, vsc[ar, :, pos]))
-                vc_f = dequant_rows(vc, vsc)
             else:
                 vc = vc.at[ar, :, pos, :].set(
                     _masked_rows(write_mask, v_new.astype(vc.dtype),
                                  vc[ar, :, pos, :]))
-                vc_f = vc
 
-    scale = 1.0 / math.sqrt(hd)
-    sc = jnp.einsum("bke,bkse->bks", q_rep.astype(jnp.float32),
-                    kc_f.astype(jnp.float32)) * scale
-    sc = softcap(sc, cfg.attn_logit_softcap)
-    kv_pos = jnp.arange(s, dtype=jnp.int32)
-    valid = kv_pos[None, :] <= pos[:, None]
-    sc = jnp.where(valid[:, None, :], sc, attn_mod.NEG_INF)
-    a = jax.nn.softmax(sc, axis=-1)                     # (B, k, S)
-
-    if share_v:
-        out_rep = jnp.einsum("bks,bksd->bkd", a, vc_f.astype(jnp.float32))
-        gather_idx = h2c if batched else jnp.broadcast_to(h2c, (b, h))
-        out = jnp.take_along_axis(out_rep, gather_idx[..., None], axis=1)
+    gather_idx = h2c if batched else jnp.broadcast_to(h2c, (b, h))
+    if _fused_ok(cfg):
+        # One fused Pallas launch: scores + online softmax + h2c AV.
+        from repro.kernels import ops as kops
+        if paged:
+            if share_v:
+                out = kops.paged_chai_decode_attention(
+                    q_rep, cp, state["bt_kc"], cp, state["bt_vc"],
+                    gather_idx, pos, k_scale_pool=csc, share_values=True)
+            else:
+                out = kops.paged_chai_decode_attention(
+                    q_rep, cp, state["bt_kc"], vp, state["bt_vg"],
+                    gather_idx, pos, k_scale_pool=csc, v_scale_pool=vsp)
+        else:
+            out = kops.chai_decode_attention(
+                q_rep, kc, vc, gather_idx, pos, k_scale=ksc, v_scale=vsc,
+                share_values=share_v,
+                ts=_dense_ts(decode_ts, kc.shape[2]))
     else:
-        gather_idx = h2c if batched else jnp.broadcast_to(h2c, (b, h))
-        a_full = jnp.take_along_axis(a, gather_idx[..., None], axis=1)
-        out = jnp.einsum("bhs,bhsd->bhd", a_full, vc_f.astype(jnp.float32))
+        # jnp fallback (softcap configs / reference path): densify and
+        # dequantize, then the pre-fusion three-step math.
+        if paged:
+            kc_f = gather_pages(cp, state["bt_kc"])
+            if int8:
+                kc_f = dequant_rows(kc_f, gather_pages(csc,
+                                                       state["bt_kc"]))
+            if share_v:
+                vc_f = gather_pages(cp, state["bt_vc"])
+            else:
+                vc_f = gather_pages(vp, state["bt_vg"])
+                if int8:
+                    vc_f = dequant_rows(vc_f, gather_pages(
+                        vsp, state["bt_vg"]))
+        else:
+            kc_f = dequant_rows(kc, ksc) if int8 else kc
+            if share_v:
+                vc_f = vc
+            else:
+                vc_f = dequant_rows(vc, vsc) if int8 else vc
+        s = kc_f.shape[2]
+        scale = 1.0 / math.sqrt(hd)
+        sc = jnp.einsum("bke,bkse->bks", q_rep.astype(jnp.float32),
+                        kc_f.astype(jnp.float32)) * scale
+        sc = softcap(sc, cfg.attn_logit_softcap)
+        kv_pos = jnp.arange(s, dtype=jnp.int32)
+        valid = kv_pos[None, :] <= pos[:, None]
+        sc = jnp.where(valid[:, None, :], sc, attn_mod.NEG_INF)
+        a = jax.nn.softmax(sc, axis=-1)                     # (B, k, S)
+
+        if share_v:
+            out_rep = jnp.einsum("bks,bksd->bkd", a,
+                                 vc_f.astype(jnp.float32))
+            out = jnp.take_along_axis(out_rep, gather_idx[..., None],
+                                      axis=1)
+        else:
+            a_full = jnp.take_along_axis(a, gather_idx[..., None], axis=1)
+            out = jnp.einsum("bhs,bhsd->bhd", a_full,
+                             vc_f.astype(jnp.float32))
 
     state = dict(state)
     if paged:
@@ -234,7 +297,7 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None):
 
 # ---------------------------------------------------------------- GQA ------
 def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
-                     write_mask=None):
+                     write_mask=None, decode_ts=0):
     from repro.models.transformer import _masked_rows, tree_index, \
         tree_update
     b, d = xn.shape
@@ -270,6 +333,20 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
     v_new = jnp.einsum("bd,dke->bke", xn, p["wv"])
 
     paged = not local and "kvp" in state
+    # Fused one-launch decode covers the global paths; the local ring
+    # cache keeps the jnp math (ring-ordered kv positions). The legacy
+    # dense-GQA int8 layout stores reinterpreted codes with no scale
+    # gather — the fused call passes no scales there, preserving it.
+    fused = _fused_ok(cfg) and not local
+
+    def _flat_qrep_h2c():
+        gather_idx = (cluster_of if batched
+                      else jnp.broadcast_to(cluster_of, (b, n_kv, qpk)))
+        q_flat = q_rep.reshape(b, n_kv * r, hd)
+        h2c_flat = (jnp.arange(n_kv, dtype=jnp.int32)[None, :, None] * r
+                    + gather_idx).reshape(b, h)
+        return q_flat, h2c_flat
+
     if local:
         w = state["kl"].shape[3]
         kc = tree_index(state["kl"], idxs["local"])
@@ -286,7 +363,18 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
     elif paged:
         # GQA paged: K and V stay page-resident in the dense pool for the
         # whole request (no clustered cache — compute-only saving).
-        from repro.models.transformer import _paged_global_update
+        from repro.models.transformer import (_paged_global_write,
+                                              _paged_global_update)
+        if fused:
+            state, pool, spool = _paged_global_write(
+                state, idxs, k_new, v_new, pos, write_mask, cfg)
+            q_flat, h2c_flat = _flat_qrep_h2c()
+            from repro.kernels import ops as kops
+            out = kops.paged_chai_decode_attention(
+                q_flat, pool, state["bt_kg"], pool, state["bt_vg"],
+                h2c_flat, pos, k_scale_pool=spool, v_scale_pool=spool,
+                reps_per_group=r)
+            return out.astype(xn.dtype), state
         state, kc, vc = _paged_global_update(state, idxs, k_new, v_new,
                                              pos, write_mask, cfg)
         s = kc.shape[2]
@@ -305,6 +393,16 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
         kv_pos = jnp.broadcast_to(
             jnp.arange(s, dtype=jnp.int32), (b, s))
         window = 0
+        if fused:
+            q_flat, h2c_flat = _flat_qrep_h2c()
+            from repro.kernels import ops as kops
+            out = kops.chai_decode_attention(
+                q_flat, kc, vc, h2c_flat, pos, reps_per_group=r,
+                ts=_dense_ts(decode_ts, s))
+            state = dict(state)
+            state["kg"] = tree_update(state["kg"], idxs["global"], kc)
+            state["vg"] = tree_update(state["vg"], idxs["global"], vc)
+            return out.astype(xn.dtype), state
 
     scale = 1.0 / math.sqrt(hd)
     sc = jnp.einsum("bkre,bkse->bkrs", q_rep.astype(jnp.float32),

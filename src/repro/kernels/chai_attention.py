@@ -13,16 +13,32 @@ Decomposition (DESIGN.md §3.2):
                         in paged-attention kernels) and multiplies with its
                         own V tile. Per-head V is preserved (Table 4).
 
-Why not one fused kernel: normalized A for head h requires the rep's full
-row max/denominator, which is only known after the last S tile; splitting at
-the (B, R, S) score tensor costs one extra HBM round-trip of size S*R —
-~R/(H*hd) of the cache traffic (<1%) — and keeps every kernel single-pass.
+The three-kernel split above survives only as the *oracle* (see
+``repro.kernels.ref``): the production decode path is the **one-pass fused
+kernel** below (``chai_fused_decode`` / ``paged_chai_fused_decode``). The
+old "why not fused" argument (the rep row max/denominator is only known
+after the last S tile) is answered the same way flash decode answers it:
+carry online-softmax state — running max ``m`` and normalizer ``l`` per
+rep row, plus per-member-head output accumulators — in VMEM scratch across
+the sequentially-iterated S-tile grid axis, rescaling the accumulators by
+``exp(m_prev - m_new)`` at every tile. One launch per decode step; no
+``(B, R, S)`` logits ever touch HBM.
 
-Paged variants (``paged_chai_qk`` / ``paged_chai_av``): K/V live in page
-pools addressed through scalar-prefetched int32 block tables (one S-tile ==
-one page), composing the ``chai_av`` head->cluster gather with the
-paged-attention page gather — the serving engine's clustered pages stream
-straight from the ``PagePool`` layout without densification.
+Fused dataflow per (batch, S-tile) grid step:
+
+  K tile (R rep rows)  --QK+mask-->  scores (R, Ts)   [int8: dequant here]
+  scores --online softmax update-->  m, l (R,)  +  p = exp(sc - m) (R, Ts)
+  p --h2c one-hot broadcast------->  p_full (H, Ts)
+  V tile (H rows)  --AV----------->  acc (H, hd) accumulators
+                                     [share_values: acc stays (R, hd) and
+                                      the h2c gather moves to finalize]
+
+Paged variants (``paged_chai_fused_decode``): K/V live in page pools
+addressed through scalar-prefetched int32 block tables (one S-tile == one
+page) driving the BlockSpec index maps, so the serving engine's clustered
+pages stream HBM->VMEM straight from the ``PagePool`` layout without
+densification. int8 pools dequantize in-VMEM from the mirror-shaped scale
+pools — the HBM byte saving happens on the stream, where it counts.
 """
 from __future__ import annotations
 
@@ -314,3 +330,284 @@ def paged_chai_av(a, v_pool, bt_v, h2c, *, interpret=None):
         out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
         interpret=interpret,
     )(h2c.astype(jnp.int32), bt_v.astype(jnp.int32), a, v_pool)
+
+
+# ------------------------------------------------- fused one-pass decode ---
+def _fused_tile(pos_ref, q_ref, h2c_ref, k_ref, ks_ref, v_ref, vs_ref,
+                o_ref, m_scr, l_scr, acc_scr, *, scale, ts, window, n_tiles,
+                reps_per_group, v_rep, share_values):
+    """One (batch, S-tile) step of the fused clustered decode.
+
+    Shared by the dense and paged variants — the paged caller only differs
+    in how the K/V BlockSpecs locate the tile (block tables vs contiguous
+    cache), so dense and paged produce bit-identical arithmetic for equal
+    tile sizes (the engine's layout-parity guarantee).
+
+    Scratch: ``m_scr``/``l_scr`` (R, 1) running max / normalizer per rep
+    row; ``acc_scr`` (H, hd) per-member-head output accumulators (under
+    ``share_values``: (R, hd) per-cluster — the h2c gather then happens at
+    finalize, after normalization)."""
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # (R, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (KVk, Ts, hd)
+    r_total, hd = q.shape
+    kv_k = k.shape[0]
+    # Per-group rep scores: rep j reads the K rows of group j // rpg
+    # (MHA clustered cache: KVk == R, rpg == 1 — plain batched matvec).
+    q3 = q.reshape(kv_k, reps_per_group, hd)
+    sc = jax.lax.dot_general(q3, k, (((2,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    if ks_ref is not None:   # int8: scores scaled by the per-row K scales
+        sc = sc * ks_ref[0].astype(jnp.float32)[:, None, :]
+    sc = sc.reshape(r_total, ts) * scale
+    idx = s * ts + jax.lax.broadcasted_iota(jnp.int32, (1, ts), 1)
+    pos = pos_ref[b]
+    valid = idx <= pos
+    if window:
+        valid &= (pos - idx) < window
+    sc = jnp.where(valid, sc, NEG_INF)                   # (R, Ts)
+
+    m_prev = m_scr[...]                                  # (R, 1)
+    m_new = jnp.maximum(
+        jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True)), -1e30)
+    alpha = jnp.exp(m_prev - m_new)                      # (R, 1)
+    p = jnp.exp(sc - m_new)                              # (R, Ts)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+
+    v = v_ref[0].astype(jnp.float32)                     # (KVv, Ts, hd)
+    if vs_ref is not None:   # int8: dequant V rows before the AV dot
+        v = v * vs_ref[0].astype(jnp.float32)[..., None]
+
+    h2c = h2c_ref[0]                                     # (H,) int32
+    h_total = h2c.shape[0]
+    oneh = (h2c[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (h_total, r_total), 1)).astype(jnp.float32)   # (H, R)
+
+    if share_values:
+        # Clustered V (KVv == R): accumulate per cluster; broadcast to
+        # member heads at finalize (after normalization).
+        pv = jax.lax.dot_general(p[:, None, :], v,
+                                 (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)[:, 0]
+        acc_scr[...] = acc_scr[...] * alpha + pv         # (R, hd)
+    else:
+        # Broadcast the cluster rows to member heads (one-hot matmul: the
+        # MXU-friendly spelling of the h2c gather), then per-head AV.
+        p_full = jnp.dot(oneh, p,
+                         preferred_element_type=jnp.float32)     # (H, Ts)
+        alpha_full = jnp.dot(oneh, alpha,
+                             preferred_element_type=jnp.float32)  # (H, 1)
+        if v_rep > 1:        # GQA: head h reads the V rows of group h//qpk
+            v = jnp.repeat(v, v_rep, axis=0)
+        pv = jax.lax.dot_general(p_full[:, None, :], v,
+                                 (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)[:, 0]
+        acc_scr[...] = acc_scr[...] * alpha_full + pv    # (H, hd)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(s == n_tiles - 1)
+    def _fin():
+        if share_values:
+            out_r = acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)
+            out = jnp.dot(oneh, out_r,
+                          preferred_element_type=jnp.float32)    # (H, hd)
+        else:
+            l_full = jnp.dot(oneh, l_scr[...],
+                             preferred_element_type=jnp.float32)
+            out = acc_scr[...] / jnp.maximum(l_full, 1e-37)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _fused_arg_router(n_prefetch, has_ks, has_vs, **flags):
+    """Positional-ref unpacking for the optional int8 scale inputs.
+
+    Kernel signature: [scalar-prefetch refs] q, h2c, k, [ks], v, [vs],
+    out, m, l, acc — the first prefetch ref is always ``pos``; paged adds
+    the two block tables (consumed by the index maps only)."""
+    def kernel(*refs):
+        pos_ref = refs[0]
+        rest = list(refs[n_prefetch:])
+        q_ref = rest.pop(0)
+        h2c_ref = rest.pop(0)
+        k_ref = rest.pop(0)
+        ks_ref = rest.pop(0) if has_ks else None
+        v_ref = rest.pop(0)
+        vs_ref = rest.pop(0) if has_vs else None
+        o_ref, m_scr, l_scr, acc_scr = rest
+        _fused_tile(pos_ref, q_ref, h2c_ref, k_ref, ks_ref, v_ref, vs_ref,
+                    o_ref, m_scr, l_scr, acc_scr, **flags)
+    return kernel
+
+
+def _fused_shapes(q_rep, v_rows, h2c, share_values):
+    b, r_total, hd = q_rep.shape
+    if h2c.ndim == 1:
+        h2c = jnp.broadcast_to(h2c, (b, h2c.shape[0]))
+    h_total = h2c.shape[1]
+    if share_values:
+        assert v_rows == r_total, (v_rows, r_total)
+        v_rep = 1
+    else:
+        assert h_total % v_rows == 0, (h_total, v_rows)
+        v_rep = h_total // v_rows
+    rows_acc = r_total if share_values else h_total
+    return b, r_total, hd, h2c, h_total, v_rep, rows_acc
+
+
+def chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos, *, k_scale=None,
+                      v_scale=None, reps_per_group=1, share_values=False,
+                      window=0, ts=512, interpret=None):
+    """One-pass fused clustered decode over a dense cache.
+
+    q_rep: (B, R, hd) rep-head queries; k_cache: (B, KVk, S, hd) with
+    KVk * reps_per_group == R (MHA clustered cache: KVk == R); v_cache:
+    (B, KVv, S, hd) — per-head V (KVv == H), per-group V (GQA: H % KVv
+    == 0) or clustered V (share_values: KVv == R); h2c: (B, H) or (H,)
+    int32 flat head -> rep-row map; pos: (B,) int32. int8 caches pass
+    per-row scales via ``k_scale``/``v_scale`` (B, rows, S) and are
+    dequantized in VMEM. Returns (B, H, hd) fp32 in ONE kernel launch —
+    no (B, R, S) score tensor is ever materialized."""
+    if interpret is None:
+        interpret = _interpret_default()
+    assert not (share_values and reps_per_group > 1), \
+        "clustered V is an MHA-only ablation"
+    s = k_cache.shape[2]
+    kv_k, kv_v = k_cache.shape[1], v_cache.shape[1]
+    b, r_total, hd, h2c, h_total, v_rep, rows_acc = _fused_shapes(
+        q_rep, kv_v, h2c, share_values)
+    assert kv_k * reps_per_group == r_total, (kv_k, reps_per_group, r_total)
+    ts = min(ts, s)
+    if s % ts:
+        ts = s
+    n_tiles = s // ts
+    scale = 1.0 / math.sqrt(hd)
+
+    in_specs = [
+        pl.BlockSpec((1, r_total, hd), lambda bb, ss, pos_r: (bb, 0, 0)),
+        pl.BlockSpec((1, h_total), lambda bb, ss, pos_r: (bb, 0)),
+        pl.BlockSpec((1, kv_k, ts, hd), lambda bb, ss, pos_r:
+                     (bb, 0, ss, 0)),
+    ]
+    inputs = [q_rep, h2c.astype(jnp.int32), k_cache]
+    if k_scale is not None:
+        in_specs.append(pl.BlockSpec((1, kv_k, ts), lambda bb, ss, pos_r:
+                                     (bb, 0, ss)))
+        inputs.append(k_scale)
+    in_specs.append(pl.BlockSpec((1, kv_v, ts, hd), lambda bb, ss, pos_r:
+                                 (bb, 0, ss, 0)))
+    inputs.append(v_cache)
+    if v_scale is not None:
+        in_specs.append(pl.BlockSpec((1, kv_v, ts), lambda bb, ss, pos_r:
+                                     (bb, 0, ss)))
+        inputs.append(v_scale)
+
+    kernel = _fused_arg_router(
+        1, k_scale is not None, v_scale is not None, scale=scale, ts=ts,
+        window=window, n_tiles=n_tiles, reps_per_group=reps_per_group,
+        v_rep=v_rep, share_values=share_values)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, n_tiles),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, h_total, hd),
+                                   lambda bb, ss, pos_r: (bb, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((r_total, 1), jnp.float32),
+                pltpu.VMEM((r_total, 1), jnp.float32),
+                pltpu.VMEM((rows_acc, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h_total, hd), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), *inputs)
+
+
+def paged_chai_fused_decode(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
+                            k_scale_pool=None, v_scale_pool=None,
+                            reps_per_group=1, share_values=False, window=0,
+                            interpret=None):
+    """One-pass fused clustered decode over block-table page pools.
+
+    q_rep: (B, R, hd); k_pool: (nP, KVk, page, hd) clustered pages (MHA:
+    KVk == k_max) or the dense pool (GQA: KVk == n_kv_heads); v_pool:
+    (nP, KVv, page, hd) — the dense per-head pool, or the clustered pool
+    itself under ``share_values``; bt_k/bt_v: (B, P) int32 block tables
+    (scalar-prefetched: they drive the K/V BlockSpec index maps, so pool
+    pages stream HBM->VMEM exactly like dense tiles); h2c: (B, H) or
+    (H,); pos: (B,). int8 pools pass ``k_scale_pool``/``v_scale_pool``
+    (nP, rows, page) mirrors. Returns (B, H, hd) fp32 — one launch, no
+    (B, R, S) scores, no densified pool gather."""
+    if interpret is None:
+        interpret = _interpret_default()
+    assert not (share_values and reps_per_group > 1), \
+        "clustered V is an MHA-only ablation"
+    kv_k, page = k_pool.shape[1], k_pool.shape[2]
+    kv_v = v_pool.shape[1]
+    b, r_total, hd, h2c, h_total, v_rep, rows_acc = _fused_shapes(
+        q_rep, kv_v, h2c, share_values)
+    assert kv_k * reps_per_group == r_total, (kv_k, reps_per_group, r_total)
+    n_pages = bt_k.shape[1]
+    assert bt_v.shape == bt_k.shape == (b, n_pages)
+    scale = 1.0 / math.sqrt(hd)
+
+    in_specs = [
+        pl.BlockSpec((1, r_total, hd),
+                     lambda bb, ss, pos_r, btk_r, btv_r: (bb, 0, 0)),
+        pl.BlockSpec((1, h_total),
+                     lambda bb, ss, pos_r, btk_r, btv_r: (bb, 0)),
+        pl.BlockSpec((1, kv_k, page, hd),
+                     lambda bb, ss, pos_r, btk_r, btv_r:
+                     (btk_r[bb, ss], 0, 0, 0)),
+    ]
+    inputs = [q_rep, h2c.astype(jnp.int32), k_pool]
+    if k_scale_pool is not None:
+        in_specs.append(pl.BlockSpec((1, kv_k, page),
+                                     lambda bb, ss, pos_r, btk_r, btv_r:
+                                     (btk_r[bb, ss], 0, 0)))
+        inputs.append(k_scale_pool)
+    in_specs.append(pl.BlockSpec((1, kv_v, page, hd),
+                                 lambda bb, ss, pos_r, btk_r, btv_r:
+                                 (btv_r[bb, ss], 0, 0, 0)))
+    inputs.append(v_pool)
+    if v_scale_pool is not None:
+        in_specs.append(pl.BlockSpec((1, kv_v, page),
+                                     lambda bb, ss, pos_r, btk_r, btv_r:
+                                     (btv_r[bb, ss], 0, 0)))
+        inputs.append(v_scale_pool)
+
+    kernel = _fused_arg_router(
+        3, k_scale_pool is not None, v_scale_pool is not None, scale=scale,
+        ts=page, window=window, n_tiles=n_pages,
+        reps_per_group=reps_per_group, v_rep=v_rep,
+        share_values=share_values)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, n_pages),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, h_total, hd),
+                                   lambda bb, ss, pos_r, btk_r, btv_r:
+                                   (bb, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((r_total, 1), jnp.float32),
+                pltpu.VMEM((r_total, 1), jnp.float32),
+                pltpu.VMEM((rows_acc, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h_total, hd), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), bt_k.astype(jnp.int32),
+      bt_v.astype(jnp.int32), *inputs)

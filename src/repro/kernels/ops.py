@@ -1,8 +1,11 @@
 """Jit'd dispatch wrappers over the Pallas kernels.
 
 On CPU (this container) kernels run with interpret=True; on TPU they lower
-to Mosaic. ``chai_decode_attention`` is the fused public op: clustered
-scores -> masked row softmax -> broadcast AV.
+to Mosaic. ``chai_decode_attention`` / ``paged_chai_decode_attention`` are
+the public decode ops: ONE fused Pallas launch per decode step (online
+softmax over rep-head scores + h2c-broadcast AV, int8 dequant in VMEM) —
+the pre-fusion three-kernel pipeline survives only as the oracle in
+``repro.kernels.ref``.
 """
 from __future__ import annotations
 
@@ -32,19 +35,23 @@ def flash_prefill_attention(q, k, v, *, offset=0, window=0, tq=256, ts=512,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("reps_per_group", "window", "ts",
-                                    "interpret"))
+                   static_argnames=("reps_per_group", "share_values",
+                                    "window", "ts", "interpret"))
 def chai_decode_attention(q_rep, k_cache, v_cache, h2c, pos, *,
-                          reps_per_group=1, window=0, ts=512,
+                          k_scale=None, v_scale=None, reps_per_group=1,
+                          share_values=False, window=0, ts=512,
                           interpret=None):
-    """The paper's decode op. q_rep: (B, R, hd) rep-head queries;
-    k_cache: (B, KV, S, hd) (clustered for MHA: KV==R); v_cache:
-    (B, H, S, hd) full per-head V; h2c: (B, H) or (H,) head->rep-row map;
-    pos: (B,). Returns (B, H, hd) fp32."""
-    sc = ck.chai_qk(q_rep, k_cache, pos, reps_per_group=reps_per_group,
-                    window=window, ts=ts, interpret=interpret)
-    a = ck.row_softmax(sc, interpret=interpret)
-    return ck.chai_av(a, v_cache, h2c, ts=ts, interpret=interpret)
+    """The paper's decode op — ONE fused Pallas launch. q_rep: (B, R, hd)
+    rep-head queries; k_cache: (B, KVk, S, hd) (clustered for MHA:
+    KVk==R); v_cache: (B, KVv, S, hd) per-head / per-group / clustered
+    (share_values) V; h2c: (B, H) or (H,) flat head->rep-row map; pos:
+    (B,). int8 caches pass per-row ``k_scale``/``v_scale`` (B, rows, S).
+    Returns (B, H, hd) fp32; no (B, R, S) scores touch HBM."""
+    return ck.chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos,
+                                k_scale=k_scale, v_scale=v_scale,
+                                reps_per_group=reps_per_group,
+                                share_values=share_values, window=window,
+                                ts=ts, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
@@ -58,23 +65,64 @@ def paged_decode_attention(q, kv_pool, bt_k, bt_v, pos, *, window=0,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("reps_per_group", "window", "interpret"))
+                   static_argnames=("reps_per_group", "share_values",
+                                    "window", "interpret"))
 def paged_chai_decode_attention(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
-                                pos, *, reps_per_group=1, window=0,
+                                pos, *, k_scale_pool=None,
+                                v_scale_pool=None, reps_per_group=1,
+                                share_values=False, window=0,
                                 interpret=None):
-    """The paper's decode op over the serving engine's paged layout.
-    q_rep: (B, R, hd); k_pool: (nP, KV, page, hd) clustered pages (MHA:
-    KV == k_max); v_pool: (nP, H, page, hd) per-head V pages; bt_k/bt_v:
-    (B, P) int32 block tables; h2c: (B, H) or (H,). Returns (B, H, hd)."""
-    sc = ck.paged_chai_qk(q_rep, k_pool, bt_k, pos,
-                          reps_per_group=reps_per_group, window=window,
-                          interpret=interpret)
-    a = ck.row_softmax(sc, interpret=interpret)
-    return ck.paged_chai_av(a, v_pool, bt_v, h2c, interpret=interpret)
+    """The paper's decode op over the serving engine's paged layout — ONE
+    fused Pallas launch streaming pages through VMEM (no densifying
+    gather). q_rep: (B, R, hd); k_pool: (nP, KVk, page, hd) clustered
+    pages (MHA: KVk == k_max) or the dense pool (GQA); v_pool:
+    (nP, KVv, page, hd) per-head V pages, or the clustered pool under
+    ``share_values``; bt_k/bt_v: (B, P) int32 block tables; h2c: (B, H)
+    or (H,). int8 pools pass the mirror-shaped scale pools. Returns
+    (B, H, hd) fp32."""
+    return ck.paged_chai_fused_decode(
+        q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos,
+        k_scale_pool=k_scale_pool, v_scale_pool=v_scale_pool,
+        reps_per_group=reps_per_group, share_values=share_values,
+        window=window, interpret=interpret)
 
 
-def decode_flop_estimate(b, h, r, s, hd):
-    """Analytic decode-attention FLOPs: clustered scores + full AV."""
-    scores = 2.0 * b * r * s * hd
-    av = 2.0 * b * h * s * hd
+def decode_flop_estimate(b, h, r, s, hd, *, share_values=False, window=0):
+    """Analytic decode-attention FLOPs: clustered scores + AV.
+
+    ``share_values``: the CHAI-QKV ablation prunes V rows too, so AV is
+    R·S·hd, not H·S·hd. ``window``: sliding-window attention touches at
+    most ``window`` positions, so effective S = min(S, window)."""
+    s_eff = min(s, window) if window else s
+    av_rows = r if share_values else h
+    scores = 2.0 * b * r * s_eff * hd
+    av = 2.0 * b * av_rows * s_eff * hd
     return scores + av
+
+
+# --- fused-vs-pipeline analytic lane (benchmarks/bench_latency.py) ---------
+def decode_launch_count(fused=True):
+    """Kernel launches per CHAI decode step: the fused path is ONE
+    ``pallas_call``; the retired pipeline was QK -> row softmax -> AV."""
+    return 1 if fused else 3
+
+
+def decode_hbm_bytes_estimate(b, h, r, s, hd, *, cache_bytes=4,
+                              share_values=False, window=0, fused=True):
+    """Analytic HBM bytes moved by one CHAI decode-attention step.
+
+    Both paths stream the same cache tiles (K: R rep rows; V: H per-head
+    rows, or R under ``share_values``) plus the (negligible) q/out
+    vectors. The three-kernel pipeline additionally round-trips the
+    (B, R, S) fp32 score tensor through HBM three times (QK write,
+    softmax read+write) and re-reads the normalized rows per member head
+    (B, H, S) in AV — exactly the traffic fusion deletes."""
+    s_eff = min(s, window) if window else s
+    v_rows = r if share_values else h
+    cache = b * (r + v_rows) * s_eff * hd * cache_bytes
+    qout = b * (r + h) * hd * 4
+    total = cache + qout
+    if not fused:
+        total += b * r * s_eff * 4 * 3        # scores: write, read, write
+        total += b * h * s_eff * 4            # AV reads A row per head
+    return float(total)

@@ -47,7 +47,7 @@ def flash_prefill_ref(q, k, v, *, offset=0, window=0):
     return out.reshape(b, t, h, hd)
 
 
-def chai_scores_ref(q_rep, k_cache, pos, *, reps_per_group=0):
+def chai_scores_ref(q_rep, k_cache, pos, *, reps_per_group=0, window=0):
     """Clustered scores. q_rep: (B, R, hd) representative-head queries;
     k_cache: (B, KV, S, hd). reps_per_group r maps rep j -> KV group j//r
     (MHA clustered cache: KV == R, r == 1). Returns normalized A (B, R, S)."""
@@ -59,6 +59,8 @@ def chai_scores_ref(q_rep, k_cache, pos, *, reps_per_group=0):
                     kg.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
     kv_pos = jnp.arange(s, dtype=jnp.int32)
     valid = kv_pos[None, :] <= pos[:, None]
+    if window:
+        valid &= (pos[:, None] - kv_pos[None, :]) < window
     sc = jnp.where(valid[:, None, :], sc, NEG_INF)
     return jax.nn.softmax(sc, axis=-1)
 
@@ -122,3 +124,112 @@ def paged_chai_decode_ref(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
     a = paged_chai_scores_ref(q_rep, k_pool, bt_k, pos,
                               reps_per_group=reps_per_group)
     return paged_chai_av_ref(a, v_pool, bt_v, h2c)
+
+
+# ------------------------------------------------------ fused decode -------
+def chai_fused_decode_ref(q_rep, k_cache, v_cache, h2c, pos, *,
+                          k_scale=None, v_scale=None, reps_per_group=0,
+                          share_values=False, window=0):
+    """Oracle for ``chai_fused_decode`` across the full dispatch matrix:
+    {MHA, GQA} x {fp32, int8 scale rows} x {share_values} x {window}.
+
+    v_cache rows: H (per-head), a divisor of H (GQA per-group), or R
+    (share_values clustered). int8 inputs pass per-row ``k_scale`` /
+    ``v_scale`` (B, rows, S); share_values V codes are reinterpreted
+    scale-less, matching the engine's clustered-V semantics."""
+    b = q_rep.shape[0]
+    kf = k_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+    a = chai_scores_ref(q_rep, kf, pos, reps_per_group=reps_per_group,
+                        window=window)                       # (B, R, S)
+    vf = v_cache.astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    if h2c.ndim == 1:
+        h2c = jnp.broadcast_to(h2c, (b, h2c.shape[0]))
+    h = h2c.shape[1]
+    if share_values:
+        out_rep = jnp.einsum("brs,brsd->brd", a, vf)
+        return jnp.take_along_axis(out_rep, h2c[..., None], axis=1)
+    if vf.shape[1] != h:         # GQA: head h reads V of group h // qpk
+        vf = jnp.repeat(vf, h // vf.shape[1], axis=1)
+    return chai_av_ref(a, vf, h2c)
+
+
+def paged_chai_fused_decode_ref(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
+                                pos, *, k_scale_pool=None,
+                                v_scale_pool=None, reps_per_group=0,
+                                share_values=False, window=0):
+    """Oracle for ``paged_chai_fused_decode``: densify then dense-ref."""
+    return chai_fused_decode_ref(
+        q_rep, gather_pages_ref(k_pool, bt_k),
+        gather_pages_ref(v_pool, bt_v), h2c, pos,
+        k_scale=(None if k_scale_pool is None
+                 else gather_pages_ref(k_scale_pool, bt_k)),
+        v_scale=(None if v_scale_pool is None
+                 else gather_pages_ref(v_scale_pool, bt_v)),
+        reps_per_group=reps_per_group, share_values=share_values,
+        window=window)
+
+
+# ------------------------------------- three-kernel pipeline (oracle) ------
+def chai_three_kernel_decode(q_rep, k_cache, v_cache, h2c, pos, *,
+                             k_scale=None, v_scale=None, reps_per_group=1,
+                             share_values=False, window=0, ts=512,
+                             interpret=True):
+    """The pre-fusion production path — QK kernel -> row softmax kernel ->
+    AV kernel, materializing the (B, R, S) score tensor between launches.
+    Kept ONLY as the oracle / baseline for the fused kernel (3 launches +
+    one HBM round-trip of the scores; see ``ops.decode_launch_count``)."""
+    from repro.kernels import chai_attention as ck
+    if k_scale is not None:
+        sc = ck.chai_qk_i8(q_rep, k_cache, k_scale, pos,
+                           reps_per_group=reps_per_group, window=window,
+                           ts=ts, interpret=interpret)
+    else:
+        sc = ck.chai_qk(q_rep, k_cache, pos, reps_per_group=reps_per_group,
+                        window=window, ts=ts, interpret=interpret)
+    a = ck.row_softmax(sc, interpret=interpret)
+    vf = v_cache
+    if v_scale is not None:    # no int8 AV kernel existed; dequant outside
+        vf = v_cache.astype(jnp.float32) * v_scale[..., None]
+    b = q_rep.shape[0]
+    if h2c.ndim == 1:
+        h2c = jnp.broadcast_to(h2c, (b, h2c.shape[0]))
+    h = h2c.shape[1]
+    if share_values:
+        # Clustered V: AV per rep row, gather members after.
+        r = a.shape[1]
+        out_rep = ck.chai_av(a, vf, jnp.arange(r, dtype=jnp.int32), ts=ts,
+                             interpret=interpret)
+        return jnp.take_along_axis(out_rep, h2c[..., None], axis=1)
+    if vf.shape[1] != h:       # GQA: expand per-group V to per-head rows
+        vf = jnp.repeat(vf, h // vf.shape[1], axis=1)
+    return ck.chai_av(a, vf, h2c, ts=ts, interpret=interpret)
+
+
+def paged_chai_three_kernel_decode(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
+                                   pos, *, reps_per_group=1,
+                                   share_values=False, window=0,
+                                   interpret=True):
+    """Paged three-kernel pipeline (fp32 pools), kept as the fused paged
+    kernel's launch-count / parity baseline."""
+    from repro.kernels import chai_attention as ck
+    sc = ck.paged_chai_qk(q_rep, k_pool, bt_k, pos,
+                          reps_per_group=reps_per_group, window=window,
+                          interpret=interpret)
+    a = ck.row_softmax(sc, interpret=interpret)
+    b = q_rep.shape[0]
+    if h2c.ndim == 1:
+        h2c = jnp.broadcast_to(h2c, (b, h2c.shape[0]))
+    if share_values:
+        r = a.shape[1]
+        out_rep = ck.paged_chai_av(a, v_pool, bt_v,
+                                   jnp.arange(r, dtype=jnp.int32),
+                                   interpret=interpret)
+        return jnp.take_along_axis(out_rep, h2c[..., None], axis=1)
+    h = h2c.shape[1]
+    if v_pool.shape[1] != h:   # GQA: expand per-group V pool rows
+        v_pool = jnp.repeat(v_pool, h // v_pool.shape[1], axis=1)
+    return ck.paged_chai_av(a, v_pool, bt_v, h2c, interpret=interpret)

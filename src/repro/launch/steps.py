@@ -81,7 +81,10 @@ def make_serve_prefill(cfg: ModelConfig, batch: int, max_seq: int, *,
 
 
 def make_serve_step(cfg: ModelConfig, *, chai=False, moe_impl="capacity",
-                    unroll=False):
+                    unroll=False, decode_ts=0):
+    """``decode_ts``: S-tile size for the fused CHAI decode kernel on
+    dense layouts — the engine passes its page size so the cohort/dense
+    schedulers round exactly like the paged one (token parity)."""
     def serve_step(params, batch_inputs, state, chai_ctx=None):
         kw = {}
         if "embeddings" in batch_inputs:
@@ -92,7 +95,7 @@ def make_serve_step(cfg: ModelConfig, *, chai=False, moe_impl="capacity",
         logits, state = tfm.decode_step(params, cfg, tokens, state,
                                         chai_ctx=chai_ctx if chai else None,
                                         moe_impl=moe_impl, unroll=unroll,
-                                        **kw)
+                                        decode_ts=decode_ts, **kw)
         return logits, state
 
     return serve_step
@@ -108,10 +111,13 @@ def make_compact_step(cfg: ModelConfig):
 # Continuous batching (slot-level) steps
 # ---------------------------------------------------------------------------
 
-def make_mixed_step(cfg: ModelConfig, *, moe_impl="ragged", unroll=False):
+def make_mixed_step(cfg: ModelConfig, *, moe_impl="ragged", unroll=False,
+                    decode_ts=0):
     """Mixed-phase decode step: each batch slot is routed to the MHA path
     (WARMUP) or the CHAI path (STEADY) by ``state["phase"]`` — one jit,
-    static shapes, mask-and-select inside the attention branch."""
+    static shapes, mask-and-select inside the attention branch. The CHAI
+    side runs the fused one-launch decode kernel (``decode_ts`` as in
+    ``make_serve_step``)."""
     def mixed_step(params, batch_inputs, state, chai_ctx):
         kw = {}
         if "embeddings" in batch_inputs:
@@ -122,7 +128,7 @@ def make_mixed_step(cfg: ModelConfig, *, moe_impl="ragged", unroll=False):
         logits, state = tfm.decode_step(params, cfg, tokens, state,
                                         chai_ctx=chai_ctx, mixed_phase=True,
                                         moe_impl=moe_impl, unroll=unroll,
-                                        **kw)
+                                        decode_ts=decode_ts, **kw)
         return logits, state
 
     return mixed_step
@@ -133,14 +139,18 @@ def make_slot_prefill(cfg: ModelConfig, max_seq: int, *,
     """Prefill ONE request (batch=1 forward) and insert it into batch slot
     ``slot`` of a unified decode state. Donate the state when jitting.
 
-    The returned callable is shape-specialized to the prompt length of
-    ``tokens`` — the engine keeps one jit per observed prompt length.
+    The returned callable is shape-specialized to the PADDED length of
+    ``tokens`` — the engine right-pads prompts to power-of-two buckets
+    and passes the real length as the traced ``true_len``, so retraces
+    are O(log max_seq) instead of O(distinct prompt lengths). Padding
+    rows beyond ``true_len`` are masked out of the logits, the decode
+    ``pos``, and the local ring caches (``forward_fullseq`` valid_len).
     """
-    def slot_prefill(params, tokens, state, slot):
+    def slot_prefill(params, tokens, true_len, state, slot):
         mini = tfm.init_decode_state(cfg, 1, max_seq)
         logits, mini, _ = tfm.forward_fullseq(
             params, cfg, tokens, state=mini, logits_slice="last",
-            moe_impl=moe_impl, unroll=unroll)
+            moe_impl=moe_impl, unroll=unroll, valid_len=true_len)
         state = chai_cache.insert_slot(state, mini, slot)
         return logits[:, 0], state
 
@@ -182,12 +192,15 @@ def make_paged_slot_prefill(cfg: ModelConfig, max_seq: int, *,
     """Paged ``make_slot_prefill``: the batch=1 forward fills a dense mini
     state, which is then scattered into the slot's freshly allocated
     pages (``kg_pages``/``vg_pages``: (P,) int32, null-padded). Donate
-    the state when jitting; shape-specialized per prompt length."""
-    def slot_prefill(params, tokens, state, slot, kg_pages, vg_pages):
+    the state when jitting; shape-specialized per power-of-two prompt
+    BUCKET (padding rows beyond ``true_len`` land either inside the
+    slot's own pages — masked by ``pos`` — or in the null sink page)."""
+    def slot_prefill(params, tokens, true_len, state, slot, kg_pages,
+                     vg_pages):
         mini = tfm.init_decode_state(cfg, 1, max_seq)
         logits, mini, _ = tfm.forward_fullseq(
             params, cfg, tokens, state=mini, logits_slice="last",
-            moe_impl=moe_impl, unroll=unroll)
+            moe_impl=moe_impl, unroll=unroll, valid_len=true_len)
         state = chai_cache.insert_slot_paged(state, mini, slot, kg_pages,
                                              vg_pages)
         return logits[:, 0], state

@@ -320,8 +320,18 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
 # ---------------------------------------------------------------------------
 
 def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
-                          write_cache):
-    """Returns branch fn(operand) -> (y, state) for lax.switch."""
+                          write_cache, valid_len=None):
+    """Returns branch fn(operand) -> (y, state) for lax.switch.
+
+    ``valid_len`` (traced scalar, bucketed prefill): tokens at positions
+    >= valid_len are padding. Global-cache writes of padding rows are
+    harmless (masked by ``pos`` validity at decode and overwritten as the
+    sequence advances), but the LOCAL ring cache wraps modulo the window
+    — the real tail [valid_len - w, valid_len) must land in the ring,
+    not the padded tail — so the ring is rebuilt functionally: slot s
+    takes the LATEST real position ≡ s (mod w), exactly the invariant
+    the unpadded write path establishes. (The valid_len path assumes
+    ``positions == arange(T)``, which is how the engine prefills.)"""
 
     def attn_branch(op, *, local):
         x, state, idxs = op
@@ -337,15 +347,29 @@ def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
             t = x.shape[1]
             if local and "kl" in state:
                 w = state["kl"].shape[3]
-                n = min(t, w)
-                slots = jnp.mod(positions[-n:], w)
                 kc = state["kl"]
                 kn = tree_index(kc, idxs["local"])
                 vn = tree_index(state["vl"], idxs["local"])
-                kn = kn.at[:, :, slots, :].set(
-                    k[:, -n:].transpose(0, 2, 1, 3).astype(kn.dtype))
-                vn = vn.at[:, :, slots, :].set(
-                    v[:, -n:].transpose(0, 2, 1, 3).astype(vn.dtype))
+                if valid_len is None:
+                    n = min(t, w)
+                    slots = jnp.mod(positions[-n:], w)
+                    kn = kn.at[:, :, slots, :].set(
+                        k[:, -n:].transpose(0, 2, 1, 3).astype(kn.dtype))
+                    vn = vn.at[:, :, slots, :].set(
+                        v[:, -n:].transpose(0, 2, 1, 3).astype(vn.dtype))
+                else:
+                    # Latest real position per ring slot: p(s) is the
+                    # largest p < valid_len with p ≡ s (mod w); slots
+                    # with no such p (valid_len < w tail) keep old rows.
+                    vl = jnp.asarray(valid_len, jnp.int32)
+                    s_arr = jnp.arange(w, dtype=jnp.int32)
+                    p_s = s_arr + w * ((vl - 1 - s_arr) // w)
+                    keep = (p_s >= 0)[None, None, :, None]
+                    p_c = jnp.clip(p_s, 0, t - 1)
+                    k_rows = jnp.take(k, p_c, axis=1).transpose(0, 2, 1, 3)
+                    v_rows = jnp.take(v, p_c, axis=1).transpose(0, 2, 1, 3)
+                    kn = jnp.where(keep, k_rows.astype(kn.dtype), kn)
+                    vn = jnp.where(keep, v_rows.astype(vn.dtype), vn)
                 state = dict(state)
                 state["kl"] = tree_update(kc, idxs["local"], kn)
                 state["vl"] = tree_update(state["vl"], idxs["local"], vn)
@@ -472,7 +496,7 @@ def _ffn_fullseq_branch(kind, cfg, params, moe_impl="capacity"):
 
 def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
                     positions=None, remat=False, logits_slice=None,
-                    moe_impl=None, unroll=False):
+                    moe_impl=None, unroll=False, valid_len=None):
     """inputs: tokens (B, T) int32, or embeddings (B, T, d) for stub
     frontends. state: decode-state pytree to fill (prefill) or None (train).
 
@@ -481,6 +505,11 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
     ``unroll``: unroll the layer scan — identical math, layer-count-sized
     HLO; used by the dry-run so cost_analysis counts every layer (XLA
     counts a while body ONCE — measured in EXPERIMENTS.md §Roofline).
+    ``valid_len`` (traced (,) int32): bucketed prefill — tokens at
+    positions >= valid_len are right-padding. "last" logits then come
+    from position valid_len - 1, the decode state's ``pos`` starts at
+    valid_len, and local ring-cache writes mask the padding tail (the
+    engine's power-of-two prompt buckets reuse one jit per bucket).
     """
     plan = layer_plan(cfg)
     if inputs.dtype in (jnp.int32, jnp.int64):
@@ -499,7 +528,8 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
     }
     mixer_branches = [
         _mixer_fullseq_branch(k, cfg, params, plan, positions,
-                              write_cache=state is not None)
+                              write_cache=state is not None,
+                              valid_len=valid_len)
         for k in plan["present_mixers"]]
     if moe_impl is None:
         # inference paths (prefill) default to the exact dropless MoE
@@ -530,13 +560,18 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
 
     h = rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
     if logits_slice == "last":
-        h = h[:, -1:]
+        if valid_len is None:
+            h = h[:, -1:]
+        else:   # bucketed prefill: last REAL token, not last padded one
+            h = jax.lax.dynamic_slice_in_dim(
+                h, jnp.asarray(valid_len, jnp.int32) - 1, 1, axis=1)
     w_un = (params["embed"]["tok"].T if cfg.tie_embeddings
             else params["unembed"]["w"])
     logits = unembed(h, w_un, cfg.final_logit_softcap)
     if state is not None and "pos" in out_state:
         out_state = dict(out_state)
-        out_state["pos"] = jnp.full((b,), t, jnp.int32)
+        fill = t if valid_len is None else jnp.asarray(valid_len, jnp.int32)
+        out_state["pos"] = jnp.full((b,), fill, jnp.int32)
     return logits, (out_state if state is not None else None), aux
 
 
@@ -544,7 +579,8 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
 # Decode step (one token). CHAI hooks: see repro/core/chai_attention.py
 # ---------------------------------------------------------------------------
 
-def _mixer_decode_branch(kind, cfg, params, chai_ctx, mixed_phase=False):
+def _mixer_decode_branch(kind, cfg, params, chai_ctx, mixed_phase=False,
+                         decode_ts=0):
     from repro.core import chai_attention as chai_mod
 
     def attn_branch(op, *, local):
@@ -566,11 +602,12 @@ def _mixer_decode_branch(kind, cfg, params, chai_ctx, mixed_phase=False):
                                                  write_mask=~steady)
             y_c, state = chai_mod.chai_decode_attention(
                 xn, p, cfg, state, idxs, chai_ctx, local=local,
-                write_mask=steady)
+                write_mask=steady, decode_ts=decode_ts)
             y = jnp.where(steady[:, None, None], y_c, y_m)
         elif chai_ctx is not None:
             y, state = chai_mod.chai_decode_attention(
-                xn, p, cfg, state, idxs, chai_ctx, local=local)
+                xn, p, cfg, state, idxs, chai_ctx, local=local,
+                decode_ts=decode_ts)
         else:
             y, state = _plain_decode_attention(xn, p, cfg, state, idxs,
                                                local=local)
@@ -640,19 +677,19 @@ def _paged_write_rows(pool, page_idx, row, new, old_masker):
     return pool.at[page_idx, :, row].set(old_masker(new, old))
 
 
-def _paged_global_update(state, idxs, k, v, pos, write_mask, cfg):
-    """Paged-layout global-cache decode update: write the new K/V rows
-    into each slot's current page of the shared dense pool, then return
-    dense logical views (B, KV, S, hd) gathered through the block tables
-    — the attention math downstream is identical to the dense layout's.
-    """
-    from repro.core.cache import dequant_rows, gather_pages, quant_rows
+def _paged_global_write(state, idxs, k, v, pos, write_mask, cfg):
+    """Paged-layout global-cache decode write: commit one token's K/V
+    rows into each slot's current page of the shared dense pool. Returns
+    (state, pool, scale_pool-or-None) WITHOUT densifying — the fused
+    decode kernel streams the pool through its block tables directly."""
+    from repro.core.cache import quant_rows
     pool = tree_index(state["kvp"], idxs["global"])   # (nP, KV, page, hd)
     page = pool.shape[2]
     pk, row = paged_token_coords(state["bt_kg"], pos, page)
     pv, _ = paged_token_coords(state["bt_vg"], pos, page)
     mask = functools.partial(_masked_rows, write_mask)
     state = dict(state)
+    spool = None
     if cfg.kv_cache_dtype == "int8":
         kq, ks = quant_rows(k)
         vq, vs = quant_rows(v)
@@ -663,16 +700,26 @@ def _paged_global_update(state, idxs, k, v, pos, write_mask, cfg):
         spool = _paged_write_rows(spool, pv, row, vs, mask)
         state["kvp_scale"] = tree_update(state["kvp_scale"],
                                          idxs["global"], spool)
-        kc_f = dequant_rows(gather_pages(pool, state["bt_kg"]),
-                            gather_pages(spool, state["bt_kg"]))
-        vc_f = dequant_rows(gather_pages(pool, state["bt_vg"]),
-                            gather_pages(spool, state["bt_vg"]))
     else:
         pool = _paged_write_rows(pool, pk, row, k, mask)
         pool = _paged_write_rows(pool, pv, row, v, mask)
-        kc_f = gather_pages(pool, state["bt_kg"])
-        vc_f = gather_pages(pool, state["bt_vg"])
     state["kvp"] = tree_update(state["kvp"], idxs["global"], pool)
+    return state, pool, spool
+
+
+def _paged_global_update(state, idxs, k, v, pos, write_mask, cfg):
+    """``_paged_global_write`` + dense logical views (B, KV, S, hd)
+    gathered through the block tables — the jnp fallback's interface
+    (the attention math downstream is identical to the dense layout's).
+    """
+    from repro.core.cache import dequant_rows, gather_pages
+    state, pool, spool = _paged_global_write(state, idxs, k, v, pos,
+                                             write_mask, cfg)
+    kc_f = gather_pages(pool, state["bt_kg"])
+    vc_f = gather_pages(pool, state["bt_vg"])
+    if spool is not None:
+        kc_f = dequant_rows(kc_f, gather_pages(spool, state["bt_kg"]))
+        vc_f = dequant_rows(vc_f, gather_pages(spool, state["bt_vg"]))
     return state, kc_f, vc_f
 
 
@@ -818,13 +865,16 @@ def _ffn_decode_branch(kind, cfg, params, moe_impl="ragged"):
 
 def decode_step(params, cfg: ModelConfig, tokens, state, *, chai_ctx=None,
                 mixed_phase=False, embeddings=None, moe_impl="ragged",
-                unroll=False):
+                unroll=False, decode_ts=0):
     """One decode step. tokens: (B,) int32 (or embeddings (B, d) for stub
     frontends). Returns (logits (B, V), new_state).
 
     ``mixed_phase``: with a ``chai_ctx``, route each batch slot through the
     MHA or CHAI attention path according to ``state["phase"]`` (unified
-    per-slot layout — continuous batching).
+    per-slot layout — continuous batching). ``decode_ts``: S-tile size for
+    the fused CHAI decode kernel on dense layouts (the engine passes its
+    page size so every KV layout tiles — and therefore rounds —
+    identically).
     """
     plan = layer_plan(cfg)
     if embeddings is not None:
@@ -840,7 +890,7 @@ def decode_step(params, cfg: ModelConfig, tokens, state, *, chai_ctx=None,
                  ("attn", "global", "local", "dense", "moe", "rec", "rwkv")},
     }
     mixer_branches = [_mixer_decode_branch(k, cfg, params, chai_ctx,
-                                           mixed_phase)
+                                           mixed_phase, decode_ts)
                       for k in plan["present_mixers"]]
     ffn_branches = [_ffn_decode_branch(k, cfg, params, moe_impl)
                     for k in plan["present_ffns"]]

@@ -156,20 +156,27 @@ class ServingEngine:
                 self.chai_pool = chai_cache.PagePool(n_chai, ecfg.page_size)
         # jax.jit wrappers are lazy (no tracing until the first call), so
         # both schedulers' steps are declared here unconditionally.
-        self._mha_step = jax.jit(steps_mod.make_serve_step(cfg, chai=False),
-                                 donate_argnums=(2,))
+        # decode_ts = page_size pins the fused CHAI kernel's dense tile
+        # size to the paged page size, so every layout/scheduler performs
+        # bit-identical attention arithmetic (cross-layout token parity).
+        self._mha_step = jax.jit(
+            steps_mod.make_serve_step(cfg, chai=False,
+                                      decode_ts=ecfg.page_size),
+            donate_argnums=(2,))
         self._prefill = jax.jit(steps_mod.make_serve_prefill(cfg, b, s))
         reset_maker = (steps_mod.make_paged_slot_reset if self.paged
                        else steps_mod.make_slot_reset)
         self._reset_slot = jax.jit(reset_maker(cfg), donate_argnums=(0,))
-        self._slot_prefills: dict = {}       # prompt length -> jit
+        self._slot_prefills: dict = {}       # pow2 length bucket -> jit
         self._cluster_slot = None            # built lazily (identify hook)
         if chai_on:
             self._chai_step = jax.jit(
-                steps_mod.make_serve_step(cfg, chai=True),
+                steps_mod.make_serve_step(cfg, chai=True,
+                                          decode_ts=ecfg.page_size),
                 donate_argnums=(2,))
-            self._mixed_step = jax.jit(steps_mod.make_mixed_step(cfg),
-                                       donate_argnums=(2,))
+            self._mixed_step = jax.jit(
+                steps_mod.make_mixed_step(cfg, decode_ts=ecfg.page_size),
+                donate_argnums=(2,))
             self._compact = jax.jit(steps_mod.make_compact_step(cfg),
                                     donate_argnums=(0,))
             self._identify = jax.jit(
@@ -204,15 +211,37 @@ class ServingEngine:
         return self._run_continuous()
 
     # -- continuous scheduler ----------------------------------------------
-    def _slot_prefill_fn(self, t: int):
-        fn = self._slot_prefills.get(t)
+    @staticmethod
+    def _prompt_bucket(t: int, cap: int) -> int:
+        """Next power of two >= t, capped at max_seq."""
+        b = 1
+        while b < t:
+            b <<= 1
+        return min(b, cap)
+
+    def _slot_prefill_fn(self, bucket: int):
+        """One compiled prefill per power-of-two prompt-length BUCKET
+        (prompts are right-padded to the bucket; the tail is masked via
+        the traced ``true_len``), so prefill retraces are O(log max_seq)
+        instead of O(distinct prompt lengths)."""
+        fn = self._slot_prefills.get(bucket)
         if fn is None:
             maker = (steps_mod.make_paged_slot_prefill if self.paged
                      else steps_mod.make_slot_prefill)
             fn = jax.jit(maker(self.cfg, self.ecfg.max_seq),
-                         donate_argnums=(2,))
-            self._slot_prefills[t] = fn
+                         donate_argnums=(3,))
+            self._slot_prefills[bucket] = fn
         return fn
+
+    def _padded_prompt(self, prompt):
+        """Right-pad a prompt to its bucket; returns (tokens (1, bucket),
+        true_len scalar). The jit cache key is the padded array's shape,
+        so the bucket is computed in exactly one place."""
+        t = len(prompt)
+        bucket = self._prompt_bucket(t, self.ecfg.max_seq)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :t] = prompt
+        return jnp.asarray(toks), jnp.int32(t)
 
     def _cluster_fn(self):
         # Built on first use so a monkeypatched ``_identify`` hook (tests,
@@ -336,15 +365,16 @@ class ServingEngine:
                     slot_pages[i] = pages
                 req = self.queue.popleft()
                 phases[i] = chai_cache.PHASE_PREFILL
-                toks = jnp.asarray(req.prompt[None, :])
+                toks, true_len = self._padded_prompt(req.prompt)
+                prefill = self._slot_prefill_fn(toks.shape[1])
                 if self.paged:
-                    logits, state = self._slot_prefill_fn(len(req.prompt))(
-                        self.params, toks, state, jnp.int32(i),
+                    logits, state = prefill(
+                        self.params, toks, true_len, state, jnp.int32(i),
                         self._page_vec(slot_pages[i]["kg"]),
                         self._page_vec(slot_pages[i]["vg"]))
                 else:
-                    logits, state = self._slot_prefill_fn(len(req.prompt))(
-                        self.params, toks, state, jnp.int32(i))
+                    logits, state = prefill(self.params, toks, true_len,
+                                            state, jnp.int32(i))
                 tok = int(np.asarray(self._sample(logits))[0])
                 req.t_first_token = time.time()
                 req.generated.append(tok)

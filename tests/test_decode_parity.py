@@ -21,6 +21,44 @@ PARITY_ARCHS = ["musicgen-large", "nemotron-4-15b", "gemma2-9b",
                 "deepseek-moe-16b", "recurrentgemma-9b", "rwkv6-1.6b"]
 
 
+@pytest.mark.parametrize("arch", ["gemma2-9b", "nemotron-4-15b"])
+def test_bucketed_prefill_matches_exact_prefill(arch, rng):
+    """The engine's power-of-two prompt bucketing (right-pad +
+    ``valid_len``) must reproduce the exact-length prefill bit-for-bit
+    observable: same last-token logits and same decode-step logits.
+    gemma2 covers LOCAL ring caches with bucket > window > true_len gap
+    (the ring must hold the last ``window`` REAL positions, not the
+    padded tail); nemotron covers plain global GQA."""
+    cfg = reduced(get_config(arch), window=8).replace(dtype="float32")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    b, t, bucket, s, n_dec = 2, 10, 32, 64, 3
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)), jnp.int32)
+    padded = jnp.zeros((b, bucket), jnp.int32).at[:, :t].set(toks)
+
+    state_ref = tfm.init_decode_state(cfg, b, s)
+    logits_ref, state_ref, _ = tfm.forward_fullseq(
+        params, cfg, toks, state=state_ref, logits_slice="last",
+        moe_impl="ragged")
+    state_bkt = tfm.init_decode_state(cfg, b, s)
+    logits_bkt, state_bkt, _ = tfm.forward_fullseq(
+        params, cfg, padded, state=state_bkt, logits_slice="last",
+        moe_impl="ragged", valid_len=jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_bkt),
+                               np.asarray(logits_ref), rtol=2e-4,
+                               atol=2e-4)
+    assert (np.asarray(state_bkt["pos"]) == t).all()
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (n_dec, b)),
+                      jnp.int32)
+    for i in range(n_dec):
+        l_ref, state_ref = tfm.decode_step(params, cfg, nxt[i], state_ref,
+                                           moe_impl="ragged")
+        l_bkt, state_bkt = tfm.decode_step(params, cfg, nxt[i], state_bkt,
+                                           moe_impl="ragged")
+        np.testing.assert_allclose(np.asarray(l_bkt), np.asarray(l_ref),
+                                   rtol=3e-4, atol=3e-4,
+                                   err_msg=f"{arch} decode step {i}")
+
+
 @pytest.mark.parametrize("arch", PARITY_ARCHS)
 def test_prefill_decode_matches_fullseq(arch, rng):
     cfg = reduced(get_config(arch), window=8).replace(dtype="float32")

@@ -114,6 +114,34 @@ def test_phase_vector_tracks_slot_lifecycle():
     assert "kg" in state and "kg_chai" in state and "chai_scores" in state
 
 
+def test_prompt_bucket_rounding():
+    from repro.serving.engine import ServingEngine
+    assert ServingEngine._prompt_bucket(1, 64) == 1
+    assert ServingEngine._prompt_bucket(3, 64) == 4
+    assert ServingEngine._prompt_bucket(8, 64) == 8
+    assert ServingEngine._prompt_bucket(9, 64) == 16
+    assert ServingEngine._prompt_bucket(33, 64) == 64
+    assert ServingEngine._prompt_bucket(60, 64) == 64   # capped at max_seq
+
+
+@pytest.mark.slow
+def test_prefill_jit_bucketing_compiles_per_bucket_not_per_length():
+    """Regression: ``_slot_prefills`` must key one jit per power-of-two
+    prompt BUCKET (tail masked), not per exact length — and the padded
+    prefill must not change a single greedy token (reference: cohort
+    runs with one request per cohort, which prefill at exact length)."""
+    cfg = _cfg(MHA_ARCH)
+    rng = np.random.default_rng(3)
+    lengths = [3, 5, 6, 7, 9, 12]          # buckets: {4, 8, 8, 8, 16, 16}
+    subs = [(rng.integers(0, cfg.vocab_size, size=t), 8) for t in lengths]
+    cont, eng = _run(cfg, "continuous", subs)
+    assert set(eng._slot_prefills) == {4, 8, 16}
+    assert len(eng._slot_prefills) == 3    # O(log max_seq), not 6
+    coh, _ = _run(cfg, "cohort", subs, slots=1)   # exact-length prefills
+    for uid in coh:
+        assert cont[uid].generated == coh[uid].generated, uid
+
+
 @pytest.mark.slow
 def test_mixed_workload_throughput_beats_cohort():
     """Mixed-length workload: continuous batching needs strictly fewer

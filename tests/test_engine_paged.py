@@ -220,6 +220,30 @@ def test_oversized_request_raises_memory_error():
         eng.run()
 
 
+# ------------------------------------------------ fused decode kernel ------
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,chai_kw,cfg_kw", [
+    (MHA_ARCH, {}, {}),
+    (MHA_ARCH, {"share_values": True}, {"kv_cache_dtype": "int8"}),
+    (GQA_ARCH, {}, {}),
+])
+def test_fused_decode_greedy_parity_with_jnp_reference(monkeypatch, arch,
+                                                       chai_kw, cfg_kw):
+    """End-to-end acceptance: the fused one-launch decode produces
+    token-for-token greedy parity with the pre-fusion jnp math across
+    phase mixes, layouts, int8 and share_values."""
+    from repro.core import chai_attention as chai_core
+    cfg = _cfg(arch, **chai_kw).replace(**cfg_kw)
+    subs = _submissions(cfg, lens=(10, 6, 8))
+    fused_p, _ = _run(cfg, subs, kv_layout="paged")
+    fused_d, _ = _run(cfg, subs, kv_layout="dense")
+    monkeypatch.setattr(chai_core, "USE_FUSED_DECODE", False)
+    reference, _ = _run(cfg, subs, kv_layout="paged")
+    for uid in reference:
+        assert fused_p[uid].generated == reference[uid].generated, uid
+        assert fused_d[uid].generated == reference[uid].generated, uid
+
+
 # ------------------------------------------- the memory win, realized ------
 @pytest.mark.slow
 def test_steady_state_paged_chai_below_dense_mha():

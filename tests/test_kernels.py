@@ -298,3 +298,208 @@ def test_chai_qk_i8_fused_dequant(rng, b, kv, rpg, s, hd, ts):
     a = ck.row_softmax(sc, interpret=True)
     want = ref.chai_scores_i8_ref(q_rep, kq, ks, pos, reps_per_group=rpg)
     np.testing.assert_allclose(np.asarray(a), np.asarray(want), **TOL)
+
+
+# ------------------------------------------------- fused one-pass decode ---
+def _fused_case(rng, *, b=2, kv=3, rpg=1, s=128, hd=16, int8=False,
+                share_values=False, qpk=None):
+    """Build one fused-decode problem. MHA: rpg == 1, H chosen freely;
+    GQA: H = kv * qpk, R = kv * rpg, h2c flat = group*rpg + within-group
+    cluster. pos is ragged (one slot near the end, the rest random)."""
+    from repro.core.cache import quant_rows
+    r_total = kv * rpg
+    if rpg == 1 and qpk is None:        # MHA: clustered cache, k_max rows
+        h = 8
+        h2c = rng.integers(0, r_total, size=(b, h))
+    else:                               # GQA: within-group membership
+        qpk = qpk or 4
+        h = kv * qpk
+        cluster_of = rng.integers(0, rpg, size=(b, kv, qpk))
+        h2c = (np.arange(kv)[None, :, None] * rpg + cluster_of).reshape(b, h)
+    q_rep = _mk(rng, (b, r_total, hd), jnp.float32)
+    kc = _mk(rng, (b, kv, s, hd), jnp.float32)
+    v_rows = r_total if share_values else (h if rpg == 1 else kv)
+    vc = _mk(rng, (b, v_rows, s, hd), jnp.float32)
+    pos = np.asarray(rng.integers(1, s, size=b))
+    pos[0] = s - 1                      # ragged: one slot at full length
+    kw = dict(reps_per_group=rpg, share_values=share_values)
+    if int8:
+        kq, ks = quant_rows(kc)
+        kc, kw["k_scale"] = kq, ks
+        if not share_values:            # clustered V codes stay scale-less
+            vq, vs = quant_rows(vc)
+            vc, kw["v_scale"] = vq, vs
+    return (q_rep, kc, vc, jnp.asarray(h2c, jnp.int32),
+            jnp.asarray(pos, jnp.int32)), kw
+
+
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("mode", ["mha", "mha_share", "gqa"])
+def test_chai_fused_decode_matrix(rng, mode, int8, window):
+    """The full dispatch matrix the engine serves: {MHA, GQA} x
+    {fp32, int8} x {share_values} x {window} x ragged pos — fused kernel
+    vs the pure-jnp oracle AND the retired three-kernel pipeline."""
+    kw_case = dict(share_values=(mode == "mha_share"))
+    if mode == "gqa":
+        kw_case.update(rpg=3, qpk=4)
+    args, kw = _fused_case(rng, int8=int8, **kw_case)
+    got = ck.chai_fused_decode(*args, ts=32, window=window, interpret=True,
+                               **kw)
+    want = ref.chai_fused_decode_ref(*args, window=window, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+    # the three-kernel pipeline survives as the second, independent oracle
+    pipe = ref.chai_three_kernel_decode(*args, ts=32, window=window, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(pipe), **TOL)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chai_fused_decode_cache_dtypes(rng, dtype):
+    """bf16 caches stream through the fused kernel (f32 accumulation)."""
+    (q, kc, vc, h2c, pos), kw = _fused_case(rng)
+    kc, vc = kc.astype(dtype), vc.astype(dtype)
+    got = ck.chai_fused_decode(q, kc, vc, h2c, pos, ts=32, interpret=True,
+                               **kw)
+    want = ref.chai_fused_decode_ref(q, kc, vc, h2c, pos, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("mode", ["mha", "mha_share", "gqa"])
+def test_paged_chai_fused_decode_matrix(rng, mode, int8):
+    """Paged fused decode across the same matrix: pools + block tables +
+    scale pools vs the densify-then-reference oracle."""
+    from repro.core.cache import quant_rows
+    b, n_pages, page, hd = 2, 4, 16, 16
+    kv, rpg = (2, 3) if mode == "gqa" else (3, 1)
+    share = mode == "mha_share"
+    r_total = kv * rpg
+    if mode == "gqa":
+        qpk = 4
+        h = kv * qpk
+        cluster_of = rng.integers(0, rpg, size=(b, kv, qpk))
+        h2c = (np.arange(kv)[None, :, None] * rpg
+               + cluster_of).reshape(b, h)
+        v_rows = kv
+    else:
+        h = 8
+        h2c = rng.integers(0, r_total, size=(b, h))
+        v_rows = r_total if share else h
+    nk = b * n_pages + 1
+    nv = b * n_pages + 1
+    k_pool = _mk(rng, (nk, kv, page, hd), jnp.float32)
+    v_pool = _mk(rng, (nv, v_rows, page, hd), jnp.float32)
+    bt_k = _mk_tables(rng, b, n_pages, nk)
+    bt_v = _mk_tables(rng, b, n_pages, nv)
+    q_rep = _mk(rng, (b, r_total, hd), jnp.float32)
+    pos = np.asarray(rng.integers(1, n_pages * page, size=b))
+    pos[0] = n_pages * page - 1
+    kw = dict(reps_per_group=rpg, share_values=share)
+    if int8:
+        kq, ksp = quant_rows(k_pool)
+        k_pool, kw["k_scale_pool"] = kq, ksp
+        if not share:
+            vq, vsp = quant_rows(v_pool)
+            v_pool, kw["v_scale_pool"] = vq, vsp
+    args = (q_rep, k_pool, bt_k, v_pool, bt_v,
+            jnp.asarray(h2c, jnp.int32), jnp.asarray(pos, jnp.int32))
+    got = ck.paged_chai_fused_decode(*args, interpret=True, **kw)
+    want = ref.paged_chai_fused_decode_ref(*args, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+    if not int8:   # second oracle: the retired paged three-kernel path
+        pipe = ref.paged_chai_three_kernel_decode(
+            *args, reps_per_group=rpg, share_values=share)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(pipe),
+                                   **TOL)
+
+
+def test_paged_fused_matches_dense_fused_bitwise(rng):
+    """Same logical cache contents, equal tile size: the paged fused
+    kernel must reproduce the dense fused kernel BIT-FOR-BIT (this is
+    what pins cross-KV-layout greedy token parity in the engine)."""
+    b, h, r, n_pages, page, hd = 2, 8, 4, 4, 16, 16
+    s = n_pages * page
+    nk = 2 * b * n_pages + 1
+    k_pool = _mk(rng, (nk, r, page, hd), jnp.float32)
+    v_pool = _mk(rng, (nk, h, page, hd), jnp.float32)
+    bt_k, bt_v = _mk_tables(rng, b, n_pages, nk, n=2)
+    kc = np.zeros((b, r, s, hd), np.float32)
+    vc = np.zeros((b, h, s, hd), np.float32)
+    for i in range(b):
+        for j in range(n_pages):
+            kc[i, :, j * page:(j + 1) * page] = np.asarray(
+                k_pool)[np.asarray(bt_k)[i, j]]
+            vc[i, :, j * page:(j + 1) * page] = np.asarray(
+                v_pool)[np.asarray(bt_v)[i, j]]
+    q = _mk(rng, (b, r, hd), jnp.float32)
+    h2c = jnp.asarray(rng.integers(0, r, size=(b, h)), jnp.int32)
+    pos = jnp.asarray([s - 1, 23], jnp.int32)
+    dense = ck.chai_fused_decode(q, jnp.asarray(kc), jnp.asarray(vc), h2c,
+                                 pos, ts=page, interpret=True)
+    paged = ck.paged_chai_fused_decode(q, k_pool, bt_k, v_pool, bt_v, h2c,
+                                       pos, interpret=True)
+    assert (np.asarray(dense) == np.asarray(paged)).all()
+
+
+def test_paged_fused_null_pages_masked(rng):
+    """Unallocated block-table entries point at the null sink page 0;
+    its contents must not leak into the fused output."""
+    b, h, r, n_pages, page, hd = 1, 4, 2, 4, 8, 16
+    n_pool = 2 * n_pages + 1
+    k_pool = _mk(rng, (n_pool, r, page, hd), jnp.float32)
+    v_pool = _mk(rng, (n_pool, h, page, hd), jnp.float32)
+    bt = _mk_tables(rng, b, n_pages, n_pool).at[:, 2:].set(0)
+    q = _mk(rng, (b, r, hd), jnp.float32)
+    h2c = jnp.asarray(rng.integers(0, r, size=(b, h)), jnp.int32)
+    pos = jnp.asarray([2 * page - 1], jnp.int32)
+    out1 = ck.paged_chai_fused_decode(q, k_pool, bt, v_pool, bt, h2c, pos,
+                                      interpret=True)
+    out2 = ck.paged_chai_fused_decode(q, k_pool.at[0].set(999.0), bt,
+                                      v_pool.at[0].set(-999.0), bt, h2c,
+                                      pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def _all_avals(jaxpr):
+    """Every aval in a (recursively closed) jaxpr."""
+    seen = []
+    todo = [jaxpr]
+    while todo:
+        j = todo.pop()
+        for eqn in j.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                if hasattr(v, "aval"):
+                    seen.append(v.aval)
+            for p in eqn.params.values():
+                vals = p if isinstance(p, (list, tuple)) else [p]
+                for sub in vals:
+                    inner = getattr(sub, "jaxpr", None)
+                    if inner is not None:
+                        todo.append(inner)
+                    elif hasattr(sub, "eqns"):
+                        todo.append(sub)
+    return seen
+
+
+def test_fused_decode_materializes_no_brs_scores(rng):
+    """Acceptance criterion: the fused path allocates NO (B, R, S) score
+    tensor anywhere in its jaxpr — while the three-kernel pipeline
+    provably does (the check has teeth)."""
+    from repro.kernels import ops
+    (q, kc, vc, h2c, pos), kw = _fused_case(rng, b=2, kv=3, s=128)
+    b, r, s = 2, 3, 128
+
+    def fused(q, kc, vc, h2c, pos):
+        return ops.chai_decode_attention(q, kc, vc, h2c, pos, ts=32,
+                                         interpret=True)
+
+    def pipeline(q, kc, vc, h2c, pos):
+        return ref.chai_three_kernel_decode(q, kc, vc, h2c, pos, ts=32)
+
+    fused_avals = _all_avals(jax.make_jaxpr(fused)(q, kc, vc, h2c, pos))
+    pipe_avals = _all_avals(jax.make_jaxpr(pipeline)(q, kc, vc, h2c, pos))
+    assert not any(getattr(a, "shape", None) == (b, r, s)
+                   for a in fused_avals)
+    assert any(getattr(a, "shape", None) == (b, r, s) for a in pipe_avals)
