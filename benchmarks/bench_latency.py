@@ -1,6 +1,6 @@
 """Paper Fig 12: time-to-first-token and time-to-next-token, MHA vs CHAI.
 
-Four measurements:
+Five measurements:
   1. **CPU wall time** on the trained tiny model through the serving
      engine (real phase machine, real clustering overhead in TTFT).
   2. **Analytic TPU v5e model** for the full LLaMA-7B config: decode
@@ -17,6 +17,10 @@ Four measurements:
      ``python -m benchmarks.bench_latency --check-fused`` runs only the
      deterministic claims (parity + 3→1 launch count) and exits non-zero
      on regression — CI gates on it.
+  5. **Prefix-reuse lane**: Poisson arrivals over a shared system prompt
+     through the radix prefix cache — TTFT cold vs warm (CHAI snapshot
+     hits enter STEADY directly), allocator pages saved vs a no-sharing
+     engine, and zero-leak refcount checks after the pools drain.
 """
 from __future__ import annotations
 
@@ -224,6 +228,113 @@ def _fused_kernel_lane(seed=0, timing=True):
     return result
 
 
+def _prefix_reuse_lane(cfg, params, pipe, *, n_warm=4, prompt_len=96,
+                       max_new=16, slots=4, mean_gap_s=0.005, seed=0):
+    """Shared-prefix KV reuse (radix prefix cache + CHAI snapshots):
+    Poisson arrivals over ONE shared system prompt. Wave 1 is cold (it
+    seeds the cache); wave 2 mixes exact repeats (CHAI snapshot hits —
+    STEADY entry, zero prefill) and shared-prefix-different-suffix
+    requests (partial hits — suffix-only prefill). Reports TTFT cold vs
+    warm, allocator pages saved vs a no-sharing engine, and leak-freedom
+    after the pools drain."""
+    from repro.serving.prefix_cache import PrefixCache  # noqa: F401
+    rng = np.random.default_rng(seed)
+    sys_prompt = np.asarray(pipe.batch(7000)["tokens"][0, :prompt_len])
+    other = np.asarray(pipe.batch(7001)["tokens"][0, :prompt_len])
+
+    def tails(base):
+        return [np.concatenate([sys_prompt[:prompt_len - 8],
+                                np.asarray(pipe.batch(base + i)["tokens"]
+                                           [0, :8])])
+                for i in range(n_warm // 2)]
+
+    arrivals = np.cumsum(rng.exponential(mean_gap_s, size=n_warm))
+
+    def fresh(prefix_cache):
+        return ServingEngine(cfg, params, EngineConfig(
+            batch_slots=slots, max_seq=128, page_size=16,
+            prefix_cache=prefix_cache))
+
+    out = {}
+    for lane, cached in (("prefix_cache", True), ("no_sharing", False)):
+        eng = fresh(cached)
+        # wave 0: compiles the cold-prefill jits and seeds the cache with
+        # an unrelated prompt, so the measured cold request below is
+        # jit-warm but cache-cold (a true miss).
+        eng.submit(other, max_new_tokens=max_new, uid=0)
+        eng.run()
+        cold = eng.submit(sys_prompt, max_new_tokens=max_new, uid=1)
+        eng.run()                               # measured miss: seeds cache
+        # wave 1 (unmeasured): compiles the suffix-prefill / snapshot
+        # restore jits on one warm mix
+        for i, p in enumerate([sys_prompt] + tails(7200)):
+            eng.submit(p, max_new_tokens=max_new, uid=100 + i)
+        eng.run()
+        # wave 2 (measured): same mix shape — exact repeats hit the CHAI
+        # snapshot, fresh tails partially hit the shared prefix. Pages
+        # are compared as the wave's allocation DELTA (pages_in_use also
+        # counts the cache's own residency, which is the reservation
+        # being traded for the sharing).
+        uniq = tails(7300)
+        in_use0 = (eng.dense_pool.pages_in_use
+                   + (eng.chai_pool.pages_in_use if eng.chai_pool else 0))
+        hist0 = len(eng.kv_bytes_history)
+        warm_reqs = []
+        for i in range(n_warm):
+            prompt = sys_prompt if i % 2 == 0 else uniq[i // 2]
+            warm_reqs.append(eng.submit(
+                prompt, max_new_tokens=max_new, uid=200 + i,
+                arrival_delay=float(arrivals[i])))
+        eng.run()
+        warm_hist = eng.kv_bytes_history[hist0:]
+        # single warm request on an idle engine: the TTFT comparison is
+        # cold-prefill-alone vs snapshot-resume-alone (both jit-warm);
+        # the concurrent wave above measures pages/hits, where TTFT
+        # would mostly measure admission queueing behind decode steps.
+        warm_alone = eng.submit(sys_prompt, max_new_tokens=max_new,
+                                uid=300)
+        eng.run()
+        out[lane] = {
+            "ttft_cold_s": cold.ttft,
+            "ttft_warm_s": warm_alone.ttft,
+            "ttft_warm_wave_s_mean": float(np.mean([r.ttft
+                                                    for r in warm_reqs])),
+            "warm_wave_pages_allocated": max(
+                h["dense_pages"] + h["chai_pages"] for h in warm_hist)
+                - in_use0,
+            "hits": {r.uid: r.cache_hit for r in warm_reqs},
+            "prefill_tokens": sum(max(r.prefill_tokens, 0)
+                                  for r in warm_reqs),
+        }
+        if cached:
+            out[lane]["stats"] = eng.prefix_stats()
+            eng.prefix_cache.clear()
+        out[lane]["pages_leaked"] = (eng.dense_pool.pages_in_use
+                                     + (eng.chai_pool.pages_in_use
+                                        if eng.chai_pool else 0))
+    cachedl, basel = out["prefix_cache"], out["no_sharing"]
+    out["pages_saved"] = (basel["warm_wave_pages_allocated"]
+                          - cachedl["warm_wave_pages_allocated"])
+    out["claims"] = {
+        # a fully-cached warm request skips prefill AND warmup/cluster:
+        # TTFT must beat the cold request's (deterministic work skipped,
+        # but still a wall-clock measure — advisory in CI)
+        "warm_ttft_below_cold":
+            cachedl["ttft_warm_s"] < cachedl["ttft_cold_s"],
+        # >= 2 concurrent shared-prefix requests allocate strictly fewer
+        # pages than the no-sharing baseline (deterministic)
+        "pages_saved_vs_no_sharing": out["pages_saved"] > 0,
+        # refcounts drain to zero after eviction + slot reset
+        "no_page_leaks": cachedl["pages_leaked"] == 0
+                         and basel["pages_leaked"] == 0,
+        # snapshot fast path actually exercised
+        "snapshot_hit_observed":
+            "snapshot" in cachedl["hits"].values()
+            or "replay" in cachedl["hits"].values(),
+    }
+    return out
+
+
 def _analytic_full(seqs=(256, 512, 1024, 2048)):
     cfg = get_config("chai-llama-7b")
     h, hd = cfg.n_heads, cfg.head_dim
@@ -255,6 +366,7 @@ def run():
     cpu_chai = _engine_times(cfg_chai, params, pipe, use_chai=True)
     sched = _scheduler_compare(cfg_chai, params, pipe)
     fused = _fused_kernel_lane()
+    prefix = _prefix_reuse_lane(cfg_chai, params, pipe)
 
     result = {
         "proxy_note": "CPU wall time on tiny model (engine incl. "
@@ -265,6 +377,7 @@ def run():
                          cpu_mha["per_token_s"] / cpu_chai["per_token_s"]},
         "scheduler_compare_poisson": sched,
         "fused_kernel_lane": fused,
+        "prefix_reuse": prefix,
         "analytic_llama7b_v5e": _analytic_full(),
         "paper_claim": "TTFT up to 1.73x, TTNT up to 5x at seq 2048",
         "claim_check": {
@@ -288,6 +401,15 @@ def run():
                 <= sched["continuous"]["kv_bytes_capacity"],
             "paged_admission_throughput_holds":
                 sched["paged_vs_dense_layout_steps_ratio"] <= 1.1,
+            # prefix-reuse lane: deterministic allocator claims + the
+            # (advisory-in-CI) cold-vs-warm TTFT ordering
+            "prefix_warm_ttft_below_cold":
+                prefix["claims"]["warm_ttft_below_cold"],
+            "prefix_pages_saved_vs_no_sharing":
+                prefix["claims"]["pages_saved_vs_no_sharing"],
+            "prefix_no_page_leaks": prefix["claims"]["no_page_leaks"],
+            "prefix_snapshot_hit_observed":
+                prefix["claims"]["snapshot_hit_observed"],
         },
     }
     save_result("bench_latency", result)

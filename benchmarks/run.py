@@ -19,16 +19,17 @@ import os
 import time
 import traceback
 
-BENCHES = [
-    "bench_accuracy_proxy",    # Tables 1-3
-    "bench_qkv_ablation",      # Table 4
-    "bench_flops",             # Figs 1/14
-    "bench_elbow",             # Fig 8
-    "bench_membership",        # Fig 9
-    "bench_kv_memory",         # Fig 11 + paged-allocator lane
-    "bench_latency",           # Fig 12 + paged scheduler lane
-    "bench_cluster_dist",      # Fig 13
-]
+BENCHES = {
+    "bench_accuracy_proxy": "Tables 1-3 (greedy agreement, logit fidelity)",
+    "bench_qkv_ablation": "Table 4 (CHAI-QKV share_values ablation)",
+    "bench_flops": "Figs 1/14 (attention FLOP ratios)",
+    "bench_elbow": "Fig 8 (per-layer elbow cluster counts)",
+    "bench_membership": "Fig 9 (membership churn)",
+    "bench_kv_memory": "Fig 11 + paged-allocator lane",
+    "bench_latency": "Fig 12 + scheduler / fused-kernel / prefix_reuse "
+                     "lanes",
+    "bench_cluster_dist": "Fig 13 (cluster size distribution)",
+}
 
 
 def main(argv=None):
@@ -39,10 +40,10 @@ def main(argv=None):
                     help="print available bench names and exit")
     args = ap.parse_args(argv)
     if args.list:
-        for name in BENCHES:
-            print(name)
+        for name, desc in BENCHES.items():
+            print(f"{name:24s} {desc}")
         return 0
-    names = args.only.split(",") if args.only else BENCHES
+    names = args.only.split(",") if args.only else list(BENCHES)
 
     failures, summaries = [], {}
     for name in names:

@@ -291,6 +291,14 @@ class PagePool:
     usable capacity is ``num_pages - 1``. Allocation state lives on the
     host (the device only ever sees block tables); ``alloc``/``free``
     are O(n) list ops on the free list.
+
+    Pages are **reference counted** so the prefix cache can alias one
+    physical page into many block tables (and its own radix index):
+    ``alloc`` hands out pages at refcount 1, ``incref`` adds a sharer,
+    ``free`` drops one reference and returns the page to the free list
+    only when the count reaches zero (freed-at-zero semantics). Shared
+    pages are read-only by convention — a writer must copy first
+    (copy-on-write, ``copy_pool_page``).
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -299,6 +307,7 @@ class PagePool:
         self.page_size = int(page_size)
         # LIFO free list (reuse-hot pages first); page 0 excluded.
         self._free = list(range(self.num_pages - 1, NULL_PAGE, -1))
+        self._rc: dict = {}            # page id -> reference count
 
     @property
     def capacity(self):
@@ -312,23 +321,42 @@ class PagePool:
     def pages_in_use(self):
         return self.capacity - len(self._free)
 
+    def refcount(self, page: int) -> int:
+        return self._rc.get(int(page), 0)
+
     def alloc(self, n: int):
-        """Pop ``n`` pages; raises if the pool cannot cover them."""
+        """Pop ``n`` pages at refcount 1; raises if the pool cannot
+        cover them."""
         if n > len(self._free):
             raise MemoryError(
                 f"page pool exhausted: want {n}, have {len(self._free)} "
                 f"of {self.capacity}")
         pages, self._free = self._free[:n], self._free[n:]
+        for p in pages:
+            self._rc[p] = 1
         return pages
 
+    def incref(self, pages):
+        """Add one reference per page (aliasing an allocated page)."""
+        for p in pages:
+            p = int(p)
+            assert self._rc.get(p, 0) > 0, f"incref of free page {p}"
+            self._rc[p] += 1
+
     def free(self, pages):
-        """Return pages to the pool (double-free / null-free guarded)."""
+        """Drop one reference per page; a page returns to the free list
+        when its count reaches zero (double-free / null-free guarded)."""
         for p in pages:
             p = int(p)
             assert p != NULL_PAGE, "freeing the null page"
-            assert p not in self._free, f"double free of page {p}"
             assert 0 < p < self.num_pages, p
-            self._free.append(p)
+            rc = self._rc.get(p, 0)
+            assert rc > 0, f"double free of page {p}"
+            if rc == 1:
+                del self._rc[p]
+                self._free.append(p)
+            else:
+                self._rc[p] = rc - 1
 
 
 def pages_needed(tokens: int, page_size: int):
@@ -437,11 +465,19 @@ def _scatter_pages(pool, x, pages):
     return pool.at[:, pages].set(m.astype(pool.dtype))
 
 
-def insert_slot_paged(state, mini, slot, kg_pages, vg_pages):
+def insert_slot_paged(state, mini, slot, kg_pages, vg_pages, *,
+                      bt_kg_row=None, bt_vg_row=None):
     """Paged ``insert_slot``: write a prefilled batch=1 dense decode state
     into slot ``slot``, scattering its global K/V rows into the slot's
     freshly allocated pages and recording the block tables. Donate
-    ``state`` when jitting."""
+    ``state`` when jitting.
+
+    Prefix-cache admissions alias shared pages: ``kg_pages``/``vg_pages``
+    are then the SCATTER vectors (``NULL_PAGE`` for the cached-prefix
+    logical pages, so the mini state's zero rows land in the null sink)
+    while ``bt_kg_row``/``bt_vg_row`` carry the full logical->physical
+    mapping including the aliased pages. Default (cold path): block
+    tables == scatter vectors."""
     state = dict(state)
     paged_keys = ("kg", "vg", "kg_scale", "vg_scale")
     for k, v in mini.items():
@@ -458,8 +494,10 @@ def insert_slot_paged(state, mini, slot, kg_pages, vg_pages):
                 state["kvp_scale"], mini["kg_scale"], kg_pages)
             state["kvp_scale"] = _scatter_pages(
                 state["kvp_scale"], mini["vg_scale"], vg_pages)
-        state["bt_kg"] = state["bt_kg"].at[slot].set(kg_pages)
-        state["bt_vg"] = state["bt_vg"].at[slot].set(vg_pages)
+        state["bt_kg"] = state["bt_kg"].at[slot].set(
+            kg_pages if bt_kg_row is None else bt_kg_row)
+        state["bt_vg"] = state["bt_vg"].at[slot].set(
+            vg_pages if bt_vg_row is None else bt_vg_row)
     if "chai_scores" in state:
         nA, _, h, wf = state["chai_scores"].shape
         state["chai_scores"] = jax.lax.dynamic_update_index_in_dim(
@@ -515,6 +553,46 @@ def compact_kv_slot_paged(state, slot_ctx, cfg: ModelConfig, slot,
                 g.astype(state["cp"].dtype))
             state["bt_vc"] = state["bt_vc"].at[slot].set(vd_pages)
             state["bt_vg"] = state["bt_vg"].at[slot].set(null_row)
+    state["phase"] = state["phase"].at[slot].set(PHASE_STEADY)
+    return state
+
+
+def copy_pool_page(state, src, dst, *, kind):
+    """Copy ONE physical page (all global layers) inside a pool — the
+    copy-on-write primitive for the prefix cache. ``kind="dense"`` copies
+    ``kvp`` (+ ``kvp_scale``), ``kind="chai"`` copies ``cp`` (+
+    ``cp_scale``). ``src``/``dst`` are traced int32 scalars; donate
+    ``state`` when jitting."""
+    keys = (("kvp", "kvp_scale") if kind == "dense"
+            else ("cp", "cp_scale"))
+    state = dict(state)
+    for k in keys:
+        if k in state:
+            row = jax.lax.dynamic_index_in_dim(state[k], src, 1,
+                                               keepdims=False)
+            state[k] = jax.lax.dynamic_update_index_in_dim(state[k], row,
+                                                           dst, 1)
+    return state
+
+
+def restore_slot_snapshot(state, slot, bt_kg_row, bt_vg_row, bt_kc_row,
+                          bt_vc_row, pos):
+    """Prefix-cache snapshot resume: point slot ``slot``'s block tables at
+    the (shared / copied) snapshot pages, rewind ``pos`` to the snapshot's
+    STEADY-entry position, and enter STEADY directly — the warm request
+    skips PREFILL, WARMUP and CLUSTER entirely. Donate ``state`` when
+    jitting."""
+    state = dict(state)
+    for key, row in (("bt_kg", bt_kg_row), ("bt_vg", bt_vg_row),
+                     ("bt_kc", bt_kc_row), ("bt_vc", bt_vc_row)):
+        if key in state:
+            state[key] = state[key].at[slot].set(row)
+    state["pos"] = state["pos"].at[slot].set(pos)
+    if "chai_scores" in state:
+        nA, _, h, wf = state["chai_scores"].shape
+        state["chai_scores"] = jax.lax.dynamic_update_index_in_dim(
+            state["chai_scores"], jnp.zeros((nA, 1, h, wf), jnp.float32),
+            slot, 1)
     state["phase"] = state["phase"].at[slot].set(PHASE_STEADY)
     return state
 

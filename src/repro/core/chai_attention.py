@@ -19,9 +19,10 @@ page size) pins the dense tile size to the paged page size so every KV
 layout performs bit-identical arithmetic (cross-layout greedy parity).
 The pure-jnp math is kept as the fallback for shapes the kernel does not
 cover (attention logit softcap, local ring caches) and as the reference
-path (``USE_FUSED_DECODE = False``). The legacy dense-GQA int8 layout —
-which stores reinterpreted codes with no scale gather — DOES run fused:
-the call simply passes no scales, preserving those semantics exactly.
+path (``USE_FUSED_DECODE = False``). Every int8 layout — dense and paged,
+MHA and GQA — carries a real per-(row, position) scale gather; the fused
+dispatch passes scales unconditionally (the historical dense-GQA
+code-reinterpret corner is gone).
 
 ctx arrays may be shared across the batch (ndim without B) or per-request
 (batched) — see repro.core.clustering.
@@ -334,10 +335,12 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
 
     paged = not local and "kvp" in state
     # Fused one-launch decode covers the global paths; the local ring
-    # cache keeps the jnp math (ring-ordered kv positions). The legacy
-    # dense-GQA int8 layout stores reinterpreted codes with no scale
-    # gather — the fused call passes no scales there, preserving it.
+    # cache keeps the jnp math (ring-ordered kv positions). The dense
+    # GQA int8 layout carries a real per-row scale gather exactly like
+    # the paged path (the historical no-scales code-reinterpret corner
+    # is gone), so the fused dispatch passes scales everywhere.
     fused = _fused_ok(cfg) and not local
+    int8 = cfg.kv_cache_dtype == "int8"
 
     def _flat_qrep_h2c():
         gather_idx = (cluster_of if batched
@@ -360,6 +363,7 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
                          vc[ar, :, slot, :]))
         kv_pos = jax.vmap(lambda pp: attn_mod.ring_positions(pp + 1, w))(pos)
         window = cfg.window_size
+        kc_f, vc_f = kc, vc     # local rings are never quantized
     elif paged:
         # GQA paged: K and V stay page-resident in the dense pool for the
         # whole request (no clustered cache — compute-only saving).
@@ -380,33 +384,63 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
         s = kc.shape[2]
         kv_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         window = 0
+        kc_f, vc_f = kc, vc     # already dequantized dense views
     else:
         s = state["kg"].shape[3]
         kc = tree_index(state["kg"], idxs["global"])
         vc = tree_index(state["vg"], idxs["global"])
-        kc = kc.at[ar, :, pos, :].set(
-            _masked_rows(write_mask, k_new.astype(kc.dtype),
-                         kc[ar, :, pos, :]))
-        vc = vc.at[ar, :, pos, :].set(
-            _masked_rows(write_mask, v_new.astype(vc.dtype),
-                         vc[ar, :, pos, :]))
+        ksc = vsc = None
+        if int8:
+            from repro.core.cache import dequant_rows, quant_rows
+            kq, ks = quant_rows(k_new)
+            vq, vs = quant_rows(v_new)
+            kc = kc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, kq, kc[ar, :, pos, :]))
+            vc = vc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, vq, vc[ar, :, pos, :]))
+            ksc = tree_index(state["kg_scale"], idxs["global"])
+            vsc = tree_index(state["vg_scale"], idxs["global"])
+            ksc = ksc.at[ar, :, pos].set(
+                _masked_rows(write_mask, ks, ksc[ar, :, pos]))
+            vsc = vsc.at[ar, :, pos].set(
+                _masked_rows(write_mask, vs, vsc[ar, :, pos]))
+        else:
+            kc = kc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, k_new.astype(kc.dtype),
+                             kc[ar, :, pos, :]))
+            vc = vc.at[ar, :, pos, :].set(
+                _masked_rows(write_mask, v_new.astype(vc.dtype),
+                             vc[ar, :, pos, :]))
         kv_pos = jnp.broadcast_to(
             jnp.arange(s, dtype=jnp.int32), (b, s))
         window = 0
+
+        def _commit_dense(state):
+            state = dict(state)
+            state["kg"] = tree_update(state["kg"], idxs["global"], kc)
+            state["vg"] = tree_update(state["vg"], idxs["global"], vc)
+            if int8:
+                state["kg_scale"] = tree_update(state["kg_scale"],
+                                                idxs["global"], ksc)
+                state["vg_scale"] = tree_update(state["vg_scale"],
+                                                idxs["global"], vsc)
+            return state
+
         if fused:
             q_flat, h2c_flat = _flat_qrep_h2c()
             from repro.kernels import ops as kops
             out = kops.chai_decode_attention(
-                q_flat, kc, vc, h2c_flat, pos, reps_per_group=r,
-                ts=_dense_ts(decode_ts, s))
-            state = dict(state)
-            state["kg"] = tree_update(state["kg"], idxs["global"], kc)
-            state["vg"] = tree_update(state["vg"], idxs["global"], vc)
-            return out.astype(xn.dtype), state
+                q_flat, kc, vc, h2c_flat, pos, k_scale=ksc, v_scale=vsc,
+                reps_per_group=r, ts=_dense_ts(decode_ts, s))
+            return out.astype(xn.dtype), _commit_dense(state)
+        if int8:
+            kc_f, vc_f = dequant_rows(kc, ksc), dequant_rows(vc, vsc)
+        else:
+            kc_f, vc_f = kc, vc
 
     scale = 1.0 / math.sqrt(hd)
     sc = jnp.einsum("bkre,bkse->bkrs", q_rep.astype(jnp.float32),
-                    kc.astype(jnp.float32)) * scale
+                    kc_f.astype(jnp.float32)) * scale
     sc = softcap(sc, cfg.attn_logit_softcap)
     valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
     if window:
@@ -417,14 +451,13 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
     gather_idx = (cluster_of if batched
                   else jnp.broadcast_to(cluster_of, (b, n_kv, qpk)))
     a_full = jnp.take_along_axis(a, gather_idx[..., None], axis=2)
-    out = jnp.einsum("bkgs,bksd->bkgd", a_full, vc.astype(jnp.float32))
+    out = jnp.einsum("bkgs,bksd->bkgd", a_full, vc_f.astype(jnp.float32))
     out = out.reshape(b, h, hd)
 
-    state = dict(state)
     if local:
+        state = dict(state)
         state["kl"] = tree_update(state["kl"], idxs["local"], kc)
         state["vl"] = tree_update(state["vl"], idxs["local"], vc)
     elif not paged:     # paged: _paged_global_update already committed
-        state["kg"] = tree_update(state["kg"], idxs["global"], kc)
-        state["vg"] = tree_update(state["vg"], idxs["global"], vc)
+        state = _commit_dense(state)
     return out.astype(xn.dtype), state

@@ -205,8 +205,8 @@ def paged_decode(q, kv_pool, bt_k, bt_v, pos, *, window=0, interpret=None):
 
 
 # ------------------------------------------------------------------ prefill
-def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                    scale, window, tq, ts, n_tiles, offset):
+def _prefill_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                    acc_scr, *, scale, window, tq, ts, n_tiles):
     i = pl.program_id(2)           # q tile
     j = pl.program_id(3)           # kv tile
 
@@ -216,7 +216,10 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q_start = offset + i * tq
+    # Query offset arrives as a scalar-prefetched value so it may be
+    # TRACED — the prefix cache's suffix prefill runs one jit per suffix
+    # bucket with the cached-prefix length varying per request.
+    q_start = off_ref[0] + i * tq
     kv_start = j * ts
     # causal block skip: this kv tile intersects the causal triangle iff
     # kv_start <= q_end; window skip iff kv_end > q_start - window
@@ -257,7 +260,11 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_prefill(q, k, v, *, offset=0, window=0, tq=256, ts=512,
                   interpret=None):
     """q: (B, T, H, hd); k/v: (B, S, KV, hd) (time-major KV, as projected).
-    Causal: query t at absolute position offset+t. Returns (B, T, H, hd)."""
+    Causal: query t at absolute position offset+t. ``offset`` may be a
+    python int OR a traced int32 scalar (it rides in via scalar prefetch)
+    — the prefix-cache suffix prefill attends new tokens over cached
+    prefix KV with a per-request offset under one jit per suffix bucket.
+    Returns (B, T, H, hd)."""
     if interpret is None:
         interpret = _interpret_default()
     b, t, h, hd = q.shape
@@ -272,29 +279,34 @@ def flash_prefill(q, k, v, *, offset=0, window=0, tq=256, ts=512,
     qh = q.transpose(0, 2, 1, 3)
     kh = k.transpose(0, 2, 1, 3)
     vh = v.transpose(0, 2, 1, 3)
+    off = jnp.asarray(offset, jnp.int32).reshape((1,))
 
     grid = (b, h, t // tq, n_tiles)
     kernel = functools.partial(_prefill_kernel, scale=scale, window=window,
-                               tq=tq, ts=ts, n_tiles=n_tiles, offset=offset)
+                               tq=tq, ts=ts, n_tiles=n_tiles)
     out = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, tq, hd), lambda bb, hh, ii, jj:
-                         (bb, hh, ii, 0)),
-            pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ii, jj:
-                         (bb, hh // qpk, jj, 0)),
-            pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ii, jj:
-                         (bb, hh // qpk, jj, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, tq, hd), lambda bb, hh, ii, jj:
-                               (bb, hh, ii, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((tq, 1), jnp.float32),
-            pltpu.VMEM((tq, 1), jnp.float32),
-            pltpu.VMEM((tq, hd), jnp.float32),
-        ],
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, tq, hd), lambda bb, hh, ii, jj, off_r:
+                             (bb, hh, ii, 0)),
+                pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ii, jj, off_r:
+                             (bb, hh // qpk, jj, 0)),
+                pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ii, jj, off_r:
+                             (bb, hh // qpk, jj, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, tq, hd),
+                                   lambda bb, hh, ii, jj, off_r:
+                                   (bb, hh, ii, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((tq, 1), jnp.float32),
+                pltpu.VMEM((tq, 1), jnp.float32),
+                pltpu.VMEM((tq, hd), jnp.float32),
+            ],
+        ),
         out_shape=jax.ShapeDtypeStruct((b, h, t, hd), q.dtype),
         interpret=interpret,
-    )(qh, kh, vh)
+    )(off, qh, kh, vh)
     return out.transpose(0, 2, 1, 3)

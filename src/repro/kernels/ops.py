@@ -26,10 +26,11 @@ def flash_decode_attention(q, k_cache, v_cache, pos, *, window=0, ts=512,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("offset", "window", "tq", "ts",
-                                    "interpret"))
-def flash_prefill_attention(q, k, v, *, offset=0, window=0, tq=256, ts=512,
+                   static_argnames=("window", "tq", "ts", "interpret"))
+def flash_prefill_attention(q, k, v, offset=0, *, window=0, tq=256, ts=512,
                             interpret=None):
+    """``offset`` is a regular (traceable) argument: the prefix-cache
+    suffix prefill varies it per request without retracing."""
     return fk.flash_prefill(q, k, v, offset=offset, window=window, tq=tq,
                             ts=ts, interpret=interpret)
 

@@ -69,12 +69,18 @@ def make_train_step(cfg: ModelConfig, *, remat=True, moe_impl="capacity",
 
 def make_serve_prefill(cfg: ModelConfig, batch: int, max_seq: int, *,
                        moe_impl="capacity", unroll=False):
+    """Whole-cohort prefill. ``batch_inputs`` may carry ``true_lens``
+    ((B,) int32): prompts are then right-padded to one power-of-two
+    bucket and each row's padding tail is masked per example (last-real
+    logits, per-example ``pos``), so the cohort scheduler compiles one
+    prefill per BUCKET instead of one per padded cohort length."""
     def serve_prefill(params, batch_inputs):
         inputs = batch_inputs.get("tokens", batch_inputs.get("embeddings"))
         state = tfm.init_decode_state(cfg, batch, max_seq)
         logits, state, _ = tfm.forward_fullseq(
             params, cfg, inputs, state=state, logits_slice="last",
-            moe_impl=moe_impl, unroll=unroll)
+            moe_impl=moe_impl, unroll=unroll,
+            valid_len=batch_inputs.get("true_lens"))
         return logits[:, 0], state
 
     return serve_prefill
@@ -206,6 +212,72 @@ def make_paged_slot_prefill(cfg: ModelConfig, max_seq: int, *,
         return logits[:, 0], state
 
     return slot_prefill
+
+
+def _paged_dense_view(state, bt_row, cfg):
+    """Dense logical (nG, 1, KV, S, hd) fp view of one slot's pages
+    through a block-table row (dequantized under int8) — the cached
+    prefix the suffix prefill attends over."""
+    g = state["kvp"][:, bt_row]                  # (nG, P, KV, page, hd)
+    ng, p, kv, page, hd = g.shape
+    m = g.transpose(0, 2, 1, 3, 4).reshape(ng, kv, p * page, hd)
+    if "kvp_scale" in state:
+        from repro.core.cache import dequant_rows
+        sg = state["kvp_scale"][:, bt_row]       # (nG, P, KV, page)
+        sm = sg.transpose(0, 2, 1, 3).reshape(ng, kv, p * page)
+        m = dequant_rows(m, sm)
+    return m[:, None]                            # (nG, 1, KV, S, hd)
+
+
+def make_paged_suffix_prefill(cfg: ModelConfig, max_seq: int, *,
+                              moe_impl="capacity", unroll=False):
+    """Cached-aware prefill: forward ONLY the uncached suffix of a
+    prompt whose first ``prefix_len`` tokens (a whole number of pages)
+    already live in shared pages aliased into the slot's block tables.
+
+    ``tokens`` (1, Tb) is the right-padded suffix bucket; ``true_len``
+    its real length; ``bt_kg_row``/``bt_vg_row`` the FULL logical page
+    mapping (aliased prefix + fresh suffix pages); ``kg_scatter``/
+    ``vg_scatter`` the same rows with the aliased entries nulled so the
+    mini state's scatter cannot touch shared pages (copy-on-write: the
+    suffix writes only into the slot's own pages). Suffix queries attend
+    over cached prefix + suffix via ``flash_prefill``'s traced query
+    offset; shape-specialized per suffix bucket only. Donate the state
+    when jitting."""
+    def suffix_prefill(params, tokens, true_len, prefix_len, state, slot,
+                       kg_scatter, vg_scatter, bt_kg_row, bt_vg_row):
+        prefix_kv = {"kg": _paged_dense_view(state, bt_kg_row, cfg),
+                     "vg": _paged_dense_view(state, bt_vg_row, cfg)}
+        mini = tfm.init_decode_state(cfg, 1, max_seq)
+        logits, mini, _ = tfm.forward_fullseq(
+            params, cfg, tokens, state=mini, logits_slice="last",
+            moe_impl=moe_impl, unroll=unroll, valid_len=true_len,
+            prefix_len=prefix_len, prefix_kv=prefix_kv)
+        state = chai_cache.insert_slot_paged(
+            state, mini, slot, kg_scatter, vg_scatter,
+            bt_kg_row=bt_kg_row, bt_vg_row=bt_vg_row)
+        return logits[:, 0], state
+
+    return suffix_prefill
+
+
+def make_snapshot_restore(cfg: ModelConfig):
+    """CHAI snapshot resume: alias the snapshot's clustered + dense-V
+    pages into the slot's block tables and enter STEADY directly."""
+    def restore(state, slot, bt_kg_row, bt_vg_row, bt_kc_row, bt_vc_row,
+                pos):
+        return chai_cache.restore_slot_snapshot(
+            state, slot, bt_kg_row, bt_vg_row, bt_kc_row, bt_vc_row, pos)
+
+    return restore
+
+
+def make_page_copy(cfg: ModelConfig, kind: str):
+    """Copy-on-write page copy inside one pool (``kind``: dense|chai)."""
+    def copy(state, src, dst):
+        return chai_cache.copy_pool_page(state, src, dst, kind=kind)
+
+    return copy
 
 
 def make_paged_slot_cluster(cfg: ModelConfig, identify_fn):

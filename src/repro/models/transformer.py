@@ -319,19 +319,38 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
 # Full-sequence forward (train + prefill)
 # ---------------------------------------------------------------------------
 
+def _tile_size(n, cap):
+    """Largest divisor of ``n`` not exceeding ``cap`` (kernel tiling)."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
 def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
-                          write_cache, valid_len=None):
+                          write_cache, valid_len=None, prefix_len=None,
+                          prefix_kv=None):
     """Returns branch fn(operand) -> (y, state) for lax.switch.
 
-    ``valid_len`` (traced scalar, bucketed prefill): tokens at positions
-    >= valid_len are padding. Global-cache writes of padding rows are
-    harmless (masked by ``pos`` validity at decode and overwritten as the
-    sequence advances), but the LOCAL ring cache wraps modulo the window
-    — the real tail [valid_len - w, valid_len) must land in the ring,
-    not the padded tail — so the ring is rebuilt functionally: slot s
-    takes the LATEST real position ≡ s (mod w), exactly the invariant
-    the unpadded write path establishes. (The valid_len path assumes
-    ``positions == arange(T)``, which is how the engine prefills.)"""
+    ``valid_len`` (traced, bucketed prefill; scalar or per-example (B,)):
+    tokens at positions >= valid_len are padding. Global-cache writes of
+    padding rows are harmless (masked by ``pos`` validity at decode and
+    overwritten as the sequence advances), but the LOCAL ring cache wraps
+    modulo the window — the real tail [valid_len - w, valid_len) must
+    land in the ring, not the padded tail — so the ring is rebuilt
+    functionally: slot s takes the LATEST real position ≡ s (mod w),
+    exactly the invariant the unpadded write path establishes. (The
+    valid_len path assumes ``positions == prefix + arange(T)``, which is
+    how the engine prefills.)
+
+    ``prefix_kv`` (+ traced ``prefix_len``): cached-prefix suffix
+    prefill. ``prefix_kv["kg"]/["vg"]`` are dense (nG, B, KV, S, hd)
+    logical views of the pages already holding positions
+    [0, prefix_len); the new tokens' queries (at absolute positions
+    ``prefix_len + t``) attend over cached prefix + fresh suffix through
+    ``flash_prefill`` with the traced query offset (jnp fallback under a
+    logit softcap). Only global layers support a prefix — the engine
+    gates the prefix cache to local-free archs."""
 
     def attn_branch(op, *, local):
         x, state, idxs = op
@@ -339,9 +358,37 @@ def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
         xn = rms_norm(x, p["ln"], cfg.norm_eps)
         q, k, v = attn_mod.project_qkv(xn, p, cfg, positions)
         window = cfg.window_size if local else 0
-        y = attn_mod.attention_fullseq(
-            q, k, v, positions, positions, window=window,
-            attn_softcap=cfg.attn_logit_softcap)
+        if prefix_kv is not None and not local:
+            # Suffix prefill: splice the fresh K/V into the cached-prefix
+            # view at the traced offset (index == absolute position), so
+            # causal masking by position covers prefix + suffix at once;
+            # rows past prefix_len + T are garbage but never attended.
+            kp = jnp.moveaxis(tree_index(prefix_kv["kg"], idxs["global"]),
+                              1, 2)                       # (B, S, KV, hd)
+            vp = jnp.moveaxis(tree_index(prefix_kv["vg"], idxs["global"]),
+                              1, 2)
+            off = jnp.asarray(prefix_len, jnp.int32)
+            k_all = jax.lax.dynamic_update_slice(
+                kp, k.astype(kp.dtype), (0, off, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                vp, v.astype(vp.dtype), (0, off, 0, 0))
+            s_all = k_all.shape[1]
+            t_q = q.shape[1]
+            if cfg.attn_logit_softcap:
+                y = attn_mod.attention_fullseq(
+                    q, k_all, v_all, positions,
+                    jnp.arange(s_all, dtype=jnp.int32),
+                    attn_softcap=cfg.attn_logit_softcap,
+                    chunk=_tile_size(s_all, 1024))
+            else:
+                from repro.kernels import flash_attention as fk
+                y = fk.flash_prefill(q, k_all, v_all, offset=off,
+                                     tq=_tile_size(t_q, 256),
+                                     ts=_tile_size(s_all, 512))
+        else:
+            y = attn_mod.attention_fullseq(
+                q, k, v, positions, positions, window=window,
+                attn_softcap=cfg.attn_logit_softcap)
         y = attn_mod.output_proj(y, p)
         if write_cache and state:
             t = x.shape[1]
@@ -361,13 +408,23 @@ def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
                     # Latest real position per ring slot: p(s) is the
                     # largest p < valid_len with p ≡ s (mod w); slots
                     # with no such p (valid_len < w tail) keep old rows.
+                    # valid_len may be per-example (B,) — the cohort
+                    # scheduler right-pads ragged prompts to one bucket.
                     vl = jnp.asarray(valid_len, jnp.int32)
+                    bN = kn.shape[0]
+                    vl_b = (jnp.broadcast_to(vl, (bN,)) if vl.ndim == 0
+                            else vl)
                     s_arr = jnp.arange(w, dtype=jnp.int32)
-                    p_s = s_arr + w * ((vl - 1 - s_arr) // w)
-                    keep = (p_s >= 0)[None, None, :, None]
-                    p_c = jnp.clip(p_s, 0, t - 1)
-                    k_rows = jnp.take(k, p_c, axis=1).transpose(0, 2, 1, 3)
-                    v_rows = jnp.take(v, p_c, axis=1).transpose(0, 2, 1, 3)
+                    p_s = s_arr[None, :] + w * (
+                        (vl_b[:, None] - 1 - s_arr[None, :]) // w)
+                    keep = (p_s >= 0)[:, None, :, None]
+                    p_c = jnp.clip(p_s, 0, t - 1)         # (B, w)
+                    k_rows = jnp.take_along_axis(
+                        k, p_c[:, :, None, None], axis=1)  # (B, w, KV, hd)
+                    v_rows = jnp.take_along_axis(
+                        v, p_c[:, :, None, None], axis=1)
+                    k_rows = k_rows.transpose(0, 2, 1, 3)
+                    v_rows = v_rows.transpose(0, 2, 1, 3)
                     kn = jnp.where(keep, k_rows.astype(kn.dtype), kn)
                     vn = jnp.where(keep, v_rows.astype(vn.dtype), vn)
                 state = dict(state)
@@ -496,7 +553,8 @@ def _ffn_fullseq_branch(kind, cfg, params, moe_impl="capacity"):
 
 def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
                     positions=None, remat=False, logits_slice=None,
-                    moe_impl=None, unroll=False, valid_len=None):
+                    moe_impl=None, unroll=False, valid_len=None,
+                    prefix_len=None, prefix_kv=None):
     """inputs: tokens (B, T) int32, or embeddings (B, T, d) for stub
     frontends. state: decode-state pytree to fill (prefill) or None (train).
 
@@ -505,11 +563,18 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
     ``unroll``: unroll the layer scan — identical math, layer-count-sized
     HLO; used by the dry-run so cost_analysis counts every layer (XLA
     counts a while body ONCE — measured in EXPERIMENTS.md §Roofline).
-    ``valid_len`` (traced (,) int32): bucketed prefill — tokens at
-    positions >= valid_len are right-padding. "last" logits then come
-    from position valid_len - 1, the decode state's ``pos`` starts at
-    valid_len, and local ring-cache writes mask the padding tail (the
-    engine's power-of-two prompt buckets reuse one jit per bucket).
+    ``valid_len`` (traced int32, scalar or per-example (B,)): bucketed
+    prefill — tokens at index >= valid_len within this call are
+    right-padding. "last" logits then come from index valid_len - 1, the
+    decode state's ``pos`` starts at valid_len, and local ring-cache
+    writes mask the padding tail (the engine's power-of-two prompt
+    buckets reuse one jit per bucket; the cohort scheduler passes a
+    per-example vector for ragged cohorts).
+    ``prefix_len``/``prefix_kv`` (traced scalar + dense (nG, B, KV, S,
+    hd) views): cached-prefix suffix prefill — this call's tokens sit at
+    absolute positions ``prefix_len + arange(T)`` and attend over the
+    cached prefix KV; global-cache writes land at those absolute
+    positions, and ``pos`` starts at ``prefix_len + valid_len``.
     """
     plan = layer_plan(cfg)
     if inputs.dtype in (jnp.int32, jnp.int64):
@@ -519,6 +584,8 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
     b, t = h.shape[0], h.shape[1]
     if positions is None:
         positions = jnp.arange(t, dtype=jnp.int32)
+        if prefix_len is not None:
+            positions = jnp.asarray(prefix_len, jnp.int32) + positions
 
     xs = {
         "mixer_compact": jnp.asarray(plan["mixer_compact"]),
@@ -529,7 +596,8 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
     mixer_branches = [
         _mixer_fullseq_branch(k, cfg, params, plan, positions,
                               write_cache=state is not None,
-                              valid_len=valid_len)
+                              valid_len=valid_len, prefix_len=prefix_len,
+                              prefix_kv=prefix_kv)
         for k in plan["present_mixers"]]
     if moe_impl is None:
         # inference paths (prefill) default to the exact dropless MoE
@@ -563,15 +631,21 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
         if valid_len is None:
             h = h[:, -1:]
         else:   # bucketed prefill: last REAL token, not last padded one
-            h = jax.lax.dynamic_slice_in_dim(
-                h, jnp.asarray(valid_len, jnp.int32) - 1, 1, axis=1)
+            vl = jnp.asarray(valid_len, jnp.int32)
+            if vl.ndim == 0:
+                h = jax.lax.dynamic_slice_in_dim(h, vl - 1, 1, axis=1)
+            else:   # ragged cohort: per-example last real token
+                h = jnp.take_along_axis(h, (vl - 1)[:, None, None], axis=1)
     w_un = (params["embed"]["tok"].T if cfg.tie_embeddings
             else params["unembed"]["w"])
     logits = unembed(h, w_un, cfg.final_logit_softcap)
     if state is not None and "pos" in out_state:
         out_state = dict(out_state)
         fill = t if valid_len is None else jnp.asarray(valid_len, jnp.int32)
-        out_state["pos"] = jnp.full((b,), fill, jnp.int32)
+        if prefix_len is not None:
+            fill = fill + jnp.asarray(prefix_len, jnp.int32)
+        out_state["pos"] = jnp.broadcast_to(
+            jnp.asarray(fill, jnp.int32), (b,))
     return logits, (out_state if state is not None else None), aux
 
 

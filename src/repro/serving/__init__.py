@@ -1,1 +1,2 @@
 from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F401
+from repro.serving.prefix_cache import ChaiSnapshot, PrefixCache  # noqa: F401

@@ -80,6 +80,10 @@ class Request:
     slot: int = -1                     # continuous: slot the request ran in
     admit_step: int = -1               # continuous: engine step at admission
     retire_step: int = -1              # continuous: engine step at retire
+    # -- prefix cache --
+    cache_hit: str = ""                # "" | "prefix" | "snapshot" | "replay"
+    cached_tokens: int = 0             # prompt tokens served from cache
+    prefill_tokens: int = -1           # tokens actually forwarded (prefill)
 
     @property
     def ttft(self):
@@ -111,6 +115,14 @@ class EngineConfig:
     # page-budget admission path).
     num_pages: int = 0                 # dense K/V pool
     num_chai_pages: int = 0            # clustered pool (MHA+CHAI archs)
+    # -- shared-prefix KV reuse (paged layout only) ---------------------
+    # Radix-tree prefix cache over token blocks: admission aliases the
+    # longest cached block-prefix into the slot's block tables and
+    # prefills only the uncached suffix; for MHA+CHAI archs a request
+    # whose FULL prompt was served before resumes from a CHAI snapshot
+    # (membership + clustered pages) and enters STEADY directly. Cached
+    # pages are refcounted, copy-on-write, LRU-evicted under pressure.
+    prefix_cache: bool = False
 
 
 class ServingEngine:
@@ -154,6 +166,29 @@ class ServingEngine:
                 share = 2 if cfg.chai.share_values else 1
                 n_chai = ecfg.num_chai_pages or (share * b * p_slot + 1)
                 self.chai_pool = chai_cache.PagePool(n_chai, ecfg.page_size)
+        # -- shared-prefix KV reuse ---------------------------------------
+        self.prefix_cache = None
+        if ecfg.prefix_cache:
+            if not self.paged:
+                raise ValueError("prefix_cache requires the paged KV "
+                                 "layout on the continuous scheduler")
+            if (cfg.n_local_layers or cfg.n_rec_layers
+                    or cfg.n_rwkv_layers):
+                # Local rings / recurrent state depend on the whole
+                # prefix but are not paged — a suffix-only prefill
+                # cannot rebuild them.
+                raise ValueError(
+                    "prefix_cache supports global-attention-only archs "
+                    f"(got {cfg.name!r} with local/recurrent layers)")
+            from repro.serving.prefix_cache import PrefixCache
+            self.prefix_cache = PrefixCache(self.dense_pool,
+                                            self.chai_pool, ecfg.page_size)
+        # Paged device state persists across run() calls so cached pages
+        # keep their contents between request waves (None until first
+        # continuous run; the dense/unified layout stays per-run).
+        self._dev_state = None
+        self._dev_ctx = None
+        self.cluster_transitions = 0   # CLUSTER phase transitions executed
         # jax.jit wrappers are lazy (no tracing until the first call), so
         # both schedulers' steps are declared here unconditionally.
         # decode_ts = page_size pins the fused CHAI kernel's dense tile
@@ -168,7 +203,18 @@ class ServingEngine:
                        else steps_mod.make_slot_reset)
         self._reset_slot = jax.jit(reset_maker(cfg), donate_argnums=(0,))
         self._slot_prefills: dict = {}       # pow2 length bucket -> jit
+        self._suffix_prefills: dict = {}     # suffix bucket -> jit
+        self._cohort_buckets: set = set()    # pow2 buckets seen (observab.)
         self._cluster_slot = None            # built lazily (identify hook)
+        if self.paged:
+            self._restore_snapshot = jax.jit(
+                steps_mod.make_snapshot_restore(cfg), donate_argnums=(0,))
+            self._copy_page = {
+                kind: jax.jit(steps_mod.make_page_copy(cfg, kind),
+                              donate_argnums=(0,))
+                for kind in ("dense", "chai")}
+            self._set_ctx = jax.jit(clustering.update_ctx_slot,
+                                    donate_argnums=(0,))
         if chai_on:
             self._chai_step = jax.jit(
                 steps_mod.make_serve_step(cfg, chai=True,
@@ -243,6 +289,35 @@ class ServingEngine:
         toks[0, :t] = prompt
         return jnp.asarray(toks), jnp.int32(t)
 
+    def _suffix_prefill_fn(self, bucket: int):
+        """One compiled suffix prefill per suffix-length bucket (the
+        cached-prefix length rides in as a traced scalar)."""
+        fn = self._suffix_prefills.get(bucket)
+        if fn is None:
+            fn = jax.jit(steps_mod.make_paged_suffix_prefill(
+                self.cfg, self.ecfg.max_seq), donate_argnums=(4,))
+            self._suffix_prefills[bucket] = fn
+        return fn
+
+    def _padded_suffix(self, suffix, prefix_len: int):
+        """Right-pad an uncached suffix to its bucket. The bucket must
+        keep ``prefix_len + bucket`` within max_seq (padded cache writes
+        must stay inside the slot's logical pages); when the power-of-two
+        bucket would overflow, fall back to the suffix's page-multiple —
+        a key that depends only on the suffix length, NOT on prefix_len,
+        so the jit-key set stays O(log max_seq + max_seq/page_size)
+        instead of one compile per distinct cached-prefix length."""
+        t = len(suffix)
+        ps = self.ecfg.page_size
+        bucket = self._prompt_bucket(t, self.ecfg.max_seq)
+        if bucket > self.ecfg.max_seq - prefix_len:
+            bucket = chai_cache.pages_needed(t, ps) * ps
+        assert t <= bucket <= self.ecfg.max_seq - prefix_len, \
+            (bucket, t, prefix_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :t] = suffix
+        return jnp.asarray(toks), jnp.int32(t)
+
     def _cluster_fn(self):
         # Built on first use so a monkeypatched ``_identify`` hook (tests,
         # CHAI-static ablations) is honored.
@@ -266,8 +341,7 @@ class ServingEngine:
         never deadlock mid-flight). Returns a page dict or None if the
         pools cannot cover it yet."""
         n = self._pages_for(req)
-        chai_n = n * (2 if self.cfg.chai.share_values else 1) \
-            if self.chai_clustered else 0
+        chai_n = self._chai_pages_per(n)
         if self.dense_pool.free_pages < 2 * n:
             return None
         if chai_n and self.chai_pool.free_pages < chai_n:
@@ -292,6 +366,131 @@ class ServingEngine:
         vec[:len(pages)] = pages
         return jnp.asarray(vec)
 
+    # -- prefix-cache admission planning (host side) -----------------------
+    def _chai_pages_per(self, n: int) -> int:
+        if not self.chai_clustered:
+            return 0
+        return n * (2 if self.cfg.chai.share_values else 1)
+
+    def _eligible_snapshot(self, req):
+        """The single gate for the CHAI snapshot fast path (used by the
+        admit loop's replay check AND the planner — one definition, no
+        divergence): paged + cache on + clustered CHAI + greedy decode
+        (replay correctness rests on greedy determinism)."""
+        if (self.paged and self.prefix_cache is not None
+                and self.chai_clustered and self.ecfg.greedy):
+            return self.prefix_cache.snapshot_for(req.prompt)
+        return None
+
+    def _pool_space(self, dense_need: int, chai_need: int) -> bool:
+        """True when the pools can cover the request, evicting unlocked
+        prefix-cache entries (LRU) if that is what it takes."""
+        ok = (self.dense_pool.free_pages >= dense_need
+              and (not chai_need
+                   or self.chai_pool.free_pages >= chai_need))
+        if ok or self.prefix_cache is None:
+            return ok
+        return self.prefix_cache.evict_until(dense_free=dense_need,
+                                             chai_free=chai_need)
+
+    def _plan_admission(self, req):
+        """Build an admission plan for the queue head, mutating the pools
+        (alloc + incref) and locking the cache entries it aliases.
+        Returns None when the pools cannot cover the request yet.
+
+        kinds: "cold" (no reuse), "prefix" (longest cached block-prefix
+        aliased, suffix prefilled), "snapshot" (full prompt cached with a
+        CHAI snapshot: enter STEADY directly). The replay fast path
+        (snapshot covers max_new_tokens entirely — host-side, no slot)
+        is handled by the admit loop before planning."""
+        cache = self.prefix_cache
+        snap = self._eligible_snapshot(req)
+        if snap is not None:
+            plan = self._plan_snapshot(req, snap)
+            if plan is not None:
+                return plan
+            return None         # a cold plan needs strictly more pages
+        matched = cache.match(req.prompt) if cache is not None else []
+        if matched:
+            plan = self._plan_prefix(req, matched)
+            if plan is not None:
+                return plan
+            return None
+        n = self._pages_for(req)
+        if not self._pool_space(2 * n, self._chai_pages_per(n)):
+            return None     # even LRU eviction cannot cover it yet
+        pages = self._try_alloc(req)
+        if pages is None:
+            return None
+        return {"kind": "cold", "pages": pages, "locked": []}
+
+    def _plan_prefix(self, req, matched):
+        """Alias ``matched`` block pages; allocate fresh pages for the
+        suffix + generation headroom (and the full clustered reservation,
+        as on the cold path)."""
+        cache = self.prefix_cache
+        n = self._pages_for(req)
+        n_m = min(len(matched), n)
+        matched = matched[:n_m]
+        chai_n = self._chai_pages_per(n)
+        cache.lock(matched)     # pin before eviction can run
+        if not self._pool_space(2 * (n - n_m), chai_n):
+            cache.unlock(matched)
+            return None
+        kg_fresh = self.dense_pool.alloc(n - n_m)
+        vg_fresh = self.dense_pool.alloc(n - n_m)
+        kg_alias = [m.kg_page for m in matched]
+        vg_alias = [m.vg_page for m in matched]
+        self.dense_pool.incref(kg_alias)
+        self.dense_pool.incref(vg_alias)
+        pages = {"kg": kg_alias + kg_fresh, "vg": vg_alias + vg_fresh}
+        if self.chai_clustered:
+            pages["kc"] = self.chai_pool.alloc(n)
+            if self.cfg.chai.share_values:
+                pages["vc"] = self.chai_pool.alloc(n)
+        null = [chai_cache.NULL_PAGE] * n_m
+        return {"kind": "prefix", "pages": pages, "locked": matched,
+                "prefix_len": n_m * self.ecfg.page_size,
+                "scatter_kg": null + kg_fresh,
+                "scatter_vg": null + vg_fresh}
+
+    def _plan_snapshot(self, req, snap):
+        """Resume from a CHAI snapshot: share its full pages, copy its
+        partial tail page(s) (copy-on-write), allocate headroom for the
+        remaining generation, and enter STEADY directly."""
+        cache = self.prefix_cache
+        share = self.cfg.chai.share_values
+        ps = self.ecfg.page_size
+        n = self._pages_for(req)
+        p_full, rem = divmod(snap.pos, ps)
+        dense_need = 0 if share else (n - p_full)
+        chai_need = (n - p_full) * (2 if share else 1)
+        cache.lock([snap])
+        if not self._pool_space(dense_need, chai_need):
+            cache.unlock([snap])
+            return None
+        copies = []     # (pool kind, src physical page, dst physical page)
+        pages = {}
+        if not share:
+            vg_fresh = self.dense_pool.alloc(n - p_full)
+            self.dense_pool.incref(snap.vg_pages[:p_full])
+            pages["vg"] = snap.vg_pages[:p_full] + vg_fresh
+            if rem:
+                copies.append(("dense", snap.vg_pages[p_full], vg_fresh[0]))
+        kc_fresh = self.chai_pool.alloc(n - p_full)
+        self.chai_pool.incref(snap.kc_pages[:p_full])
+        pages["kc"] = snap.kc_pages[:p_full] + kc_fresh
+        if rem:
+            copies.append(("chai", snap.kc_pages[p_full], kc_fresh[0]))
+        if share:
+            vc_fresh = self.chai_pool.alloc(n - p_full)
+            self.chai_pool.incref(snap.vc_pages[:p_full])
+            pages["vc"] = snap.vc_pages[:p_full] + vc_fresh
+            if rem:
+                copies.append(("chai", snap.vc_pages[p_full], vc_fresh[0]))
+        return {"kind": "snapshot", "snapshot": snap, "pages": pages,
+                "locked": [snap], "copies": copies}
+
     _HISTORY_MAX = 1 << 16
 
     def _record_kv_bytes(self, phases=None):
@@ -311,24 +510,104 @@ class ServingEngine:
             rec["n_steady"] = int((phases == chai_cache.PHASE_STEADY).sum())
         self.kv_bytes_history.append(rec)
 
-    def _run_continuous(self):
+    def _ensure_dev_state(self):
+        """Continuous-scheduler device state. Paged: built once and kept
+        across ``run()`` calls so prefix-cache pages survive between
+        request waves; dense/unified: rebuilt per run (no sharing)."""
         cfg, ecfg = self.cfg, self.ecfg
         b = ecfg.batch_slots
-        warm = cfg.chai.warmup_tokens if self.chai_on else 0
-        if self.paged:
-            state = chai_cache.init_paged_state(
+        if not self.paged:
+            state = chai_cache.init_unified_state(cfg, b, ecfg.max_seq,
+                                                  chai=self.chai_on)
+            ctx = (clustering.init_batched_ctx(cfg, b) if self.chai_on
+                   else None)
+            return state, ctx
+        if self._dev_state is None:
+            self._dev_state = chai_cache.init_paged_state(
                 cfg, b, ecfg.max_seq, page_size=ecfg.page_size,
                 dense_pages=self.dense_pool.num_pages,
                 chai_pages=(self.chai_pool.num_pages if self.chai_pool
                             else 0),
                 chai=self.chai_on)
-        else:
-            state = chai_cache.init_unified_state(cfg, b, ecfg.max_seq,
-                                                  chai=self.chai_on)
-        ctx = clustering.init_batched_ctx(cfg, b) if self.chai_on else None
+            self._dev_ctx = (clustering.init_batched_ctx(cfg, b)
+                             if self.chai_on else None)
+        return self._dev_state, self._dev_ctx
+
+    def _replay_request(self, req, snap):
+        """Serve a request entirely from a CHAI snapshot's replayed warmup
+        tokens: no slot, no pages, no device work at all."""
+        now = time.time()
+        req.generated = list(snap.tokens[:req.max_new_tokens])
+        req.cache_hit = "replay"
+        req.cached_tokens = len(req.prompt)
+        req.prefill_tokens = 0
+        req.t_first_token = now
+        req.t_done = time.time()
+        req.admit_step = req.retire_step = self.steps_executed
+        self.prefix_cache.stats["snapshot_hits"] += 1
+        self.prefix_cache.stats["tokens_reused"] += len(req.prompt)
+        self.done.append(req)
+
+    def _capture_snapshot(self, state, ctx, slot, req, pages):
+        """Capture the slot's STEADY-entry state (membership, clustered K
+        pages, dense V pages, warmup tokens) keyed by its full prompt.
+        Full pages are shared (incref); the partial tail page — which the
+        still-running slot keeps writing — is copied, copy-on-write.
+        Skipped (not an error) when the pools cannot spare the copies."""
+        from repro.serving.prefix_cache import ChaiSnapshot
+        cache = self.prefix_cache
+        key = tuple(int(t) for t in req.prompt)
+        if cache.snapshot_for(key) is not None:
+            return state
+        cfg, ps = self.cfg, self.ecfg.page_size
+        share = cfg.chai.share_values
+        warm = cfg.chai.warmup_tokens
+        pos_steady = len(req.prompt) + warm
+        p_full, rem = divmod(pos_steady, ps)
+        dense_copies = 1 if (rem and not share) else 0
+        chai_copies = (2 if share else 1) if rem else 0
+        if not self._pool_space(dense_copies, chai_copies):
+            return state
+        vg_pages, vc_pages = [], []
+        if not share:
+            vg_pages = list(pages["vg"][:p_full])
+            self.dense_pool.incref(vg_pages)
+        kc_pages = list(pages["kc"][:p_full])
+        self.chai_pool.incref(kc_pages)
+        if share:
+            vc_pages = list(pages["vc"][:p_full])
+            self.chai_pool.incref(vc_pages)
+        if rem:
+            if not share:
+                [dst] = self.dense_pool.alloc(1)
+                state = self._copy_page["dense"](
+                    state, jnp.int32(pages["vg"][p_full]), jnp.int32(dst))
+                vg_pages.append(dst)
+            [dst] = self.chai_pool.alloc(1)
+            state = self._copy_page["chai"](
+                state, jnp.int32(pages["kc"][p_full]), jnp.int32(dst))
+            kc_pages.append(dst)
+            if share:
+                [dst] = self.chai_pool.alloc(1)
+                state = self._copy_page["chai"](
+                    state, jnp.int32(pages["vc"][p_full]), jnp.int32(dst))
+                vc_pages.append(dst)
+        slot_ctx = {k: np.asarray(v[:, slot]) for k, v in ctx.items()}
+        cache.add_snapshot(ChaiSnapshot(
+            prompt=key, pos=pos_steady,
+            tokens=list(req.generated[:warm + 1]), ctx=slot_ctx,
+            vg_pages=vg_pages, kc_pages=kc_pages, vc_pages=vc_pages))
+        return state
+
+    def _run_continuous(self):
+        cfg, ecfg = self.cfg, self.ecfg
+        b = ecfg.batch_slots
+        warm = cfg.chai.warmup_tokens if self.chai_on else 0
+        state, ctx = self._ensure_dev_state()
         slot_req: List[Optional[Request]] = [None] * b
         slot_count = [0] * b            # tokens generated this admission
         slot_pages: List[dict] = [{} for _ in range(b)]   # paged: page ids
+        slot_locked: List[list] = [[] for _ in range(b)]  # cache pins
         next_tok = np.zeros((b,), np.int32)   # host mirror
         next_tok_dev = jnp.zeros((b,), jnp.int32)
         phases = np.full((b,), chai_cache.PHASE_FREE, np.int32)
@@ -344,130 +623,226 @@ class ServingEngine:
             new_state = self._reset_slot(state, jnp.int32(i))
             if self.paged:      # block tables are nulled; pages go back
                 self._free_pages(slot_pages[i])
+                if slot_locked[i]:
+                    self.prefix_cache.unlock(slot_locked[i])
+                    slot_locked[i] = []
             return new_state
 
-        while self.queue or any(r is not None for r in slot_req):
-            now = time.time()
-            # ---- admit: fill free slots from the arrived FIFO prefix,
-            # while the page budget covers prompt + generation headroom ----
-            admitted = False
-            blocked_on_pages = False
-            for i in range(b):
-                if slot_req[i] is not None or not self.queue:
-                    continue
-                if self.queue[0].t_arrival > now:
-                    break
-                if self.paged:
-                    pages = self._try_alloc(self.queue[0])
-                    if pages is None:   # FIFO holds until pages free up
-                        blocked_on_pages = True
-                        break
-                    slot_pages[i] = pages
-                req = self.queue.popleft()
-                phases[i] = chai_cache.PHASE_PREFILL
+        def persist():
+            # Keep cached page contents (and the freshest buffers after
+            # donation) across run() calls.
+            if self.paged:
+                self._dev_state, self._dev_ctx = state, ctx
+
+        def admit_plan(i, req, plan):
+            """Place ``req`` into free slot ``i`` according to ``plan``;
+            returns (first_token, state)."""
+            nonlocal ctx
+            slot_pages[i] = plan.get("pages", {})
+            slot_locked[i] = plan.get("locked", [])
+            if plan["kind"] == "snapshot":
+                snap = plan["snapshot"]
+                st = state
+                for kind, src, dst in plan["copies"]:
+                    st = self._copy_page[kind](st, jnp.int32(src),
+                                               jnp.int32(dst))
+                null = self._page_vec([])
+                st = self._restore_snapshot(
+                    st, jnp.int32(i), null,
+                    self._page_vec(slot_pages[i].get("vg", [])),
+                    self._page_vec(slot_pages[i].get("kc", [])),
+                    self._page_vec(slot_pages[i].get("vc", [])),
+                    jnp.int32(snap.pos))
+                dev_ctx = {k: jnp.asarray(v) for k, v in snap.ctx.items()}
+                ctx = self._set_ctx(ctx, dev_ctx, jnp.int32(i))
+                req.generated.extend(snap.tokens)
+                req.cache_hit = "snapshot"
+                req.cached_tokens = len(req.prompt)
+                req.prefill_tokens = 0
+                phases[i] = chai_cache.PHASE_STEADY
+                slot_count[i] = len(snap.tokens)
+                self.prefix_cache.stats["snapshot_hits"] += 1
+                self.prefix_cache.stats["tokens_reused"] += len(req.prompt)
+                return snap.tokens[-1], st
+            phases[i] = chai_cache.PHASE_PREFILL
+            if plan["kind"] == "prefix":
+                pre = plan["prefix_len"]
+                toks, true_len = self._padded_suffix(req.prompt[pre:], pre)
+                fn = self._suffix_prefill_fn(toks.shape[1])
+                logits, st = fn(
+                    self.params, toks, true_len, jnp.int32(pre), state,
+                    jnp.int32(i), self._page_vec(plan["scatter_kg"]),
+                    self._page_vec(plan["scatter_vg"]),
+                    self._page_vec(slot_pages[i]["kg"]),
+                    self._page_vec(slot_pages[i]["vg"]))
+                req.cache_hit = "prefix"
+                req.cached_tokens = pre
+                req.prefill_tokens = len(req.prompt) - pre
+                self.prefix_cache.stats["partial_hits"] += 1
+                self.prefix_cache.stats["tokens_reused"] += pre
+                self.prefix_cache.stats["tokens_prefilled"] += \
+                    req.prefill_tokens
+            else:
                 toks, true_len = self._padded_prompt(req.prompt)
                 prefill = self._slot_prefill_fn(toks.shape[1])
                 if self.paged:
-                    logits, state = prefill(
+                    logits, st = prefill(
                         self.params, toks, true_len, state, jnp.int32(i),
                         self._page_vec(slot_pages[i]["kg"]),
                         self._page_vec(slot_pages[i]["vg"]))
                 else:
-                    logits, state = prefill(self.params, toks, true_len,
-                                            state, jnp.int32(i))
-                tok = int(np.asarray(self._sample(logits))[0])
-                req.t_first_token = time.time()
-                req.generated.append(tok)
-                req.slot, req.admit_step = i, self.steps_executed
-                next_tok[i] = tok
-                admitted = True
-                slot_req[i] = req
-                slot_count[i] = 1
-                phases[i] = chai_cache.PHASE_WARMUP
-                if len(req.generated) >= req.max_new_tokens:
-                    state = retire(i)
+                    logits, st = prefill(self.params, toks, true_len,
+                                         state, jnp.int32(i))
+                req.prefill_tokens = len(req.prompt)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.stats["misses"] += 1
+                    self.prefix_cache.stats["tokens_prefilled"] += \
+                        len(req.prompt)
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert(req.prompt, slot_pages[i]["kg"],
+                                         slot_pages[i]["vg"])
+            phases[i] = chai_cache.PHASE_WARMUP
+            slot_count[i] = 1
+            tok = int(np.asarray(self._sample(logits))[0])
+            req.generated.append(tok)
+            return tok, st
 
-            active = [i for i in range(b) if slot_req[i] is not None]
-            if not active:
-                if self.queue:      # open-loop idle: wait for next arrival
+        try:
+            while self.queue or any(r is not None for r in slot_req):
+                now = time.time()
+                # ---- admit: fill free slots from the arrived FIFO prefix,
+                # while the page budget covers prompt + generation headroom
+                # (prefix-cache hits alias shared pages and need fewer) ----
+                admitted = False
+                blocked_on_pages = False
+                free_slots = [i for i in range(b) if slot_req[i] is None]
+                while self.queue and self.queue[0].t_arrival <= now:
                     head = self.queue[0]
-                    if blocked_on_pages:
-                        # The failed _try_alloc ran with the engine idle
-                        # (no retire can intervene between the attempt
-                        # and here), so every page was free: the request
-                        # never fits. Name the pool that cannot cover it.
-                        n = self._pages_for(head)
-                        if self.dense_pool.free_pages < 2 * n:
+                    snap = self._eligible_snapshot(head)
+                    if snap is not None and \
+                            head.max_new_tokens <= len(snap.tokens):
+                        # Snapshot covers the whole request: serve it
+                        # host-side without occupying a slot.
+                        self._replay_request(self.queue.popleft(), snap)
+                        continue
+                    if not free_slots:
+                        break
+                    plan = (self._plan_admission(head) if self.paged
+                            else {"kind": "cold", "pages": {}, "locked": []})
+                    if plan is None:        # FIFO holds until pages free up
+                        blocked_on_pages = True
+                        break
+                    i = free_slots.pop(0)
+                    req = self.queue.popleft()
+                    tok, state = admit_plan(i, req, plan)
+                    req.t_first_token = time.time()
+                    req.slot, req.admit_step = i, self.steps_executed
+                    next_tok[i] = tok
+                    admitted = True
+                    slot_req[i] = req
+                    if len(req.generated) >= req.max_new_tokens:
+                        state = retire(i)
+
+                active = [i for i in range(b) if slot_req[i] is not None]
+                if not active:
+                    if self.queue:      # open-loop idle: wait for next arrival
+                        head = self.queue[0]
+                        if blocked_on_pages:
+                            # The failed plan ran with the engine idle (no
+                            # retire can intervene between the attempt and
+                            # here). Drain the prefix cache and retry once —
+                            # only if even an empty cache cannot cover the
+                            # request is it impossible.
+                            if self.prefix_cache is not None and (
+                                    self.prefix_cache.num_blocks
+                                    or self.prefix_cache.num_snapshots):
+                                self.prefix_cache.clear()
+                                continue
+                            n = self._pages_for(head)
+                            if self.dense_pool.free_pages < 2 * n:
+                                raise MemoryError(
+                                    f"request uid={head.uid} needs {2 * n} "
+                                    f"dense pages; pool capacity "
+                                    f"{self.dense_pool.capacity}")
+                            share = 2 if self.cfg.chai.share_values else 1
                             raise MemoryError(
-                                f"request uid={head.uid} needs {2 * n} "
-                                f"dense pages; pool capacity "
-                                f"{self.dense_pool.capacity}")
-                        share = 2 if self.cfg.chai.share_values else 1
-                        raise MemoryError(
-                            f"request uid={head.uid} needs {n * share} "
-                            f"clustered pages; pool capacity "
-                            f"{self.chai_pool.capacity}")
-                    time.sleep(max(1e-4,
-                                   self.queue[0].t_arrival - time.time()))
-                    continue
-                break
+                                f"request uid={head.uid} needs {n * share} "
+                                f"clustered pages; pool capacity "
+                                f"{self.chai_pool.capacity}")
+                        time.sleep(max(1e-4,
+                                       self.queue[0].t_arrival - time.time()))
+                        continue
+                    break
 
-            # ---- cluster + compact slots whose warmup just completed;
-            # paged: the slot's dense K pages return to the pool here ----
-            if self.chai_on:
-                for i in active:
-                    if (slot_count[i] == warm + 1
-                            and phases[i] == chai_cache.PHASE_WARMUP):
-                        phases[i] = chai_cache.PHASE_CLUSTER
-                        if self.paged:
-                            kc_vec = self._page_vec(
-                                slot_pages[i].get("kc", []))
-                            vc_vec = self._page_vec(
-                                slot_pages[i].get("vc", []))
-                            state, ctx = self._cluster_fn()(
-                                state, ctx, jnp.int32(i), kc_vec, vc_vec)
-                            if self.chai_clustered:
-                                self.dense_pool.free(
-                                    slot_pages[i].pop("kg"))
-                                if cfg.chai.share_values:
+                # ---- cluster + compact slots whose warmup just completed;
+                # paged: the slot's dense K pages return to the pool here ----
+                if self.chai_on:
+                    for i in active:
+                        if (slot_count[i] == warm + 1
+                                and phases[i] == chai_cache.PHASE_WARMUP):
+                            phases[i] = chai_cache.PHASE_CLUSTER
+                            self.cluster_transitions += 1
+                            if self.paged:
+                                kc_vec = self._page_vec(
+                                    slot_pages[i].get("kc", []))
+                                vc_vec = self._page_vec(
+                                    slot_pages[i].get("vc", []))
+                                state, ctx = self._cluster_fn()(
+                                    state, ctx, jnp.int32(i), kc_vec, vc_vec)
+                                if (self.prefix_cache is not None
+                                        and self.chai_clustered
+                                        and self.ecfg.greedy):
+                                    state = self._capture_snapshot(
+                                        state, ctx, i, slot_req[i],
+                                        slot_pages[i])
+                                if self.chai_clustered:
                                     self.dense_pool.free(
-                                        slot_pages[i].pop("vg"))
-                            self._record_kv_bytes(phases)
-                        else:
-                            state, ctx = self._cluster_fn()(state, ctx,
-                                                            jnp.int32(i))
-                        phases[i] = chai_cache.PHASE_STEADY
+                                        slot_pages[i].pop("kg"))
+                                    if cfg.chai.share_values:
+                                        self.dense_pool.free(
+                                            slot_pages[i].pop("vg"))
+                                self._record_kv_bytes(phases)
+                            else:
+                                state, ctx = self._cluster_fn()(state, ctx,
+                                                                jnp.int32(i))
+                            phases[i] = chai_cache.PHASE_STEADY
 
-            # ---- one batched decode step; host-dispatch the cheapest jit
-            # that covers the current phase mix. The token vector lives on
-            # device between steps; the host mirror is re-uploaded only
-            # after an admission edited it. ----
-            if admitted:
-                next_tok_dev = jnp.asarray(next_tok)
-            inputs = {"tokens": next_tok_dev}
-            occupied = phases[phases != chai_cache.PHASE_FREE]
-            if not self.chai_on:
-                logits, state = self._mha_step(self.params, inputs, state)
-            elif (occupied == chai_cache.PHASE_STEADY).all():
-                logits, state = self._chai_step(self.params, inputs, state,
-                                                ctx)
-            elif (occupied == chai_cache.PHASE_WARMUP).all():
-                logits, state = self._mha_step(self.params, inputs, state)
-            else:
-                logits, state = self._mixed_step(self.params, inputs, state,
-                                                 ctx)
-            next_tok_dev = self._sample(logits)
-            toks = np.asarray(next_tok_dev)
-            next_tok[:] = toks
-            self.steps_executed += 1
-            for i in active:
-                r = slot_req[i]
-                r.generated.append(int(toks[i]))
-                slot_count[i] += 1
-                if len(r.generated) >= r.max_new_tokens:
-                    state = retire(i)
-            if self.paged:
-                self._record_kv_bytes(phases)
+                # ---- one batched decode step; host-dispatch the cheapest jit
+                # that covers the current phase mix. The token vector lives on
+                # device between steps; the host mirror is re-uploaded only
+                # after an admission edited it. ----
+                if admitted:
+                    next_tok_dev = jnp.asarray(next_tok)
+                inputs = {"tokens": next_tok_dev}
+                occupied = phases[phases != chai_cache.PHASE_FREE]
+                if not self.chai_on:
+                    logits, state = self._mha_step(self.params, inputs, state)
+                elif (occupied == chai_cache.PHASE_STEADY).all():
+                    logits, state = self._chai_step(self.params, inputs, state,
+                                                    ctx)
+                elif (occupied == chai_cache.PHASE_WARMUP).all():
+                    logits, state = self._mha_step(self.params, inputs, state)
+                else:
+                    logits, state = self._mixed_step(self.params, inputs, state,
+                                                     ctx)
+                next_tok_dev = self._sample(logits)
+                toks = np.asarray(next_tok_dev)
+                next_tok[:] = toks
+                self.steps_executed += 1
+                for i in active:
+                    r = slot_req[i]
+                    r.generated.append(int(toks[i]))
+                    slot_count[i] += 1
+                    if len(r.generated) >= r.max_new_tokens:
+                        state = retire(i)
+                if self.paged:
+                    self._record_kv_bytes(phases)
+        finally:
+            # donation invalidates the buffers self._dev_state
+            # points at; rebind to the freshest ones even when
+            # a step raises (KeyboardInterrupt, XLA error) so
+            # the engine survives an aborted run()
+            persist()
         return self.done
 
     # -- cohort scheduler --------------------------------------------------
@@ -494,18 +869,28 @@ class ServingEngine:
         return self.done
 
     def _pad_prompts(self, cohort):
-        b, s = self.ecfg.batch_slots, self.ecfg.max_seq
+        """Right-pad a (possibly ragged) cohort to ONE power-of-two
+        prompt-length bucket (reusing the continuous scheduler's
+        bucketing) with per-example ``true_lens`` masking, so the single
+        cohort-prefill jit compiles once per BUCKET shape — O(log
+        max_seq) — instead of once per padded cohort length."""
+        b = self.ecfg.batch_slots
         t = max(len(r.prompt) for r in cohort)
-        toks = np.zeros((b, t), np.int32)
+        bucket = self._prompt_bucket(t, self.ecfg.max_seq)
+        self._cohort_buckets.add(bucket)
+        toks = np.zeros((b, bucket), np.int32)
+        lens = np.full((b,), bucket, np.int32)   # idle rows: whole bucket
         for i, r in enumerate(cohort):
-            toks[i, t - len(r.prompt):] = r.prompt    # left-pad
-        return jnp.asarray(toks), t
+            toks[i, :len(r.prompt)] = r.prompt    # right-pad to the bucket
+            lens[i] = len(r.prompt)
+        return jnp.asarray(toks), jnp.asarray(lens)
 
     def _run_cohort(self, cohort):
         cfg, ecfg = self.cfg, self.ecfg
         deadline = time.time() + ecfg.cohort_deadline_s
-        tokens, t = self._pad_prompts(cohort)
-        logits, state = self._prefill(self.params, {"tokens": tokens})
+        tokens, lens = self._pad_prompts(cohort)
+        logits, state = self._prefill(
+            self.params, {"tokens": tokens, "true_lens": lens})
         t_first = time.time()
         for r in cohort:
             r.t_first_token = t_first
@@ -570,6 +955,18 @@ class ServingEngine:
             r.generated.append(int(toks[i]))
 
     # -- metrics ------------------------------------------------------------
+    def prefix_stats(self):
+        """Prefix-cache counters + current residency (empty when the
+        cache is off)."""
+        if self.prefix_cache is None:
+            return {}
+        dense_held, chai_held = self.prefix_cache.held_pages()
+        return {**self.prefix_cache.stats,
+                "blocks": self.prefix_cache.num_blocks,
+                "snapshots": self.prefix_cache.num_snapshots,
+                "dense_page_refs": dense_held,
+                "chai_page_refs": chai_held}
+
     def kv_bytes(self, *, chai: Optional[bool] = None):
         """KV-cache bytes. With explicit ``chai=``: the paper's ANALYTIC
         steady-state size (Fig 11 A/B comparisons) — hardware-independent,

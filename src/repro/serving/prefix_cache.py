@@ -1,0 +1,274 @@
+"""Shared-prefix KV reuse: a radix tree over token blocks + CHAI snapshots.
+
+Production traffic is dominated by requests sharing long prefixes (system
+prompts, few-shot templates, multi-turn history). This module indexes the
+engine's ``PagePool`` pages by prompt content so a new request can alias
+the pages an earlier request already filled and prefill only its uncached
+suffix:
+
+* **Radix tree of blocks.** A block is ``page_size`` tokens — exactly one
+  physical page per pool — so one radix node maps one token block to the
+  (dense K, dense V) page pair holding it. Children are keyed by the next
+  block's token tuple, so prompts diverging anywhere inside a block get
+  separate nodes while common whole-block prefixes share one chain.
+  Matching is capped at ``(len(prompt) - 1) // page_size`` blocks so at
+  least one suffix token is always forwarded (its logits seed decode).
+
+* **Reference counting + copy-on-write.** Cached pages are aliased into
+  slot block tables with ``PagePool.incref``; ``free`` drops references
+  and returns a page to the free list only at zero. Shared pages are
+  read-only by convention: suffix prefill scatters through NULLed scatter
+  vectors, and decode never writes below a slot's admission position —
+  the only writable shared page (a snapshot's partial tail) is copied at
+  capture/resume time (``copy_pool_page``).
+
+* **CHAI snapshots** — the CHAI-specific fast path. Clustering features,
+  membership, the compacted clustered pages AND the greedy warmup tokens
+  are all pure functions of the prompt, so when a request finishes its
+  CLUSTER transition the engine captures {membership ctx, clustered K
+  pages, dense V pages, warmup tokens, STEADY-entry ``pos``} keyed by the
+  FULL prompt. A warm request with an identical prompt replays the warmup
+  tokens from the host and enters STEADY directly — zero prefill
+  attention FLOPs, zero WARMUP/CLUSTER steps, token-for-token parity with
+  the cold path (greedy decode is deterministic).
+
+* **LRU eviction, pinned while in use.** Nodes/snapshots referenced by an
+  active slot carry a lock count and are never evicted; eviction walks
+  unlocked leaves (and unlocked snapshots) in LRU order, dropping the
+  cache's page references — a page shared with a still-active slot stays
+  allocated until that slot retires (freed-at-zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def _block_key(tokens) -> Tuple[int, ...]:
+    return tuple(int(t) for t in tokens)
+
+
+@dataclasses.dataclass
+class BlockNode:
+    """One cached token block -> its (dense K, dense V) physical pages."""
+    key: Tuple[int, ...]
+    kg_page: int
+    vg_page: int
+    parent: Optional["BlockNode"]
+    children: Dict[Tuple[int, ...], "BlockNode"] = \
+        dataclasses.field(default_factory=dict)
+    locks: int = 0                 # active slots aliasing this node
+    last_use: int = 0              # LRU tick
+
+    @property
+    def is_leaf(self):
+        return not self.children
+
+
+@dataclasses.dataclass
+class ChaiSnapshot:
+    """STEADY-entry state of a fully-processed prompt (CHAI fast path).
+
+    ``pos`` is the decode position at STEADY entry (prompt + warmup);
+    ``tokens`` the greedy tokens generated through warmup (replayed on a
+    hit); ``ctx`` the host-side batch-free membership arrays; the page
+    lists cover positions [0, pos) — full pages shared, the partial tail
+    page a cache-owned copy."""
+    prompt: Tuple[int, ...]
+    pos: int
+    tokens: List[int]
+    ctx: Dict[str, np.ndarray]
+    vg_pages: List[int]            # dense pool ([] under share_values)
+    kc_pages: List[int]            # clustered pool
+    vc_pages: List[int]            # clustered pool (share_values only)
+    locks: int = 0
+    last_use: int = 0
+
+
+class PrefixCache:
+    """Radix-tree prefix index over one engine's page pools."""
+
+    def __init__(self, dense_pool, chai_pool, page_size: int):
+        self.dense_pool = dense_pool
+        self.chai_pool = chai_pool
+        self.page_size = int(page_size)
+        self.root = BlockNode(key=(), kg_page=-1, vg_page=-1, parent=None)
+        self._snapshots: Dict[Tuple[int, ...], ChaiSnapshot] = {}
+        self._tick = 0
+        # "partial_hits" counts every block-prefix reuse (the radix match
+        # is capped below a full prompt by construction); full-prompt
+        # reuse shows up as "snapshot_hits".
+        self.stats = {"partial_hits": 0, "misses": 0,
+                      "snapshot_hits": 0, "tokens_reused": 0,
+                      "tokens_prefilled": 0, "inserted_blocks": 0,
+                      "evicted_blocks": 0, "evicted_snapshots": 0}
+
+    # -- bookkeeping -------------------------------------------------------
+    def _touch(self, entry):
+        self._tick += 1
+        entry.last_use = self._tick
+
+    @property
+    def num_blocks(self):
+        n, stack = 0, [self.root]
+        while stack:
+            node = stack.pop()
+            n += len(node.children)
+            stack.extend(node.children.values())
+        return n
+
+    @property
+    def num_snapshots(self):
+        return len(self._snapshots)
+
+    def held_pages(self):
+        """(dense, chai) page REFERENCES currently held by the cache."""
+        dense = chai = 0
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for c in node.children.values():
+                dense += 2             # kg + vg
+                stack.append(c)
+        for snap in self._snapshots.values():
+            dense += len(snap.vg_pages)
+            chai += len(snap.kc_pages) + len(snap.vc_pages)
+        return dense, chai
+
+    # -- dense block index -------------------------------------------------
+    def match(self, prompt) -> List[BlockNode]:
+        """Longest cached whole-block prefix of ``prompt``, capped so at
+        least one token remains for the suffix prefill. Matched nodes are
+        LRU-touched; the caller locks the ones it aliases."""
+        ps = self.page_size
+        max_blocks = (len(prompt) - 1) // ps
+        out: List[BlockNode] = []
+        node = self.root
+        for j in range(max_blocks):
+            child = node.children.get(_block_key(prompt[j * ps:(j + 1) * ps]))
+            if child is None:
+                break
+            self._touch(child)
+            out.append(child)
+            node = child
+        return out
+
+    def insert(self, prompt, kg_pages, vg_pages) -> int:
+        """Index every full block of ``prompt``; ``kg_pages``/``vg_pages``
+        are the prompt's logical page lists (aliased prefix + the slot's
+        fresh pages, in logical order). Newly created nodes take a cache
+        reference on their pages (``incref``); existing nodes are
+        untouched. Returns the number of new nodes."""
+        ps = self.page_size
+        n_blocks = len(prompt) // ps
+        node, created = self.root, 0
+        for j in range(n_blocks):
+            key = _block_key(prompt[j * ps:(j + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                kg, vg = int(kg_pages[j]), int(vg_pages[j])
+                self.dense_pool.incref([kg])
+                self.dense_pool.incref([vg])
+                child = BlockNode(key=key, kg_page=kg, vg_page=vg,
+                                  parent=node)
+                node.children[key] = child
+                created += 1
+            self._touch(child)
+            node = child
+        self.stats["inserted_blocks"] += created
+        return created
+
+    # -- CHAI snapshots ----------------------------------------------------
+    def snapshot_for(self, prompt) -> Optional[ChaiSnapshot]:
+        snap = self._snapshots.get(_block_key(prompt))
+        if snap is not None:
+            self._touch(snap)
+        return snap
+
+    def add_snapshot(self, snap: ChaiSnapshot):
+        """Register a snapshot (pages must already carry the cache's
+        references). One snapshot per exact prompt."""
+        assert snap.prompt not in self._snapshots
+        self._snapshots[snap.prompt] = snap
+        self._touch(snap)
+
+    # -- pinning -----------------------------------------------------------
+    @staticmethod
+    def lock(entries):
+        for e in entries:
+            e.locks += 1
+
+    @staticmethod
+    def unlock(entries):
+        for e in entries:
+            assert e.locks > 0
+            e.locks -= 1
+
+    # -- eviction ----------------------------------------------------------
+    def _evict_one(self, want_dense=True, want_chai=True) -> bool:
+        """Drop the LRU unlocked leaf/snapshot holding references in a
+        wanted pool; returns False if pinned solid (nothing evictable).
+        Pool targeting matters: under share_values, snapshots hold no
+        dense pages — evicting them for dense pressure would wipe the
+        zero-prefill fast path without freeing a single wanted page."""
+        best, best_kind = None, None
+        for snap in self._snapshots.values():
+            holds = ((want_dense and snap.vg_pages)
+                     or (want_chai and (snap.kc_pages or snap.vc_pages)))
+            if snap.locks == 0 and holds and (
+                    best is None or snap.last_use < best.last_use):
+                best, best_kind = snap, "snap"
+        if want_dense:      # block nodes hold dense pages only
+            stack = [self.root]
+            while stack:
+                node = stack.pop()
+                for c in node.children.values():
+                    if c.is_leaf and c.locks == 0 and (
+                            best is None or c.last_use < best.last_use):
+                        best, best_kind = c, "node"
+                    stack.append(c)
+        if best is None:
+            return False
+        if best_kind == "snap":
+            del self._snapshots[best.prompt]
+            if best.vg_pages:
+                self.dense_pool.free(best.vg_pages)
+            if best.kc_pages:
+                self.chai_pool.free(best.kc_pages)
+            if best.vc_pages:
+                self.chai_pool.free(best.vc_pages)
+            self.stats["evicted_snapshots"] += 1
+        else:
+            best.parent.children.pop(best.key)
+            self.dense_pool.free([best.kg_page])
+            self.dense_pool.free([best.vg_page])
+            self.stats["evicted_blocks"] += 1
+        return True
+
+    def evict_until(self, dense_free: int = 0, chai_free: int = 0) -> bool:
+        """Evict LRU entries until the pools have the requested free
+        pages; returns False if eviction ran dry first. Only entries
+        holding references in a still-short pool are dropped. (Dropping
+        a reference frees a page only when no active slot still shares
+        it — freed-at-zero.)"""
+        def shortfall():
+            dense = self.dense_pool.free_pages < dense_free
+            chai = (chai_free and self.chai_pool is not None
+                    and self.chai_pool.free_pages < chai_free)
+            return dense, chai
+
+        dense_short, chai_short = shortfall()
+        while dense_short or chai_short:
+            if not self._evict_one(want_dense=dense_short,
+                                   want_chai=chai_short):
+                return False
+            dense_short, chai_short = shortfall()
+        return True
+
+    def clear(self):
+        """Drop every cache reference (leaks nothing: pages shared with
+        active slots survive until those slots retire)."""
+        while self._evict_one():
+            pass

@@ -126,10 +126,12 @@ def test_prompt_bucket_rounding():
 
 @pytest.mark.slow
 def test_prefill_jit_bucketing_compiles_per_bucket_not_per_length():
-    """Regression: ``_slot_prefills`` must key one jit per power-of-two
-    prompt BUCKET (tail masked), not per exact length — and the padded
-    prefill must not change a single greedy token (reference: cohort
-    runs with one request per cohort, which prefill at exact length)."""
+    """Regression: BOTH schedulers must key one prefill jit per
+    power-of-two prompt BUCKET (tail masked), not per exact/padded
+    length — and the padded prefill must not change a single greedy
+    token. The cohort scheduler reuses the continuous scheduler's
+    bucketing (right-pad + per-example ``true_lens``), so single-request
+    cohorts are numerically exact references for the continuous path."""
     cfg = _cfg(MHA_ARCH)
     rng = np.random.default_rng(3)
     lengths = [3, 5, 6, 7, 9, 12]          # buckets: {4, 8, 8, 8, 16, 16}
@@ -137,9 +139,31 @@ def test_prefill_jit_bucketing_compiles_per_bucket_not_per_length():
     cont, eng = _run(cfg, "continuous", subs)
     assert set(eng._slot_prefills) == {4, 8, 16}
     assert len(eng._slot_prefills) == 3    # O(log max_seq), not 6
-    coh, _ = _run(cfg, "cohort", subs, slots=1)   # exact-length prefills
+    coh, eng_coh = _run(cfg, "cohort", subs, slots=1)
     for uid in coh:
         assert cont[uid].generated == coh[uid].generated, uid
+    # cohort prefill no longer retraces per padded cohort length: one jit
+    # whose shape cache is keyed by the pow2 bucket set (3 compiles, not
+    # one per distinct prompt length)
+    assert eng_coh._cohort_buckets == {4, 8, 16}
+    assert eng_coh._prefill._cache_size() == 3
+
+
+@pytest.mark.slow
+def test_cohort_ragged_prefill_matches_single_cohorts():
+    """Ragged cohorts (mixed prompt lengths admitted together) right-pad
+    to one bucket with per-example masking — tokens must match the same
+    requests run in single-request cohorts (no cross-contamination from
+    padding)."""
+    cfg = _cfg(MHA_ARCH)
+    rng = np.random.default_rng(5)
+    lengths = [5, 9, 12, 7]
+    subs = [(rng.integers(0, cfg.vocab_size, size=t), 6) for t in lengths]
+    ragged, eng = _run(cfg, "cohort", subs, slots=4)   # one ragged cohort
+    assert eng._cohort_buckets == {16}                 # one bucket shape
+    single, _ = _run(cfg, "cohort", subs, slots=1)
+    for uid in single:
+        assert ragged[uid].generated == single[uid].generated, uid
 
 
 @pytest.mark.slow

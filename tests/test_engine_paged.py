@@ -173,6 +173,23 @@ def test_paged_parity_int8_and_shared_values(share_values):
     assert engp.chai_pool.pages_in_use == 0
 
 
+@pytest.mark.slow
+def test_paged_parity_int8_gqa_dense_layout_carries_scales():
+    """Regression for the legacy dense-GQA int8 corner: the dense layout
+    now gathers real per-row scales exactly like the paged path, so
+    paged-vs-dense greedy parity holds for GQA int8 too (it could not
+    before — dense stored reinterpreted codes with no scales)."""
+    cfg = _cfg(GQA_ARCH).replace(kv_cache_dtype="int8")
+    subs = _submissions(cfg, lens=(10, 6, 8))
+    paged, engp = _run(cfg, subs, kv_layout="paged")
+    dense, _ = _run(cfg, subs, kv_layout="dense")
+    cohort, _ = _run(cfg, subs, scheduler="cohort")
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+        assert paged[uid].generated == cohort[uid].generated, uid
+    assert engp.dense_pool.pages_in_use == 0
+
+
 # ------------------------------------------------- allocator behaviour -----
 @pytest.mark.slow
 def test_exhausted_pool_queues_admission_then_reuses_pages():
