@@ -71,8 +71,24 @@ def main(argv=None):
     print(json.dumps(summaries, indent=1, default=str))
     results_dir = os.path.join(os.path.dirname(__file__), "results")
     os.makedirs(results_dir, exist_ok=True)
-    with open(os.path.join(results_dir, "summary.json"), "w") as f:
-        json.dump({"benches": summaries, "failures": failures},
+    summary_path = os.path.join(results_dir, "summary.json")
+    # A partial (--only) run MERGES into the existing summary so it
+    # cannot silently drop the other benches' recorded claim checks;
+    # a full run replaces it. Exit code reflects THIS run only.
+    if args.only and os.path.exists(summary_path):
+        try:
+            with open(summary_path) as f:
+                merged = json.load(f).get("benches", {})
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+        merged.update(summaries)
+        summaries = merged
+    # The artifact's failures field must describe EVERY recorded entry
+    # (merged ones included), not just this invocation's.
+    all_failures = sorted(n for n, s in summaries.items()
+                          if not str(s.get("status", "")).startswith("ok"))
+    with open(summary_path, "w") as f:
+        json.dump({"benches": summaries, "failures": all_failures},
                   f, indent=1, default=str)
     return 1 if failures else 0
 

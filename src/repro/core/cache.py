@@ -324,6 +324,15 @@ class PagePool:
     def refcount(self, page: int) -> int:
         return self._rc.get(int(page), 0)
 
+    def counters(self) -> dict:
+        """Refcount-exact allocator snapshot: free pages, pages in use,
+        and total outstanding references. The abort path's no-leak
+        guarantee is checked against this — after a mid-flight abort the
+        counters must return to their pre-admission values."""
+        return {"free": len(self._free),
+                "in_use": self.pages_in_use,
+                "refs": int(sum(self._rc.values()))}
+
     def alloc(self, n: int):
         """Pop ``n`` pages at refcount 1; raises if the pool cannot
         cover them."""

@@ -107,6 +107,53 @@ def make_serve_step(cfg: ModelConfig, *, chai=False, moe_impl="capacity",
     return serve_step
 
 
+def make_sampler():
+    """Batched per-slot token sampler — the single device-side sampling
+    path shared by the continuous and cohort schedulers.
+
+    ``sample(logits, temperature, top_k, top_p, seed, count)``:
+
+    * ``logits`` (B, V); per-slot vectors ``temperature`` (B,) f32,
+      ``top_k`` (B,) i32 (0 = full vocab), ``top_p`` (B,) f32,
+      ``seed`` (B,) u32, ``count`` (B,) i32 — tokens the slot's request
+      has sampled so far.
+    * Slots with ``temperature == 0`` take ``argmax(logits)`` — computed
+      on the raw logits exactly as the engine's historical greedy path,
+      so greedy decode stays BITWISE identical (CHAI snapshot replay and
+      every cross-layout parity test rest on this).
+    * Sampling slots draw from ``fold_in(PRNGKey(seed), count)``: token
+      n of a request depends only on (seed, n, logits) — never the slot
+      id or engine step — so seeded runs reproduce across schedulers.
+    * top-k / top-p masks are applied in descending-logit order (top-p
+      after top-k, rank 0 always kept) and the categorical draw happens
+      in sorted space, mapped back through the argsort permutation.
+    """
+    def sample(logits, temperature, top_k, top_p, seed, count):
+        lg = logits.astype(jnp.float32)
+        greedy_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        v = lg.shape[-1]
+
+        def one(row, t, k, p, s, c):
+            key = jax.random.fold_in(jax.random.PRNGKey(s), c)
+            scaled = row / jnp.maximum(t, 1e-6)
+            order = jnp.argsort(-scaled)               # descending, stable
+            sl = jnp.take(scaled, order)
+            probs = jax.nn.softmax(sl)
+            cum = jnp.cumsum(probs)
+            ranks = jnp.arange(v)
+            keep = ranks < jnp.where(k > 0, k, v)      # top-k
+            keep &= (cum - probs) < p                  # top-p (nucleus)
+            keep = keep.at[0].set(True)                # never mask rank 0
+            masked = jnp.where(keep, sl, -jnp.inf)
+            pick = jax.random.categorical(key, masked)
+            return jnp.take(order, pick).astype(jnp.int32)
+
+        sampled = jax.vmap(one)(lg, temperature, top_k, top_p, seed, count)
+        return jnp.where(temperature > 0.0, sampled, greedy_tok)
+
+    return sample
+
+
 def make_compact_step(cfg: ModelConfig):
     def compact(state, chai_ctx):
         return chai_cache.compact_kv(state, chai_ctx, cfg)

@@ -943,6 +943,13 @@ def decode_step(params, cfg: ModelConfig, tokens, state, *, chai_ctx=None,
     """One decode step. tokens: (B,) int32 (or embeddings (B, d) for stub
     frontends). Returns (logits (B, V), new_state).
 
+    Logits are float32 regardless of the model dtype (``unembed``
+    promotes before the optional softcap) — the contract the batched
+    sampler (``repro.launch.steps.make_sampler``) relies on: its
+    ``temperature=0`` lane takes ``argmax`` over these exact values, so
+    greedy serving is bitwise-stable across engine versions, and its
+    sampling lanes get full-precision softmax/cumsum mass.
+
     ``mixed_phase``: with a ``chai_ctx``, route each batch slot through the
     MHA or CHAI attention path according to ``state["phase"]`` (unified
     per-slot layout — continuous batching). ``decode_ts``: S-tile size for

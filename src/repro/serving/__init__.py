@@ -1,2 +1,5 @@
-from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F401
+from repro.serving.api import LLM, RequestOutput, Session  # noqa: F401
+from repro.serving.engine import (EngineConfig, EngineCore,  # noqa: F401
+                                  Request, ServingEngine, StepOutput)
 from repro.serving.prefix_cache import ChaiSnapshot, PrefixCache  # noqa: F401
+from repro.serving.sampling import SamplingParams  # noqa: F401

@@ -1,0 +1,182 @@
+"""Legacy lockstep cohort scheduler (``EngineConfig.scheduler="cohort"``).
+
+Requests admitted together move through the CHAI phase machine together
+(one prefill, lockstep WARMUP -> CLUSTER -> STEADY decode), with the
+cohort-deadline straggler re-dispatch mitigation. Kept for A/B parity
+testing against the step-driven continuous core: token-for-token
+equality under greedy decode AND under seeded sampling — the batched
+sampler keys every draw by ``(request seed, tokens sampled so far)``, so
+the same request produces the same tokens whichever scheduler ran it.
+
+Split out of ``serving/engine.py`` when the engine became the
+step-driven ``EngineCore``; this mixin only touches the core's public
+surface (jits, sampler, queue/done bookkeeping).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as chai_cache
+from repro.serving import sampling as sampling_mod
+
+
+class CohortSchedulerMixin:
+    """Cohort scheduling methods mixed into ``EngineCore``."""
+
+    def _run_cohort_loop(self):
+        while self.queue:
+            if self.queue[0].t_arrival > time.time():
+                time.sleep(max(1e-4,
+                               self.queue[0].t_arrival - time.time()))
+                continue
+            cohort = []
+            while (self.queue and len(cohort) < self.ecfg.batch_slots
+                   and self.queue[0].t_arrival <= time.time()):
+                cohort.append(self.queue.popleft())
+            try:
+                self._run_cohort(cohort)
+            except TimeoutError:
+                # cohort exceeded its deadline: finalize what finished,
+                # re-dispatch the rest
+                self.redispatched += len(cohort)
+                for r in cohort:
+                    trunc, reason = sampling_mod.scan_finish(
+                        r.generated, r.sampling, r.max_new_tokens,
+                        self.detokenizer)
+                    if reason:
+                        r.generated, r.finish_reason = trunc, reason
+                        r.t_done = time.time()
+                        self._done(r)
+                    else:
+                        self.queue.append(r)
+        return self.done
+
+    def _pad_prompts(self, cohort):
+        """Right-pad a (possibly ragged) cohort to ONE power-of-two
+        prompt-length bucket (reusing the continuous scheduler's
+        bucketing) with per-example ``true_lens`` masking, so the single
+        cohort-prefill jit compiles once per BUCKET shape — O(log
+        max_seq) — instead of once per padded cohort length."""
+        b = self.ecfg.batch_slots
+        t = max(len(r.prompt) for r in cohort)
+        bucket = self._prompt_bucket(t, self.ecfg.max_seq)
+        self._cohort_buckets.add(bucket)
+        toks = np.zeros((b, bucket), np.int32)
+        lens = np.full((b,), bucket, np.int32)   # idle rows: whole bucket
+        for i, r in enumerate(cohort):
+            toks[i, :len(r.prompt)] = r.prompt   # right-pad to the bucket
+            lens[i] = len(r.prompt)
+        return jnp.asarray(toks), jnp.asarray(lens)
+
+    def _cohort_vectors(self, cohort):
+        """Per-row SamplingParams device vectors for one cohort (idle
+        rows sample greedily — their tokens are never recorded)."""
+        b = self.ecfg.batch_slots
+        temps = np.zeros((b,), np.float32)
+        ks = np.zeros((b,), np.int32)
+        ps = np.ones((b,), np.float32)
+        seeds = np.zeros((b,), np.uint32)
+        for i, r in enumerate(cohort):
+            sp = r.sampling
+            temps[i], ks[i], ps[i] = sp.temperature, sp.top_k, sp.top_p
+            seeds[i] = np.uint32(sp.seed)
+        return {"temperature": jnp.asarray(temps), "top_k": jnp.asarray(ks),
+                "top_p": jnp.asarray(ps), "seed": jnp.asarray(seeds)}
+
+    def _run_cohort(self, cohort):
+        cfg, ecfg = self.cfg, self.ecfg
+        deadline = time.time() + ecfg.cohort_deadline_s
+        b = ecfg.batch_slots
+        all_greedy = all(r.sampling.greedy for r in cohort)
+        vecs = None if all_greedy else self._cohort_vectors(cohort)
+
+        def sample(logits, n):
+            # n == tokens each live request has sampled so far (lockstep:
+            # identical across rows), so draws match the continuous
+            # scheduler's per-request counts token for token. All-greedy
+            # cohorts take the bare-argmax fast path (bitwise-identical
+            # to the sampler's greedy lane).
+            if all_greedy:
+                return self._argmax(logits)
+            return self._sampler(logits, vecs["temperature"],
+                                 vecs["top_k"], vecs["top_p"],
+                                 vecs["seed"],
+                                 jnp.full((b,), n, jnp.int32))
+
+        # A cohort run starts from the prompt: requests re-dispatched
+        # after a blown deadline drop their partial tokens and decode
+        # afresh (appending onto the stale prefix would corrupt the
+        # output — and restarting also restarts the sampler counts, so a
+        # re-dispatched seeded request reproduces its uninterrupted run).
+        for r in cohort:
+            r.generated = []
+        tokens, lens = self._pad_prompts(cohort)
+        logits, state = self._prefill(
+            self.params, {"tokens": tokens, "true_lens": lens})
+        t_first = time.time()
+        for r in cohort:
+            r.t_first_token = t_first
+        next_tok = sample(logits, 0)
+        self._record(cohort, next_tok)
+
+        warm = cfg.chai.warmup_tokens if self.chai_on else 0
+        max_new = max(r.max_new_tokens for r in cohort)
+
+        # ---- WARMUP: MHA decode, accumulating clustering features ----
+        if self.chai_on:
+            state = chai_cache.add_score_buffer(state, cfg,
+                                                ecfg.batch_slots)
+        step = 1
+        while step < max_new and step <= warm:
+            if time.time() > deadline:
+                raise TimeoutError
+            logits, state = self._mha_step(
+                self.params, {"tokens": next_tok}, state)
+            next_tok = sample(logits, step)
+            self._record(cohort, next_tok)
+            self.steps_executed += 1
+            step += 1
+
+        # ---- CLUSTER + COMPACT: membership ID, K-cache gather ----
+        ctx = None
+        if self.chai_on and step <= max_new:
+            state, scores = chai_cache.pop_score_buffer(state)
+            ctx = self._identify(scores)
+            state = self._compact(state, ctx)
+
+        # ---- STEADY: Clustered Head Attention decode ----
+        while step < max_new:
+            if time.time() > deadline:
+                raise TimeoutError
+            if ctx is not None:
+                logits, state = self._chai_step(
+                    self.params, {"tokens": next_tok}, state, ctx)
+            else:
+                logits, state = self._mha_step(
+                    self.params, {"tokens": next_tok}, state)
+            next_tok = sample(logits, step)
+            self._record(cohort, next_tok)
+            self.steps_executed += 1
+            step += 1
+
+        t_done = time.time()
+        for r in cohort:
+            # lockstep rows decode to the cohort's max; stops/budgets are
+            # applied by the same front-scan the continuous core uses,
+            # so both schedulers finalize identical token lists.
+            trunc, reason = sampling_mod.scan_finish(
+                r.generated, r.sampling, r.max_new_tokens,
+                self.detokenizer)
+            r.generated = trunc
+            r.finish_reason = reason or sampling_mod.FINISH_LENGTH
+            r.t_done = t_done
+            self._done(r)
+
+    @staticmethod
+    def _record(cohort, next_tok):
+        toks = np.asarray(next_tok)
+        for i, r in enumerate(cohort):
+            r.generated.append(int(toks[i]))

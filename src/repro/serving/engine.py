@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine with a per-slot CHAI phase machine.
+"""Step-driven serving core with a per-slot CHAI phase machine.
 
 Request lifecycle (paper Fig 10), tracked PER BATCH SLOT:
 
@@ -9,43 +9,62 @@ Request lifecycle (paper Fig 10), tracked PER BATCH SLOT:
                 dense K rows are compacted to representative rows — the
                 paper's 21.4% KV saving — via a donated slot-indexed
                 gather)-->
-    STEADY   --(Clustered Head Attention decode until max_tokens)
+    STEADY   --(Clustered Head Attention decode until a finish condition)
+
+plus the out-of-band ABORT edge: ``abort(uid)`` cancels a request at any
+phase (or still queued), returning every page it held to the pools.
+
+The engine is layered:
+
+* ``EngineCore`` — owns the device state, page pools, prefix cache, and
+  ONE public scheduling primitive: ``step()`` runs exactly one scheduler
+  iteration (admit arrived requests into free slots -> cluster/compact
+  slots whose warmup completed -> one mixed-phase batched decode ->
+  retire finished slots) and returns a ``StepOutput`` per request that
+  produced tokens. ``add_request`` enqueues with per-request
+  ``SamplingParams`` (temperature / top-k / top-p / seed / stops);
+  ``abort`` cancels mid-flight, refcount-exactly. Callers drive the loop
+  themselves — streaming frontends yield between steps.
+* ``repro.serving.api`` — the user-facing ``LLM.generate`` /
+  ``LLM.stream`` / ``Session`` frontend over ``step()``.
+* ``ServingEngine`` — the historical ``submit()`` / ``run()`` batch
+  surface, now a thin compatibility wrapper that loops ``step()``.
+
+Sampling is one batched device jit (``repro.launch.steps.make_sampler``)
+shared by both schedulers; ``temperature=0`` slots take the raw-logits
+argmax, so greedy decode is bitwise-identical to the historical greedy
+path (CHAI snapshot capture/replay stays gated to greedy requests).
+Seeded draws key on (request seed, tokens sampled so far) — reproducible
+across schedulers and slot placements.
 
 Two schedulers (``EngineConfig.scheduler``):
 
-* ``"continuous"`` (default) — slot-level continuous batching. A fixed
-  pool of batch slots (static shapes for XLA) holds requests at
-  *different* phases simultaneously: each slot is admitted, warmed up,
-  clustered, retired, and reused independently every step, so a short
-  request never waits for a long one (no head-of-line blocking). The
-  decode step is one jit that routes each slot to the MHA or CHAI
-  attention path according to the per-slot ``phase`` vector
-  (mask-and-select, static shapes); when no slot is mid-transition the
-  engine host-dispatches to the cheaper all-MHA / all-CHAI jits.
+* ``"continuous"`` (default) — slot-level continuous batching, the
+  step-driven core above. A fixed pool of batch slots (static shapes for
+  XLA) holds requests at *different* phases simultaneously; the decode
+  step is one jit that routes each slot to the MHA or CHAI attention
+  path according to the per-slot ``phase`` vector (mask-and-select),
+  host-dispatching to the cheaper all-MHA / all-CHAI jits when no slot
+  is mid-transition.
 
   Two KV layouts (``EngineConfig.kv_layout``):
 
   - ``"paged"`` (default) — block-table paged KV
     (``repro.core.cache.paged_state_structs``). Admission is
-    page-budget-based (a request is admitted only when the pools cover
-    its prompt + generation headroom), and the CLUSTER transition frees
-    the slot's dense K pages back to the ``PagePool`` the moment the
-    representative rows are gathered into clustered pages — steady-state
-    CHAI occupies less allocator memory than dense MHA, realizing the
-    paper's 21.4%-class saving in ``kv_bytes()`` rather than only
-    analytically. Mixed prompt/output lengths stop paying the
-    ``max_seq`` rectangle: a slot holds only the pages it needs.
+    page-budget-based, and the CLUSTER transition frees the slot's dense
+    K pages back to the ``PagePool`` the moment the representative rows
+    are gathered into clustered pages — steady-state CHAI occupies less
+    allocator memory than dense MHA (the paper's 21.4%-class saving in
+    ``kv_bytes()``).
   - ``"dense"`` — the legacy *unified per-slot layout*
-    (``unified_state_structs``): dense ``kg``/``vg`` and clustered
-    ``kg_chai`` rectangles resident side by side (kept for parity
-    testing and as the lowering target for dense-only backends).
+    (``unified_state_structs``), kept for parity testing.
 
-* ``"cohort"`` — the legacy lockstep path, kept for A/B parity testing:
-  requests admitted together move through phases together, with the
-  cohort-deadline straggler re-dispatch mitigation.
+* ``"cohort"`` — the legacy lockstep path
+  (``repro.serving.cohort.CohortSchedulerMixin``), kept for A/B parity
+  testing.
 
 Every Request records arrival, admission (slot id + engine step), first
-token, and completion, so per-request TTFT / latency and engine
+token, and completion, so per-request TTFT / ITL / latency and engine
 throughput fall out directly. On-CPU usage: reduced configs; the same
 engine code drives TPU meshes by passing ``mesh`` + shardings.
 """
@@ -54,7 +73,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,15 +83,22 @@ from repro.configs.base import ModelConfig
 from repro.core import cache as chai_cache
 from repro.core import clustering
 from repro.launch import steps as steps_mod
+from repro.serving import sampling as sampling_mod
+from repro.serving.cohort import CohortSchedulerMixin
+from repro.serving.sampling import SamplingParams
 
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)       # identity semantics: the queue and
+class Request:                         # abort() membership-test Requests
     uid: int
     prompt: np.ndarray                 # (T,) int32
     max_new_tokens: int = 32
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     # -- filled by the engine --
     generated: Optional[List[int]] = None
+    finish_reason: str = ""            # "" while in flight; "length" |
+    #                                    "stop" | "aborted" when done
     t_enqueue: float = 0.0
     t_arrival: float = 0.0             # Poisson workloads: earliest admit
     t_first_token: float = 0.0
@@ -86,6 +112,10 @@ class Request:
     prefill_tokens: int = -1           # tokens actually forwarded (prefill)
 
     @property
+    def finished(self) -> bool:
+        return bool(self.finish_reason)
+
+    @property
     def ttft(self):
         return self.t_first_token - self.t_arrival
 
@@ -95,9 +125,24 @@ class Request:
 
 
 @dataclasses.dataclass
+class StepOutput:
+    """Per-request result of one ``EngineCore.step()``: the token ids
+    emitted for this request THIS step (one decode token; several at a
+    snapshot/replay admission), and whether the request just finished."""
+    uid: int
+    token_ids: List[int]
+    finished: bool = False
+    finish_reason: str = ""
+
+
+@dataclasses.dataclass
 class EngineConfig:
     batch_slots: int = 4               # slot-pool / cohort size (static)
     max_seq: int = 256                 # KV capacity per slot (static)
+    # Default SamplingParams for requests submitted without one:
+    # greedy=True -> temperature 0 (the historical behaviour);
+    # greedy=False -> temperature 1.0. Requests carrying explicit
+    # SamplingParams ignore this flag entirely.
     greedy: bool = True
     scheduler: str = "continuous"      # "continuous" | "cohort"
     cohort_deadline_s: float = 120.0   # cohort straggler re-dispatch
@@ -118,15 +163,26 @@ class EngineConfig:
     # -- shared-prefix KV reuse (paged layout only) ---------------------
     # Radix-tree prefix cache over token blocks: admission aliases the
     # longest cached block-prefix into the slot's block tables and
-    # prefills only the uncached suffix; for MHA+CHAI archs a request
-    # whose FULL prompt was served before resumes from a CHAI snapshot
-    # (membership + clustered pages) and enters STEADY directly. Cached
-    # pages are refcounted, copy-on-write, LRU-evicted under pressure.
+    # prefills only the uncached suffix; for MHA+CHAI archs a GREEDY
+    # request whose FULL prompt was served before resumes from a CHAI
+    # snapshot (membership + clustered pages) and enters STEADY directly.
+    # Retiring slots that still hold their dense pages (GQA /
+    # use_chai=False) index their FULL sequence (prompt + generated), so
+    # a multi-turn Session's next turn prefills only the new user
+    # message. Cached pages are refcounted, copy-on-write, LRU-evicted
+    # under pressure.
     prefix_cache: bool = False
 
 
-class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+class EngineCore(CohortSchedulerMixin):
+    """Device-state owner + one-iteration scheduler (``step()``).
+
+    ``detokenizer``: optional ``List[int] -> str`` used to match
+    ``SamplingParams.stop`` strings against the generated tokens.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, *,
+                 detokenizer: Optional[Callable] = None):
         assert cfg.n_attn_layers > 0 or not ecfg.use_chai, \
             "CHAI needs attention layers"
         assert ecfg.scheduler in ("continuous", "cohort"), ecfg.scheduler
@@ -134,6 +190,7 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
+        self.detokenizer = detokenizer
         self.queue: deque = deque()
         self.done: List[Request] = []
         self.redispatched = 0
@@ -183,17 +240,48 @@ class ServingEngine:
             from repro.serving.prefix_cache import PrefixCache
             self.prefix_cache = PrefixCache(self.dense_pool,
                                             self.chai_pool, ecfg.page_size)
-        # Paged device state persists across run() calls so cached pages
-        # keep their contents between request waves (None until first
-        # continuous run; the dense/unified layout stays per-run).
+        # Device state persists across step()/run() calls: paged, so
+        # cached pages keep their contents between request waves; dense,
+        # so the step-driven core never rebuilds mid-stream (retired
+        # slots rewind pos — stale rows are masked exactly like the zero
+        # tail). None until the first continuous step.
         self._dev_state = None
         self._dev_ctx = None
         self.cluster_transitions = 0   # CLUSTER phase transitions executed
+        # -- step-driven scheduler state (continuous) ---------------------
+        self._uid_counter = 0          # monotonic: uids never collide
+        self._requests: dict = {}      # uid -> Request (abort lookup)
+        self._slot_req: List[Optional[Request]] = [None] * b
+        self._slot_count = [0] * b          # tokens generated this admission
+        self._slot_pages: List[dict] = [{} for _ in range(b)]  # page ids
+        self._slot_locked: List[list] = [[] for _ in range(b)]  # cache pins
+        self._next_tok = np.zeros((b,), np.int32)   # host mirror
+        self._next_tok_dev = jnp.zeros((b,), jnp.int32)
+        self._tok_dirty = False
+        self._phases = np.full((b,), chai_cache.PHASE_FREE, np.int32)
+        # Per-slot SamplingParams device vectors (FREE slots sample
+        # greedily — their tokens are never recorded). Host mirrors are
+        # re-uploaded only after an admission/retire edited them.
+        self._samp_host = {"temperature": np.zeros((b,), np.float32),
+                           "top_k": np.zeros((b,), np.int32),
+                           "top_p": np.ones((b,), np.float32),
+                           "seed": np.zeros((b,), np.uint32)}
+        self._samp_dev = None
+        self._samp_dirty = True
         # jax.jit wrappers are lazy (no tracing until the first call), so
         # both schedulers' steps are declared here unconditionally.
         # decode_ts = page_size pins the fused CHAI kernel's dense tile
         # size to the paged page size, so every layout/scheduler performs
         # bit-identical attention arithmetic (cross-layout token parity).
+        self._sampler = jax.jit(steps_mod.make_sampler())
+        # All-greedy fast path: the full sampler computes its sampling
+        # lane (argsort + softmax + PRNG) for every slot and discards it
+        # via jnp.where on greedy rows — host-dispatch a bare argmax when
+        # NO slot is sampling (the engine default), exactly like the
+        # phase-mix step dispatch. Bitwise-identical to the sampler's
+        # greedy lane (both argmax the raw f32 logits).
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
         self._mha_step = jax.jit(
             steps_mod.make_serve_step(cfg, chai=False,
                                       decode_ts=ecfg.page_size),
@@ -229,32 +317,149 @@ class ServingEngine:
                 lambda sc: clustering.identify_membership(sc, cfg))
 
     # -- public API --------------------------------------------------------
-    def submit(self, prompt, max_new_tokens=32, uid=None, *,
-               arrival_delay: float = 0.0):
-        """Enqueue a request. ``arrival_delay`` (seconds from now) models
-        open-loop arrivals: the scheduler will not admit the request
-        before its arrival time."""
-        if len(prompt) + max_new_tokens > self.ecfg.max_seq:
+    def default_sampling(self) -> SamplingParams:
+        return (SamplingParams() if self.ecfg.greedy
+                else SamplingParams(temperature=1.0))
+
+    def add_request(self, prompt, sampling: Optional[SamplingParams] = None,
+                    *, max_new_tokens: Optional[int] = None, uid=None,
+                    arrival_delay: float = 0.0) -> Request:
+        """Enqueue a request with per-request ``SamplingParams``.
+
+        ``max_new_tokens`` (when given) overrides
+        ``sampling.max_new_tokens``. ``arrival_delay`` (seconds from now)
+        models open-loop arrivals: the scheduler will not admit the
+        request before its arrival time. Default uids come from a
+        monotonic engine counter (explicit uids bump it past themselves,
+        so later defaults can never collide with retired requests)."""
+        sp = sampling if sampling is not None else self.default_sampling()
+        max_new = (max_new_tokens if max_new_tokens is not None
+                   else sp.max_new_tokens)
+        if len(prompt) + max_new > self.ecfg.max_seq:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens "
-                f"({max_new_tokens}) exceeds max_seq "
+                f"({max_new}) exceeds max_seq "
                 f"({self.ecfg.max_seq}): the KV capacity (dense slot or "
                 f"page budget) cannot hold the request")
-        req = Request(uid=uid if uid is not None else len(self.queue)
-                      + len(self.done),
-                      prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens)
+        if sp.stop and self.detokenizer is None:
+            raise ValueError("SamplingParams.stop strings need an engine "
+                             "detokenizer (EngineCore(detokenizer=...))")
+        if uid is None:
+            uid = self._uid_counter
+        self._uid_counter = max(self._uid_counter, int(uid) + 1)
+        req = Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new, sampling=sp)
         req.t_enqueue = time.time()
         req.t_arrival = req.t_enqueue + arrival_delay
         req.generated = []
         self.queue.append(req)
+        self._requests[uid] = req
         return req
 
-    def run(self):
-        """Drain the queue; returns completed requests."""
-        if self.ecfg.scheduler == "cohort":
-            return self._run_cohort_loop()
-        return self._run_continuous()
+    def _done(self, req: Request):
+        """Finalize a request: move it to ``done`` and drop the abort
+        lookup entry (unless a newer request reused the uid), so a
+        long-lived core does not grow per request served. ``done`` itself
+        accumulates for the batch ``run()`` surface; step-driven
+        frontends keep it bounded via ``reap_done()``."""
+        self.done.append(req)
+        if self._requests.get(req.uid) is req:
+            del self._requests[req.uid]
+
+    def reap_done(self) -> List[Request]:
+        """Return AND clear the finished-request list. Long-lived
+        frontends (``LLM``) call this after collecting their outputs;
+        the legacy ``ServingEngine.run()`` surface leaves ``done``
+        accumulating across calls instead."""
+        out, self.done = self.done, []
+        return out
+
+    def abort(self, uid) -> bool:
+        """Cancel a request: a queued request is dropped before touching
+        the device; a running one retires immediately — its pages (and
+        prefix-cache locks) return refcount-exactly, its slot resets, and
+        concurrent slots are untouched. Tokens generated so far stay on
+        the Request (``finish_reason="aborted"``). Returns False for
+        unknown / already-finished uids."""
+        req = self._requests.get(uid)
+        if req is None or req.finished:
+            return False
+        if req in self.queue:
+            self.queue.remove(req)
+            req.finish_reason = sampling_mod.FINISH_ABORT
+            req.t_done = time.time()
+            req.retire_step = self.steps_executed
+            self._done(req)
+            return True
+        for i, r in enumerate(self._slot_req):
+            if r is req:
+                self._retire_slot(i, sampling_mod.FINISH_ABORT)
+                return True
+        return False
+
+    @property
+    def has_active(self) -> bool:
+        return any(r is not None for r in self._slot_req)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.has_active
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest queued arrival time (callers sleep until it when
+        ``step()`` makes no progress), or None when the queue is empty."""
+        return self.queue[0].t_arrival if self.queue else None
+
+    def step(self) -> List[StepOutput]:
+        """Run exactly ONE scheduler iteration: admit arrived requests
+        into free slots (prefix-cache planning included), run CLUSTER
+        transitions for slots whose warmup just completed, execute one
+        mixed-phase batched decode + sample, and retire slots that hit a
+        finish condition. Returns one ``StepOutput`` per request that
+        emitted tokens. Non-blocking: with no admissible work it returns
+        ``[]`` (use ``next_arrival()`` to wait); with the engine idle and
+        the queue head unserviceable even after draining the prefix
+        cache, raises ``MemoryError`` exactly like the page-budget gate
+        always has."""
+        if self.ecfg.scheduler != "continuous":
+            raise RuntimeError("step() drives the continuous scheduler; "
+                               "cohort engines run via run()")
+        outs: List[StepOutput] = []
+        self._ensure_dev_state()
+        b = self.ecfg.batch_slots
+        drained = False
+        while True:
+            blocked = self._admit(outs)
+            active = [i for i in range(b)
+                      if self._slot_req[i] is not None]
+            if active:
+                break
+            if not self.queue or not blocked:
+                return outs        # idle, or waiting on future arrivals
+            # The failed plan ran with the engine idle (no retire can
+            # intervene between the attempt and here). Drain the prefix
+            # cache and retry once — only if even an empty cache cannot
+            # cover the request is it impossible.
+            if not drained and self.prefix_cache is not None and (
+                    self.prefix_cache.num_blocks
+                    or self.prefix_cache.num_snapshots):
+                self.prefix_cache.clear()
+                drained = True
+                continue
+            head = self.queue[0]
+            n = self._pages_for(head)
+            if self.dense_pool.free_pages < 2 * n:
+                raise MemoryError(
+                    f"request uid={head.uid} needs {2 * n} "
+                    f"dense pages; pool capacity "
+                    f"{self.dense_pool.capacity}")
+            share = 2 if self.cfg.chai.share_values else 1
+            raise MemoryError(
+                f"request uid={head.uid} needs {n * share} "
+                f"clustered pages; pool capacity "
+                f"{self.chai_pool.capacity}")
+        self._cluster_transitions(active)
+        outs.extend(self._decode(active))
+        return outs
 
     # -- continuous scheduler ----------------------------------------------
     @staticmethod
@@ -328,6 +533,35 @@ class ServingEngine:
                                          donate_argnums=(0, 1))
         return self._cluster_slot
 
+    # -- sampling (host <-> device) ----------------------------------------
+    def _set_slot_sampling(self, slot: int, sp: SamplingParams):
+        h = self._samp_host
+        h["temperature"][slot] = sp.temperature
+        h["top_k"][slot] = sp.top_k
+        h["top_p"][slot] = sp.top_p
+        h["seed"][slot] = np.uint32(sp.seed)
+        self._samp_dirty = True
+
+    def _sample_first(self, logits, req: Request) -> int:
+        """Sample a request's FIRST token from its prefill logits (count
+        0 — the same draw the cohort scheduler makes for its row)."""
+        sp = req.sampling
+        if sp.greedy:
+            return int(np.asarray(self._argmax(logits))[0])
+        out = self._sampler(
+            logits,
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32),
+            jnp.asarray(np.asarray([sp.seed], np.uint32)),
+            jnp.zeros((1,), jnp.int32))
+        return int(np.asarray(out)[0])
+
+    def _finish_of(self, req: Request) -> str:
+        return sampling_mod.finish_reason(req.generated, req.sampling,
+                                          req.max_new_tokens,
+                                          self.detokenizer)
+
     # -- paged-pool bookkeeping (host side) --------------------------------
     def _pages_for(self, req) -> int:
         """Logical pages a request can touch over its lifetime."""
@@ -375,10 +609,11 @@ class ServingEngine:
     def _eligible_snapshot(self, req):
         """The single gate for the CHAI snapshot fast path (used by the
         admit loop's replay check AND the planner — one definition, no
-        divergence): paged + cache on + clustered CHAI + greedy decode
-        (replay correctness rests on greedy determinism)."""
+        divergence): paged + cache on + clustered CHAI + a GREEDY request
+        (replay correctness rests on greedy determinism; sampling
+        requests take the block-prefix path instead)."""
         if (self.paged and self.prefix_cache is not None
-                and self.chai_clustered and self.ecfg.greedy):
+                and self.chai_clustered and req.sampling.greedy):
             return self.prefix_cache.snapshot_for(req.prompt)
         return None
 
@@ -511,24 +746,23 @@ class ServingEngine:
         self.kv_bytes_history.append(rec)
 
     def _ensure_dev_state(self):
-        """Continuous-scheduler device state. Paged: built once and kept
-        across ``run()`` calls so prefix-cache pages survive between
-        request waves; dense/unified: rebuilt per run (no sharing)."""
+        """Continuous-scheduler device state, built once and kept across
+        ``step()``/``run()`` calls (paged: prefix-cache pages survive
+        between request waves; dense: retired slots rewind ``pos`` so
+        stale rows are masked like the zero tail)."""
         cfg, ecfg = self.cfg, self.ecfg
         b = ecfg.batch_slots
-        if not self.paged:
-            state = chai_cache.init_unified_state(cfg, b, ecfg.max_seq,
-                                                  chai=self.chai_on)
-            ctx = (clustering.init_batched_ctx(cfg, b) if self.chai_on
-                   else None)
-            return state, ctx
         if self._dev_state is None:
-            self._dev_state = chai_cache.init_paged_state(
-                cfg, b, ecfg.max_seq, page_size=ecfg.page_size,
-                dense_pages=self.dense_pool.num_pages,
-                chai_pages=(self.chai_pool.num_pages if self.chai_pool
-                            else 0),
-                chai=self.chai_on)
+            if self.paged:
+                self._dev_state = chai_cache.init_paged_state(
+                    cfg, b, ecfg.max_seq, page_size=ecfg.page_size,
+                    dense_pages=self.dense_pool.num_pages,
+                    chai_pages=(self.chai_pool.num_pages if self.chai_pool
+                                else 0),
+                    chai=self.chai_on)
+            else:
+                self._dev_state = chai_cache.init_unified_state(
+                    cfg, b, ecfg.max_seq, chai=self.chai_on)
             self._dev_ctx = (clustering.init_batched_ctx(cfg, b)
                              if self.chai_on else None)
         return self._dev_state, self._dev_ctx
@@ -537,7 +771,11 @@ class ServingEngine:
         """Serve a request entirely from a CHAI snapshot's replayed warmup
         tokens: no slot, no pages, no device work at all."""
         now = time.time()
-        req.generated = list(snap.tokens[:req.max_new_tokens])
+        toks, reason = sampling_mod.scan_finish(
+            snap.tokens[:req.max_new_tokens], req.sampling,
+            req.max_new_tokens, self.detokenizer)
+        req.generated = toks
+        req.finish_reason = reason or sampling_mod.FINISH_LENGTH
         req.cache_hit = "replay"
         req.cached_tokens = len(req.prompt)
         req.prefill_tokens = 0
@@ -546,9 +784,9 @@ class ServingEngine:
         req.admit_step = req.retire_step = self.steps_executed
         self.prefix_cache.stats["snapshot_hits"] += 1
         self.prefix_cache.stats["tokens_reused"] += len(req.prompt)
-        self.done.append(req)
+        self._done(req)
 
-    def _capture_snapshot(self, state, ctx, slot, req, pages):
+    def _capture_snapshot(self, slot, req, pages):
         """Capture the slot's STEADY-entry state (membership, clustered K
         pages, dense V pages, warmup tokens) keyed by its full prompt.
         Full pages are shared (incref); the partial tail page — which the
@@ -558,7 +796,7 @@ class ServingEngine:
         cache = self.prefix_cache
         key = tuple(int(t) for t in req.prompt)
         if cache.snapshot_for(key) is not None:
-            return state
+            return
         cfg, ps = self.cfg, self.ecfg.page_size
         share = cfg.chai.share_values
         warm = cfg.chai.warmup_tokens
@@ -567,7 +805,7 @@ class ServingEngine:
         dense_copies = 1 if (rem and not share) else 0
         chai_copies = (2 if share else 1) if rem else 0
         if not self._pool_space(dense_copies, chai_copies):
-            return state
+            return
         vg_pages, vc_pages = [], []
         if not share:
             vg_pages = list(pages["vg"][:p_full])
@@ -580,379 +818,283 @@ class ServingEngine:
         if rem:
             if not share:
                 [dst] = self.dense_pool.alloc(1)
-                state = self._copy_page["dense"](
-                    state, jnp.int32(pages["vg"][p_full]), jnp.int32(dst))
+                self._dev_state = self._copy_page["dense"](
+                    self._dev_state, jnp.int32(pages["vg"][p_full]),
+                    jnp.int32(dst))
                 vg_pages.append(dst)
             [dst] = self.chai_pool.alloc(1)
-            state = self._copy_page["chai"](
-                state, jnp.int32(pages["kc"][p_full]), jnp.int32(dst))
+            self._dev_state = self._copy_page["chai"](
+                self._dev_state, jnp.int32(pages["kc"][p_full]),
+                jnp.int32(dst))
             kc_pages.append(dst)
             if share:
                 [dst] = self.chai_pool.alloc(1)
-                state = self._copy_page["chai"](
-                    state, jnp.int32(pages["vc"][p_full]), jnp.int32(dst))
+                self._dev_state = self._copy_page["chai"](
+                    self._dev_state, jnp.int32(pages["vc"][p_full]),
+                    jnp.int32(dst))
                 vc_pages.append(dst)
-        slot_ctx = {k: np.asarray(v[:, slot]) for k, v in ctx.items()}
+        slot_ctx = {k: np.asarray(v[:, slot])
+                    for k, v in self._dev_ctx.items()}
         cache.add_snapshot(ChaiSnapshot(
             prompt=key, pos=pos_steady,
             tokens=list(req.generated[:warm + 1]), ctx=slot_ctx,
             vg_pages=vg_pages, kc_pages=kc_pages, vc_pages=vc_pages))
-        return state
 
-    def _run_continuous(self):
-        cfg, ecfg = self.cfg, self.ecfg
-        b = ecfg.batch_slots
-        warm = cfg.chai.warmup_tokens if self.chai_on else 0
-        state, ctx = self._ensure_dev_state()
-        slot_req: List[Optional[Request]] = [None] * b
-        slot_count = [0] * b            # tokens generated this admission
-        slot_pages: List[dict] = [{} for _ in range(b)]   # paged: page ids
-        slot_locked: List[list] = [[] for _ in range(b)]  # cache pins
-        next_tok = np.zeros((b,), np.int32)   # host mirror
-        next_tok_dev = jnp.zeros((b,), jnp.int32)
-        phases = np.full((b,), chai_cache.PHASE_FREE, np.int32)
-
-        def retire(i):
-            r = slot_req[i]
-            r.generated = r.generated[:r.max_new_tokens]
-            r.t_done = time.time()
-            r.retire_step = self.steps_executed
-            self.done.append(r)
-            slot_req[i] = None
-            phases[i] = chai_cache.PHASE_FREE
-            new_state = self._reset_slot(state, jnp.int32(i))
-            if self.paged:      # block tables are nulled; pages go back
-                self._free_pages(slot_pages[i])
-                if slot_locked[i]:
-                    self.prefix_cache.unlock(slot_locked[i])
-                    slot_locked[i] = []
-            return new_state
-
-        def persist():
-            # Keep cached page contents (and the freshest buffers after
-            # donation) across run() calls.
-            if self.paged:
-                self._dev_state, self._dev_ctx = state, ctx
-
-        def admit_plan(i, req, plan):
-            """Place ``req`` into free slot ``i`` according to ``plan``;
-            returns (first_token, state)."""
-            nonlocal ctx
-            slot_pages[i] = plan.get("pages", {})
-            slot_locked[i] = plan.get("locked", [])
-            if plan["kind"] == "snapshot":
-                snap = plan["snapshot"]
-                st = state
-                for kind, src, dst in plan["copies"]:
-                    st = self._copy_page[kind](st, jnp.int32(src),
-                                               jnp.int32(dst))
-                null = self._page_vec([])
-                st = self._restore_snapshot(
-                    st, jnp.int32(i), null,
-                    self._page_vec(slot_pages[i].get("vg", [])),
-                    self._page_vec(slot_pages[i].get("kc", [])),
-                    self._page_vec(slot_pages[i].get("vc", [])),
-                    jnp.int32(snap.pos))
-                dev_ctx = {k: jnp.asarray(v) for k, v in snap.ctx.items()}
-                ctx = self._set_ctx(ctx, dev_ctx, jnp.int32(i))
-                req.generated.extend(snap.tokens)
-                req.cache_hit = "snapshot"
-                req.cached_tokens = len(req.prompt)
-                req.prefill_tokens = 0
-                phases[i] = chai_cache.PHASE_STEADY
-                slot_count[i] = len(snap.tokens)
-                self.prefix_cache.stats["snapshot_hits"] += 1
-                self.prefix_cache.stats["tokens_reused"] += len(req.prompt)
-                return snap.tokens[-1], st
-            phases[i] = chai_cache.PHASE_PREFILL
-            if plan["kind"] == "prefix":
-                pre = plan["prefix_len"]
-                toks, true_len = self._padded_suffix(req.prompt[pre:], pre)
-                fn = self._suffix_prefill_fn(toks.shape[1])
-                logits, st = fn(
-                    self.params, toks, true_len, jnp.int32(pre), state,
-                    jnp.int32(i), self._page_vec(plan["scatter_kg"]),
-                    self._page_vec(plan["scatter_vg"]),
-                    self._page_vec(slot_pages[i]["kg"]),
-                    self._page_vec(slot_pages[i]["vg"]))
-                req.cache_hit = "prefix"
-                req.cached_tokens = pre
-                req.prefill_tokens = len(req.prompt) - pre
-                self.prefix_cache.stats["partial_hits"] += 1
-                self.prefix_cache.stats["tokens_reused"] += pre
-                self.prefix_cache.stats["tokens_prefilled"] += \
-                    req.prefill_tokens
-            else:
-                toks, true_len = self._padded_prompt(req.prompt)
-                prefill = self._slot_prefill_fn(toks.shape[1])
-                if self.paged:
-                    logits, st = prefill(
-                        self.params, toks, true_len, state, jnp.int32(i),
-                        self._page_vec(slot_pages[i]["kg"]),
-                        self._page_vec(slot_pages[i]["vg"]))
-                else:
-                    logits, st = prefill(self.params, toks, true_len,
-                                         state, jnp.int32(i))
-                req.prefill_tokens = len(req.prompt)
-                if self.prefix_cache is not None:
-                    self.prefix_cache.stats["misses"] += 1
-                    self.prefix_cache.stats["tokens_prefilled"] += \
-                        len(req.prompt)
-            if self.prefix_cache is not None:
-                self.prefix_cache.insert(req.prompt, slot_pages[i]["kg"],
-                                         slot_pages[i]["vg"])
-            phases[i] = chai_cache.PHASE_WARMUP
-            slot_count[i] = 1
-            tok = int(np.asarray(self._sample(logits))[0])
-            req.generated.append(tok)
-            return tok, st
-
-        try:
-            while self.queue or any(r is not None for r in slot_req):
-                now = time.time()
-                # ---- admit: fill free slots from the arrived FIFO prefix,
-                # while the page budget covers prompt + generation headroom
-                # (prefix-cache hits alias shared pages and need fewer) ----
-                admitted = False
-                blocked_on_pages = False
-                free_slots = [i for i in range(b) if slot_req[i] is None]
-                while self.queue and self.queue[0].t_arrival <= now:
-                    head = self.queue[0]
-                    snap = self._eligible_snapshot(head)
-                    if snap is not None and \
-                            head.max_new_tokens <= len(snap.tokens):
-                        # Snapshot covers the whole request: serve it
-                        # host-side without occupying a slot.
-                        self._replay_request(self.queue.popleft(), snap)
-                        continue
-                    if not free_slots:
-                        break
-                    plan = (self._plan_admission(head) if self.paged
-                            else {"kind": "cold", "pages": {}, "locked": []})
-                    if plan is None:        # FIFO holds until pages free up
-                        blocked_on_pages = True
-                        break
-                    i = free_slots.pop(0)
-                    req = self.queue.popleft()
-                    tok, state = admit_plan(i, req, plan)
-                    req.t_first_token = time.time()
-                    req.slot, req.admit_step = i, self.steps_executed
-                    next_tok[i] = tok
-                    admitted = True
-                    slot_req[i] = req
-                    if len(req.generated) >= req.max_new_tokens:
-                        state = retire(i)
-
-                active = [i for i in range(b) if slot_req[i] is not None]
-                if not active:
-                    if self.queue:      # open-loop idle: wait for next arrival
-                        head = self.queue[0]
-                        if blocked_on_pages:
-                            # The failed plan ran with the engine idle (no
-                            # retire can intervene between the attempt and
-                            # here). Drain the prefix cache and retry once —
-                            # only if even an empty cache cannot cover the
-                            # request is it impossible.
-                            if self.prefix_cache is not None and (
-                                    self.prefix_cache.num_blocks
-                                    or self.prefix_cache.num_snapshots):
-                                self.prefix_cache.clear()
-                                continue
-                            n = self._pages_for(head)
-                            if self.dense_pool.free_pages < 2 * n:
-                                raise MemoryError(
-                                    f"request uid={head.uid} needs {2 * n} "
-                                    f"dense pages; pool capacity "
-                                    f"{self.dense_pool.capacity}")
-                            share = 2 if self.cfg.chai.share_values else 1
-                            raise MemoryError(
-                                f"request uid={head.uid} needs {n * share} "
-                                f"clustered pages; pool capacity "
-                                f"{self.chai_pool.capacity}")
-                        time.sleep(max(1e-4,
-                                       self.queue[0].t_arrival - time.time()))
-                        continue
-                    break
-
-                # ---- cluster + compact slots whose warmup just completed;
-                # paged: the slot's dense K pages return to the pool here ----
-                if self.chai_on:
-                    for i in active:
-                        if (slot_count[i] == warm + 1
-                                and phases[i] == chai_cache.PHASE_WARMUP):
-                            phases[i] = chai_cache.PHASE_CLUSTER
-                            self.cluster_transitions += 1
-                            if self.paged:
-                                kc_vec = self._page_vec(
-                                    slot_pages[i].get("kc", []))
-                                vc_vec = self._page_vec(
-                                    slot_pages[i].get("vc", []))
-                                state, ctx = self._cluster_fn()(
-                                    state, ctx, jnp.int32(i), kc_vec, vc_vec)
-                                if (self.prefix_cache is not None
-                                        and self.chai_clustered
-                                        and self.ecfg.greedy):
-                                    state = self._capture_snapshot(
-                                        state, ctx, i, slot_req[i],
-                                        slot_pages[i])
-                                if self.chai_clustered:
-                                    self.dense_pool.free(
-                                        slot_pages[i].pop("kg"))
-                                    if cfg.chai.share_values:
-                                        self.dense_pool.free(
-                                            slot_pages[i].pop("vg"))
-                                self._record_kv_bytes(phases)
-                            else:
-                                state, ctx = self._cluster_fn()(state, ctx,
-                                                                jnp.int32(i))
-                            phases[i] = chai_cache.PHASE_STEADY
-
-                # ---- one batched decode step; host-dispatch the cheapest jit
-                # that covers the current phase mix. The token vector lives on
-                # device between steps; the host mirror is re-uploaded only
-                # after an admission edited it. ----
-                if admitted:
-                    next_tok_dev = jnp.asarray(next_tok)
-                inputs = {"tokens": next_tok_dev}
-                occupied = phases[phases != chai_cache.PHASE_FREE]
-                if not self.chai_on:
-                    logits, state = self._mha_step(self.params, inputs, state)
-                elif (occupied == chai_cache.PHASE_STEADY).all():
-                    logits, state = self._chai_step(self.params, inputs, state,
-                                                    ctx)
-                elif (occupied == chai_cache.PHASE_WARMUP).all():
-                    logits, state = self._mha_step(self.params, inputs, state)
-                else:
-                    logits, state = self._mixed_step(self.params, inputs, state,
-                                                     ctx)
-                next_tok_dev = self._sample(logits)
-                toks = np.asarray(next_tok_dev)
-                next_tok[:] = toks
-                self.steps_executed += 1
-                for i in active:
-                    r = slot_req[i]
-                    r.generated.append(int(toks[i]))
-                    slot_count[i] += 1
-                    if len(r.generated) >= r.max_new_tokens:
-                        state = retire(i)
-                if self.paged:
-                    self._record_kv_bytes(phases)
-        finally:
-            # donation invalidates the buffers self._dev_state
-            # points at; rebind to the freshest ones even when
-            # a step raises (KeyboardInterrupt, XLA error) so
-            # the engine survives an aborted run()
-            persist()
-        return self.done
-
-    # -- cohort scheduler --------------------------------------------------
-    def _run_cohort_loop(self):
-        while self.queue:
-            if self.queue[0].t_arrival > time.time():
-                time.sleep(max(1e-4,
-                               self.queue[0].t_arrival - time.time()))
+    # -- step internals ----------------------------------------------------
+    def _admit(self, outs: List[StepOutput]) -> bool:
+        """Fill free slots from the arrived FIFO prefix while the page
+        budget covers prompt + generation headroom (prefix-cache hits
+        alias shared pages and need fewer). Returns True when the queue
+        head had arrived but could not be planned (page-blocked)."""
+        now = time.time()
+        blocked = False
+        free_slots = [i for i in range(self.ecfg.batch_slots)
+                      if self._slot_req[i] is None]
+        while self.queue and self.queue[0].t_arrival <= now:
+            head = self.queue[0]
+            snap = self._eligible_snapshot(head)
+            if snap is not None and \
+                    head.max_new_tokens <= len(snap.tokens):
+                # Snapshot covers the whole request: serve it host-side
+                # without occupying a slot.
+                req = self.queue.popleft()
+                self._replay_request(req, snap)
+                outs.append(StepOutput(req.uid, list(req.generated), True,
+                                       req.finish_reason))
                 continue
-            cohort = []
-            while (self.queue and len(cohort) < self.ecfg.batch_slots
-                   and self.queue[0].t_arrival <= time.time()):
-                cohort.append(self.queue.popleft())
-            try:
-                self._run_cohort(cohort)
-            except TimeoutError:
-                # cohort exceeded its deadline: re-dispatch unfinished
-                self.redispatched += len(cohort)
-                for r in cohort:
-                    if len(r.generated) < r.max_new_tokens:
-                        self.queue.append(r)
-                    else:
-                        self.done.append(r)
-        return self.done
+            if not free_slots:
+                break
+            plan = (self._plan_admission(head) if self.paged
+                    else {"kind": "cold", "pages": {}, "locked": []})
+            if plan is None:        # FIFO holds until pages free up
+                blocked = True
+                break
+            i = free_slots.pop(0)
+            req = self.queue.popleft()
+            self._admit_to_slot(i, req, plan)
+            req.t_first_token = time.time()
+            req.slot, req.admit_step = i, self.steps_executed
+            self._slot_req[i] = req
+            self._set_slot_sampling(i, req.sampling)
+            trunc, reason = sampling_mod.scan_finish(
+                req.generated, req.sampling, req.max_new_tokens,
+                self.detokenizer)
+            if reason:
+                req.generated = trunc
+                self._retire_slot(i, reason)
+            outs.append(StepOutput(req.uid, list(req.generated),
+                                   bool(reason), reason))
+        return blocked
 
-    def _pad_prompts(self, cohort):
-        """Right-pad a (possibly ragged) cohort to ONE power-of-two
-        prompt-length bucket (reusing the continuous scheduler's
-        bucketing) with per-example ``true_lens`` masking, so the single
-        cohort-prefill jit compiles once per BUCKET shape — O(log
-        max_seq) — instead of once per padded cohort length."""
-        b = self.ecfg.batch_slots
-        t = max(len(r.prompt) for r in cohort)
-        bucket = self._prompt_bucket(t, self.ecfg.max_seq)
-        self._cohort_buckets.add(bucket)
-        toks = np.zeros((b, bucket), np.int32)
-        lens = np.full((b,), bucket, np.int32)   # idle rows: whole bucket
-        for i, r in enumerate(cohort):
-            toks[i, :len(r.prompt)] = r.prompt    # right-pad to the bucket
-            lens[i] = len(r.prompt)
-        return jnp.asarray(toks), jnp.asarray(lens)
-
-    def _run_cohort(self, cohort):
-        cfg, ecfg = self.cfg, self.ecfg
-        deadline = time.time() + ecfg.cohort_deadline_s
-        tokens, lens = self._pad_prompts(cohort)
-        logits, state = self._prefill(
-            self.params, {"tokens": tokens, "true_lens": lens})
-        t_first = time.time()
-        for r in cohort:
-            r.t_first_token = t_first
-        next_tok = self._sample(logits)
-        self._record(cohort, next_tok)
-
-        warm = cfg.chai.warmup_tokens if self.chai_on else 0
-        max_new = max(r.max_new_tokens for r in cohort)
-
-        # ---- WARMUP: MHA decode, accumulating clustering features ----
-        if self.chai_on:
-            state = chai_cache.add_score_buffer(state, cfg,
-                                                ecfg.batch_slots)
-        step = 1
-        while step < max_new and step <= warm:
-            if time.time() > deadline:
-                raise TimeoutError
-            logits, state = self._mha_step(
-                self.params, {"tokens": next_tok}, state)
-            next_tok = self._sample(logits)
-            self._record(cohort, next_tok)
-            self.steps_executed += 1
-            step += 1
-
-        # ---- CLUSTER + COMPACT: membership ID, K-cache gather ----
-        ctx = None
-        if self.chai_on and step <= max_new:
-            state, scores = chai_cache.pop_score_buffer(state)
-            ctx = self._identify(scores)
-            state = self._compact(state, ctx)
-
-        # ---- STEADY: Clustered Head Attention decode ----
-        while step < max_new:
-            if time.time() > deadline:
-                raise TimeoutError
-            if ctx is not None:
-                logits, state = self._chai_step(
-                    self.params, {"tokens": next_tok}, state, ctx)
+    def _admit_to_slot(self, i: int, req: Request, plan: dict):
+        """Place ``req`` into free slot ``i`` according to ``plan``,
+        mutating the device state and the slot bookkeeping."""
+        self._slot_pages[i] = plan.get("pages", {})
+        self._slot_locked[i] = plan.get("locked", [])
+        if plan["kind"] == "snapshot":
+            snap = plan["snapshot"]
+            st = self._dev_state
+            for kind, src, dst in plan["copies"]:
+                st = self._copy_page[kind](st, jnp.int32(src),
+                                           jnp.int32(dst))
+            null = self._page_vec([])
+            st = self._restore_snapshot(
+                st, jnp.int32(i), null,
+                self._page_vec(self._slot_pages[i].get("vg", [])),
+                self._page_vec(self._slot_pages[i].get("kc", [])),
+                self._page_vec(self._slot_pages[i].get("vc", [])),
+                jnp.int32(snap.pos))
+            self._dev_state = st
+            dev_ctx = {k: jnp.asarray(v) for k, v in snap.ctx.items()}
+            self._dev_ctx = self._set_ctx(self._dev_ctx, dev_ctx,
+                                          jnp.int32(i))
+            req.generated.extend(snap.tokens)
+            req.cache_hit = "snapshot"
+            req.cached_tokens = len(req.prompt)
+            req.prefill_tokens = 0
+            self._phases[i] = chai_cache.PHASE_STEADY
+            self._slot_count[i] = len(snap.tokens)
+            self.prefix_cache.stats["snapshot_hits"] += 1
+            self.prefix_cache.stats["tokens_reused"] += len(req.prompt)
+            self._next_tok[i] = snap.tokens[-1]
+            self._tok_dirty = True
+            return
+        self._phases[i] = chai_cache.PHASE_PREFILL
+        if plan["kind"] == "prefix":
+            pre = plan["prefix_len"]
+            toks, true_len = self._padded_suffix(req.prompt[pre:], pre)
+            fn = self._suffix_prefill_fn(toks.shape[1])
+            logits, st = fn(
+                self.params, toks, true_len, jnp.int32(pre),
+                self._dev_state, jnp.int32(i),
+                self._page_vec(plan["scatter_kg"]),
+                self._page_vec(plan["scatter_vg"]),
+                self._page_vec(self._slot_pages[i]["kg"]),
+                self._page_vec(self._slot_pages[i]["vg"]))
+            req.cache_hit = "prefix"
+            req.cached_tokens = pre
+            req.prefill_tokens = len(req.prompt) - pre
+            self.prefix_cache.stats["partial_hits"] += 1
+            self.prefix_cache.stats["tokens_reused"] += pre
+            self.prefix_cache.stats["tokens_prefilled"] += \
+                req.prefill_tokens
+        else:
+            toks, true_len = self._padded_prompt(req.prompt)
+            prefill = self._slot_prefill_fn(toks.shape[1])
+            if self.paged:
+                logits, st = prefill(
+                    self.params, toks, true_len, self._dev_state,
+                    jnp.int32(i),
+                    self._page_vec(self._slot_pages[i]["kg"]),
+                    self._page_vec(self._slot_pages[i]["vg"]))
             else:
-                logits, state = self._mha_step(
-                    self.params, {"tokens": next_tok}, state)
-            next_tok = self._sample(logits)
-            self._record(cohort, next_tok)
-            self.steps_executed += 1
-            step += 1
+                logits, st = prefill(self.params, toks, true_len,
+                                     self._dev_state, jnp.int32(i))
+            req.prefill_tokens = len(req.prompt)
+            if self.prefix_cache is not None:
+                self.prefix_cache.stats["misses"] += 1
+                self.prefix_cache.stats["tokens_prefilled"] += \
+                    len(req.prompt)
+        self._dev_state = st
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(req.prompt, self._slot_pages[i]["kg"],
+                                     self._slot_pages[i]["vg"])
+        self._phases[i] = chai_cache.PHASE_WARMUP
+        self._slot_count[i] = 1
+        tok = self._sample_first(logits, req)
+        req.generated.append(tok)
+        self._next_tok[i] = tok
+        self._tok_dirty = True
 
-        t_done = time.time()
-        for r in cohort:
-            r.generated = r.generated[:r.max_new_tokens]
-            r.t_done = t_done
-            self.done.append(r)
+    def _cluster_transitions(self, active):
+        """CLUSTER + compact slots whose warmup just completed; paged:
+        the slot's dense K pages return to the pool here."""
+        if not self.chai_on:
+            return
+        cfg = self.cfg
+        warm = cfg.chai.warmup_tokens
+        for i in active:
+            if not (self._slot_count[i] == warm + 1
+                    and self._phases[i] == chai_cache.PHASE_WARMUP):
+                continue
+            self._phases[i] = chai_cache.PHASE_CLUSTER
+            self.cluster_transitions += 1
+            if self.paged:
+                kc_vec = self._page_vec(self._slot_pages[i].get("kc", []))
+                vc_vec = self._page_vec(self._slot_pages[i].get("vc", []))
+                self._dev_state, self._dev_ctx = self._cluster_fn()(
+                    self._dev_state, self._dev_ctx, jnp.int32(i),
+                    kc_vec, vc_vec)
+                if (self.prefix_cache is not None
+                        and self.chai_clustered
+                        and self._slot_req[i].sampling.greedy):
+                    self._capture_snapshot(i, self._slot_req[i],
+                                           self._slot_pages[i])
+                if self.chai_clustered:
+                    self.dense_pool.free(self._slot_pages[i].pop("kg"))
+                    if cfg.chai.share_values:
+                        self.dense_pool.free(self._slot_pages[i].pop("vg"))
+                self._record_kv_bytes(self._phases)
+            else:
+                self._dev_state, self._dev_ctx = self._cluster_fn()(
+                    self._dev_state, self._dev_ctx, jnp.int32(i))
+            self._phases[i] = chai_cache.PHASE_STEADY
 
-    def _sample(self, logits):
-        if self.ecfg.greedy:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        raise NotImplementedError("sampling beyond greedy")
-
-    @staticmethod
-    def _record(cohort, next_tok):
-        toks = np.asarray(next_tok)
-        for i, r in enumerate(cohort):
+    def _decode(self, active) -> List[StepOutput]:
+        """One batched decode step; host-dispatch the cheapest jit that
+        covers the current phase mix, then one batched sample. The token
+        and SamplingParams vectors live on device between steps; host
+        mirrors are re-uploaded only after an admission/retire edited
+        them."""
+        outs: List[StepOutput] = []
+        b = self.ecfg.batch_slots
+        if self._tok_dirty:
+            self._next_tok_dev = jnp.asarray(self._next_tok)
+            self._tok_dirty = False
+        inputs = {"tokens": self._next_tok_dev}
+        occupied = self._phases[self._phases != chai_cache.PHASE_FREE]
+        state = self._dev_state
+        if not self.chai_on:
+            logits, state = self._mha_step(self.params, inputs, state)
+        elif (occupied == chai_cache.PHASE_STEADY).all():
+            logits, state = self._chai_step(self.params, inputs, state,
+                                            self._dev_ctx)
+        elif (occupied == chai_cache.PHASE_WARMUP).all():
+            logits, state = self._mha_step(self.params, inputs, state)
+        else:
+            logits, state = self._mixed_step(self.params, inputs, state,
+                                             self._dev_ctx)
+        self._dev_state = state
+        if not self._samp_host["temperature"].any():
+            tok_dev = self._argmax(logits)      # all-greedy fast path
+        else:
+            if self._samp_dirty:
+                self._samp_dev = {k: jnp.asarray(v)
+                                  for k, v in self._samp_host.items()}
+                self._samp_dirty = False
+            counts = np.zeros((b,), np.int32)
+            for i in active:
+                counts[i] = len(self._slot_req[i].generated)
+            tok_dev = self._sampler(logits, self._samp_dev["temperature"],
+                                    self._samp_dev["top_k"],
+                                    self._samp_dev["top_p"],
+                                    self._samp_dev["seed"],
+                                    jnp.asarray(counts))
+        self._next_tok_dev = tok_dev
+        toks = np.asarray(tok_dev)
+        self._next_tok[:] = toks
+        self.steps_executed += 1
+        for i in active:
+            r = self._slot_req[i]
             r.generated.append(int(toks[i]))
+            self._slot_count[i] += 1
+            reason = self._finish_of(r)
+            if reason:
+                self._retire_slot(i, reason)
+            outs.append(StepOutput(r.uid, [int(toks[i])], bool(reason),
+                                   reason))
+        if self.paged:
+            self._record_kv_bytes(self._phases)
+        return outs
+
+    def _retire_slot(self, i: int, reason: str):
+        """Retire/abort slot ``i``: finalize the request, index its full
+        sequence into the prefix cache (when the slot still holds its
+        dense pages), reset the slot on device, and return every page it
+        held to the pools (refcount-exact; shared pages survive while the
+        cache or concurrent slots reference them)."""
+        r = self._slot_req[i]
+        r.generated = r.generated[:r.max_new_tokens]
+        r.finish_reason = reason
+        r.t_done = time.time()
+        r.retire_step = self.steps_executed
+        self._done(r)
+        self._slot_req[i] = None
+        self._phases[i] = chai_cache.PHASE_FREE
+        self._slot_count[i] = 0
+        if self.paged and self.prefix_cache is not None:
+            self._index_retired(r, self._slot_pages[i])
+        self._dev_state = self._reset_slot(self._dev_state, jnp.int32(i))
+        if self.paged:      # block tables are nulled; pages go back
+            self._free_pages(self._slot_pages[i])
+            if self._slot_locked[i]:
+                self.prefix_cache.unlock(self._slot_locked[i])
+                self._slot_locked[i] = []
+        self._samp_host["temperature"][i] = 0.0     # FREE slots: greedy
+        self._samp_dirty = True
+
+    def _index_retired(self, req: Request, pages: dict):
+        """Retire-time radix insertion: index the slot's FULL sequence
+        (prompt + generated) so a follow-up turn — ``Session`` chat over
+        the same history — prefills only its new suffix. Decode wrote K/V
+        for every token except the last sampled one, and only slots that
+        still hold their dense K AND V pages have a complete paged record
+        (clustered-CHAI slots freed dense K at compaction; their reuse
+        path is the prompt-keyed snapshot instead)."""
+        if "kg" not in pages or "vg" not in pages:
+            return
+        seq = list(map(int, req.prompt)) + list(req.generated[:-1])
+        self.prefix_cache.insert(seq, pages["kg"], pages["vg"])
 
     # -- metrics ------------------------------------------------------------
     def prefix_stats(self):
@@ -1022,3 +1164,32 @@ class ServingEngine:
         t0 = min(r.t_arrival for r in self.done)
         t1 = max(r.t_done for r in self.done)
         return len(self.done) / max(t1 - t0, 1e-9)
+
+
+class ServingEngine(EngineCore):
+    """Historical batch surface — a thin compatibility wrapper over the
+    step-driven ``EngineCore``: ``submit()`` enqueues (optionally with
+    ``sampling=SamplingParams(...)``), ``run()`` loops ``step()`` until
+    the queue drains. New code should prefer ``repro.serving.api.LLM``
+    (generate / stream / abort / Session) or drive ``step()`` directly.
+    """
+
+    def submit(self, prompt, max_new_tokens=32, uid=None, *,
+               arrival_delay: float = 0.0,
+               sampling: Optional[SamplingParams] = None):
+        """Enqueue a request (see ``EngineCore.add_request``)."""
+        return self.add_request(prompt, sampling,
+                                max_new_tokens=max_new_tokens, uid=uid,
+                                arrival_delay=arrival_delay)
+
+    def run(self):
+        """Drain the queue; returns completed requests."""
+        if self.ecfg.scheduler == "cohort":
+            return self._run_cohort_loop()
+        while self.has_work():
+            outs = self.step()
+            if not outs and not self.has_active and self.queue:
+                # open-loop idle: wait for the next arrival
+                time.sleep(max(1e-4,
+                               self.queue[0].t_arrival - time.time()))
+        return self.done

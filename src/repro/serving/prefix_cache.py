@@ -32,15 +32,28 @@ suffix:
   attention FLOPs, zero WARMUP/CLUSTER steps, token-for-token parity with
   the cold path (greedy decode is deterministic).
 
-* **LRU eviction, pinned while in use.** Nodes/snapshots referenced by an
-  active slot carry a lock count and are never evicted; eviction walks
-  unlocked leaves (and unlocked snapshots) in LRU order, dropping the
-  cache's page references — a page shared with a still-active slot stays
-  allocated until that slot retires (freed-at-zero).
+* **Ordered-LRU eviction, pinned while in use.** Nodes/snapshots
+  referenced by an active slot carry a lock count and are never evicted.
+  Evictable entries (unlocked leaves + unlocked snapshots) live in ONE
+  ``OrderedDict`` kept in last-use order — ``_touch`` is a
+  ``move_to_end``, eviction pops the first FRONT entry matching the
+  pressured pool — so the admission-path victim search costs the skipped
+  prefix of un-wanted-kind entries (O(1) when kinds are not segregated
+  at the front; worst case the count of the other kind) instead of the
+  old unconditional O(entries) radix walk + snapshot scan per victim.
+  Membership is maintained at the
+  edges: ``lock`` removes an entry, ``unlock`` (count reaching zero)
+  re-files it, growing a child removes the parent (no longer a leaf),
+  and evicting a node's last sibling re-files the newly-leaf parent (at
+  the MRU end — the one deliberate approximation, documented at
+  ``_evict_one``). Dropping an entry drops the cache's page references —
+  a page shared with a still-active slot stays allocated until that slot
+  retires (freed-at-zero).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -60,7 +73,6 @@ class BlockNode:
     children: Dict[Tuple[int, ...], "BlockNode"] = \
         dataclasses.field(default_factory=dict)
     locks: int = 0                 # active slots aliasing this node
-    last_use: int = 0              # LRU tick
 
     @property
     def is_leaf(self):
@@ -84,7 +96,6 @@ class ChaiSnapshot:
     kc_pages: List[int]            # clustered pool
     vc_pages: List[int]            # clustered pool (share_values only)
     locks: int = 0
-    last_use: int = 0
 
 
 class PrefixCache:
@@ -96,7 +107,10 @@ class PrefixCache:
         self.page_size = int(page_size)
         self.root = BlockNode(key=(), kg_page=-1, vg_page=-1, parent=None)
         self._snapshots: Dict[Tuple[int, ...], ChaiSnapshot] = {}
-        self._tick = 0
+        # Evictable entries (unlocked leaf nodes + unlocked snapshots) in
+        # last-use order: front = LRU victim. Keyed by id(entry) — the
+        # entry objects are the values; O(1) touch / add / discard.
+        self._lru: "OrderedDict[int, object]" = OrderedDict()
         # "partial_hits" counts every block-prefix reuse (the radix match
         # is capped below a full prompt by construction); full-prompt
         # reuse shows up as "snapshot_hits".
@@ -107,8 +121,23 @@ class PrefixCache:
 
     # -- bookkeeping -------------------------------------------------------
     def _touch(self, entry):
-        self._tick += 1
-        entry.last_use = self._tick
+        # the OrderedDict IS the recency order (locked / interior
+        # entries are outside it and re-file on unlock / leaf-ification)
+        if id(entry) in self._lru:
+            self._lru.move_to_end(id(entry))
+
+    def _lru_file(self, entry):
+        """(Re-)file an entry at the MRU end if it is currently
+        evictable: unlocked, and a snapshot or a leaf node."""
+        if entry.locks:
+            return
+        if isinstance(entry, BlockNode) and not entry.is_leaf:
+            return
+        self._lru[id(entry)] = entry
+        self._lru.move_to_end(id(entry))
+
+    def _lru_drop(self, entry):
+        self._lru.pop(id(entry), None)
 
     @property
     def num_blocks(self):
@@ -175,6 +204,9 @@ class PrefixCache:
                                   parent=node)
                 node.children[key] = child
                 created += 1
+                if node is not self.root:
+                    self._lru_drop(node)    # grew a child: not a leaf
+                self._lru_file(child)
             self._touch(child)
             node = child
         self.stats["inserted_blocks"] += created
@@ -192,59 +224,72 @@ class PrefixCache:
         references). One snapshot per exact prompt."""
         assert snap.prompt not in self._snapshots
         self._snapshots[snap.prompt] = snap
+        self._lru_file(snap)
         self._touch(snap)
 
     # -- pinning -----------------------------------------------------------
-    @staticmethod
-    def lock(entries):
+    def lock(self, entries):
         for e in entries:
             e.locks += 1
+            self._lru_drop(e)           # pinned: never a victim
 
-    @staticmethod
-    def unlock(entries):
+    def unlock(self, entries):
         for e in entries:
             assert e.locks > 0
             e.locks -= 1
+            if e.locks == 0:
+                self._lru_file(e)       # evictable again (if leaf/snap)
 
     # -- eviction ----------------------------------------------------------
     def _evict_one(self, want_dense=True, want_chai=True) -> bool:
-        """Drop the LRU unlocked leaf/snapshot holding references in a
-        wanted pool; returns False if pinned solid (nothing evictable).
+        """Drop the least-recently-used evictable entry holding
+        references in a wanted pool: scan ``_lru`` from the front and pop
+        the first match. Skipped non-matching entries stay filed, so the
+        per-victim cost is the length of the un-wanted-kind prefix at the
+        front (e.g. share_values snapshots under dense pressure) — far
+        below the old unconditional full radix walk + snapshot scan, but
+        not O(1) when one kind piles up at the LRU end. Returns False if
+        pinned solid / nothing matches.
+
         Pool targeting matters: under share_values, snapshots hold no
         dense pages — evicting them for dense pressure would wipe the
-        zero-prefill fast path without freeing a single wanted page."""
-        best, best_kind = None, None
-        for snap in self._snapshots.values():
-            holds = ((want_dense and snap.vg_pages)
-                     or (want_chai and (snap.kc_pages or snap.vc_pages)))
-            if snap.locks == 0 and holds and (
-                    best is None or snap.last_use < best.last_use):
-                best, best_kind = snap, "snap"
-        if want_dense:      # block nodes hold dense pages only
-            stack = [self.root]
-            while stack:
-                node = stack.pop()
-                for c in node.children.values():
-                    if c.is_leaf and c.locks == 0 and (
-                            best is None or c.last_use < best.last_use):
-                        best, best_kind = c, "node"
-                    stack.append(c)
-        if best is None:
+        zero-prefill fast path without freeing a single wanted page.
+
+        A node whose last sibling is evicted re-files its parent at the
+        MRU end (an OrderedDict cannot insert mid-order); the parent was
+        recently on every matched path anyway, so the approximation only
+        delays its eviction."""
+        victim = None
+        for entry in self._lru.values():
+            if isinstance(entry, BlockNode):
+                holds = want_dense          # nodes hold dense pages only
+            else:
+                holds = ((want_dense and bool(entry.vg_pages))
+                         or (want_chai and bool(entry.kc_pages
+                                                or entry.vc_pages)))
+            if holds:
+                victim = entry
+                break
+        if victim is None:
             return False
-        if best_kind == "snap":
-            del self._snapshots[best.prompt]
-            if best.vg_pages:
-                self.dense_pool.free(best.vg_pages)
-            if best.kc_pages:
-                self.chai_pool.free(best.kc_pages)
-            if best.vc_pages:
-                self.chai_pool.free(best.vc_pages)
+        self._lru_drop(victim)
+        if isinstance(victim, ChaiSnapshot):
+            del self._snapshots[victim.prompt]
+            if victim.vg_pages:
+                self.dense_pool.free(victim.vg_pages)
+            if victim.kc_pages:
+                self.chai_pool.free(victim.kc_pages)
+            if victim.vc_pages:
+                self.chai_pool.free(victim.vc_pages)
             self.stats["evicted_snapshots"] += 1
         else:
-            best.parent.children.pop(best.key)
-            self.dense_pool.free([best.kg_page])
-            self.dense_pool.free([best.vg_page])
+            victim.parent.children.pop(victim.key)
+            self.dense_pool.free([victim.kg_page])
+            self.dense_pool.free([victim.vg_page])
             self.stats["evicted_blocks"] += 1
+            parent = victim.parent
+            if parent is not self.root and parent.is_leaf:
+                self._lru_file(parent)      # became a leaf: evictable
         return True
 
     def evict_until(self, dense_free: int = 0, chai_free: int = 0) -> bool:

@@ -1,0 +1,147 @@
+"""Abort/cancellation: the ABORT edge of the phase machine.
+
+``EngineCore.abort(uid)`` must (a) cancel a request at ANY lifecycle
+point — still queued (pre-PREFILL), freshly prefilled (WARMUP entry),
+mid-WARMUP, and STEADY (post-CLUSTER, dense K pages already freed) —
+(b) return every page the request held to the pools refcount-exactly
+(allocator counters back to their pre-admission baseline, no leaks),
+and (c) never corrupt concurrent slots: a survivor decoding beside an
+aborted request produces exactly its solo-run tokens.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config, reduced
+from repro.core import cache as chai_cache
+from repro.models import transformer as tfm
+from repro.serving.engine import EngineConfig, EngineCore
+from repro.serving.sampling import SamplingParams
+
+MHA_ARCH = "chai-llama-7b"
+WARM = 3
+
+
+def _cfg(arch=MHA_ARCH):
+    cfg = reduced(get_config(arch), n_layers=2, d_model=32, d_ff=64,
+                  vocab=64).replace(dtype="float32")
+    return cfg.with_chai(enabled=True, warmup_tokens=WARM)
+
+
+def _core(cfg, **ecfg_kw):
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    return EngineCore(cfg, params,
+                      EngineConfig(batch_slots=2, max_seq=64,
+                                   page_size=16, **ecfg_kw))
+
+
+def _counters(core):
+    out = {"dense": core.dense_pool.counters()}
+    if core.chai_pool is not None:
+        out["chai"] = core.chai_pool.counters()
+    return out
+
+
+def _prompt(rng, cfg, n=8):
+    return rng.integers(0, cfg.vocab_size, size=n)
+
+
+# Steps to reach each phase: after add_request, step k leaves the slot
+# with k+1 generated tokens; CLUSTER fires at the START of the step where
+# slot_count == WARM + 1, so:
+#   0 steps  -> queued (pre-PREFILL)
+#   1 step   -> WARMUP (freshly prefilled)
+#   2 steps  -> mid-WARMUP
+#   WARM + 2 -> STEADY (dense K pages already freed at compaction)
+PHASE_STEPS = {"queued": 0, "prefill": 1, "warmup": 2, "steady": WARM + 2}
+
+
+@pytest.mark.parametrize("phase", list(PHASE_STEPS))
+def test_abort_returns_all_pages(phase):
+    """Abort at every lifecycle point: allocator counters return to the
+    pre-admission baseline (refcount-exact, zero leaks)."""
+    cfg = _cfg()
+    core = _core(cfg)
+    rng = np.random.default_rng(0)
+    base = _counters(core)
+    req = core.add_request(_prompt(rng, cfg), max_new_tokens=16, uid=7)
+    for _ in range(PHASE_STEPS[phase]):
+        core.step()
+    if phase == "steady":
+        assert core._phases[req.slot] == chai_cache.PHASE_STEADY
+    assert core.abort(7) is True
+    assert req.finish_reason == "aborted"
+    assert _counters(core) == base
+    assert not core.has_work()
+    # double-abort and unknown uids are no-ops
+    assert core.abort(7) is False
+    assert core.abort(999) is False
+    # tokens generated before the abort survive on the request
+    # (admission emits 1 token, then 1 per decode step)
+    steps = PHASE_STEPS[phase]
+    assert len(req.generated) == (0 if steps == 0 else steps + 1)
+
+
+def test_abort_does_not_corrupt_concurrent_slot():
+    """A survivor decoding beside an aborted request finishes with its
+    solo-run tokens (greedy AND seeded sampling), and the aborted slot
+    is immediately reusable."""
+    cfg = _cfg()
+    rng = np.random.default_rng(1)
+    p_a, p_b, p_c = (_prompt(rng, cfg) for _ in range(3))
+    for sp in (SamplingParams(max_new_tokens=12),
+               SamplingParams(temperature=0.8, top_k=16, top_p=0.95,
+                              seed=11, max_new_tokens=12)):
+        solo = _core(cfg)
+        solo.add_request(p_b, sp, uid=0)
+        while solo.has_work():
+            solo.step()
+        want = solo.done[0].generated
+
+        core = _core(cfg)
+        base = _counters(core)
+        core.add_request(p_a, sp, uid=0)
+        survivor = core.add_request(p_b, sp, uid=1)
+        core.step()             # both admitted, one decode step each
+        core.step()
+        assert core.abort(0) is True
+        queued = core.add_request(p_c, sp, uid=2)   # reuses the slot
+        while core.has_work():
+            core.step()
+        assert survivor.generated == want
+        assert queued.slot == 0 or queued.slot == 1
+        assert len(queued.generated) == 12
+        assert _counters(core) == base
+
+
+def test_abort_queued_request_never_touches_device():
+    cfg = _cfg()
+    core = _core(cfg)
+    rng = np.random.default_rng(2)
+    req = core.add_request(_prompt(rng, cfg), max_new_tokens=8, uid=3)
+    assert core.abort(3) is True
+    assert req.generated == [] and req.finish_reason == "aborted"
+    assert core._dev_state is None          # no device work happened
+    assert not core.queue
+
+
+def test_abort_with_prefix_cache_unlocks_pins():
+    """Aborting a prefix-hit request drops its cache locks; the cache's
+    own references survive (and clear() then drains to zero)."""
+    cfg = _cfg()
+    core = _core(cfg, prefix_cache=True)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=32)   # 2 full blocks
+    core.add_request(prompt, max_new_tokens=8, uid=0)
+    while core.has_work():
+        core.step()
+    warm = core.add_request(np.concatenate([prompt, [1, 2, 3]]),
+                            max_new_tokens=8, uid=1)
+    core.step()                 # admitted via the cache (locked entries)
+    assert warm.cache_hit in ("prefix", "snapshot")
+    assert core.abort(1) is True
+    assert all(not locked for locked in core._slot_locked)
+    core.prefix_cache.clear()
+    assert core.dense_pool.pages_in_use == 0
+    assert core.chai_pool.pages_in_use == 0

@@ -1,0 +1,283 @@
+"""Frontend API: LLM.generate / LLM.stream / abort / multi-turn Session.
+
+Acceptance (ISSUE 5): ``LLM.stream()`` yields tokens incrementally (the
+first chunk arrives before the request completes), ``abort()`` mid-stream
+frees all pages (pool counters return to baseline), and a 3-turn
+``Session`` reuses cached prefix pages so later turns prefill only the
+new suffix — all under both greedy and seeded-sampling SamplingParams.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config, reduced
+from repro.models import transformer as tfm
+from repro.serving.api import LLM, Session
+from repro.serving.engine import EngineConfig
+from repro.serving.sampling import SamplingParams
+
+MHA_ARCH = "chai-llama-7b"      # clustered CHAI (snapshot fast path)
+GQA_ARCH = "nemotron-4-15b"     # dense pages survive to retirement
+
+GREEDY = SamplingParams(max_new_tokens=10)
+SEEDED = SamplingParams(temperature=0.8, top_k=16, top_p=0.95, seed=5,
+                        max_new_tokens=10)
+
+
+def _cfg(arch=MHA_ARCH):
+    cfg = reduced(get_config(arch), n_layers=2, d_model=32, d_ff=64,
+                  vocab=64).replace(dtype="float32")
+    return cfg.with_chai(enabled=True, warmup_tokens=3)
+
+
+def _llm(cfg, **ecfg_kw):
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    return LLM(cfg, params, EngineConfig(batch_slots=2, max_seq=128,
+                                         page_size=16, **ecfg_kw))
+
+
+def _pool_counters(core):
+    out = {"dense": core.dense_pool.counters()}
+    if core.chai_pool is not None:
+        out["chai"] = core.chai_pool.counters()
+    return out
+
+
+@pytest.mark.parametrize("sp", [GREEDY, SEEDED], ids=["greedy", "seeded"])
+def test_generate_batch_and_single(sp):
+    cfg = _cfg()
+    llm = _llm(cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8) for _ in range(3)]
+    outs = llm.generate(prompts, sp)
+    assert len(outs) == 3
+    for o in outs:
+        assert len(o.token_ids) == sp.max_new_tokens
+        assert o.finish_reason == "length"
+    # single-prompt call: same engine, same params -> same tokens
+    again = llm.generate(prompts[0], sp)
+    assert len(again) == 1
+    assert again[0].token_ids == outs[0].token_ids
+
+
+@pytest.mark.parametrize("sp", [GREEDY, SEEDED], ids=["greedy", "seeded"])
+def test_stream_yields_tokens_incrementally(sp):
+    """First chunk arrives strictly before the request finishes; chunks
+    concatenate to exactly the generate() output; the final chunk is
+    flagged finished."""
+    cfg = _cfg()
+    llm = _llm(cfg)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    want = llm.generate(prompt, sp)[0].token_ids
+
+    chunks = list(llm.stream(prompt, sp))
+    assert len(chunks) > 1                      # incremental, not one blob
+    assert not chunks[0].finished               # first token precedes EOS
+    assert chunks[-1].finished
+    assert chunks[-1].finish_reason == "length"
+    got = [t for c in chunks for t in c.token_ids]
+    assert got == want
+
+
+@pytest.mark.parametrize("sp", [GREEDY, SEEDED], ids=["greedy", "seeded"])
+def test_abort_mid_stream_frees_all_pages(sp):
+    """Acceptance: abort() mid-stream ends the iterator and returns the
+    pool counters to their pre-request baseline."""
+    cfg = _cfg()
+    llm = _llm(cfg)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    llm.generate(prompt, sp)                    # warm the jits
+    base = _pool_counters(llm.core)
+
+    it = llm.stream(rng.integers(0, cfg.vocab_size, size=8), sp)
+    first = next(it)
+    assert not first.finished
+    assert llm.abort(first.uid) is True
+    tail = list(it)                 # ends with an empty terminal chunk
+    assert len(tail) == 1 and tail[0].finished
+    assert tail[0].finish_reason == "aborted" and tail[0].token_ids == []
+    assert _pool_counters(llm.core) == base
+    assert not llm.core.has_work()
+
+
+@pytest.mark.parametrize("sp", [GREEDY, SEEDED], ids=["greedy", "seeded"])
+def test_abandoned_stream_aborts_and_frees_slot(sp):
+    """Regression: breaking out of (or dropping) a stream iterator
+    aborts its request — an abandoned stream cannot pin a batch slot or
+    its pages, and later generate() calls are not starved."""
+    cfg = _cfg()
+    llm = _llm(cfg)
+    rng = np.random.default_rng(9)
+    llm.generate(rng.integers(0, cfg.vocab_size, size=8), sp)  # warm jits
+    base = _pool_counters(llm.core)
+    uids = []
+    for _ in range(3):              # more abandoned streams than slots
+        it = llm.stream(rng.integers(0, cfg.vocab_size, size=8), sp)
+        uids.append(next(it).uid)
+        it.close()                  # same as break-ing out of the loop
+    assert _pool_counters(llm.core) == base
+    assert not llm.core.has_work()
+    aborted = [r for r in llm.core.reap_done() if r.uid in uids]
+    assert [r.finish_reason for r in aborted] == ["aborted"] * 3
+    # an iterator dropped BEFORE its first __next__ enqueues nothing
+    # (submission happens when iteration begins)
+    llm.stream(rng.integers(0, cfg.vocab_size, size=8), sp).close()
+    assert not llm.core.queue and not llm.core.has_work()
+    # the engine still serves normally afterwards
+    out = llm.generate(rng.integers(0, cfg.vocab_size, size=8), sp)[0]
+    assert len(out.token_ids) == sp.max_new_tokens
+
+
+def test_stream_never_drops_tokens_under_concurrent_drivers():
+    """Regression: chunks are cut against the Request's token list, so a
+    stream loses nothing when OTHER frontend calls drive the shared core
+    — a concurrent generate() completing the streamed request, and two
+    interleaved streams, both deliver every token."""
+    cfg = _cfg()
+    llm = _llm(cfg)
+    rng = np.random.default_rng(8)
+    p1 = rng.integers(0, cfg.vocab_size, size=8)
+    p2 = rng.integers(0, cfg.vocab_size, size=8)
+    want1 = llm.generate(p1, GREEDY)[0].token_ids
+    want2 = llm.generate(p2, GREEDY)[0].token_ids
+
+    # (a) a generate() call runs the streamed request to completion
+    # before the stream is consumed: the stream must still replay it all
+    it = llm.stream(p1, GREEDY)
+    llm.generate(p2, GREEDY)
+    chunks = list(it)
+    assert [t for c in chunks for t in c.token_ids] == want1
+    assert chunks[-1].finished
+
+    # (b) two interleaved streams: alternate consumption, no loss
+    it1, it2 = llm.stream(p1, GREEDY), llm.stream(p2, GREEDY)
+    got1, got2 = [], []
+    done1 = done2 = False
+    while not (done1 and done2):
+        if not done1:
+            c = next(it1, None)
+            if c is None:
+                done1 = True
+            else:
+                got1 += c.token_ids
+        if not done2:
+            c = next(it2, None)
+            if c is None:
+                done2 = True
+            else:
+                got2 += c.token_ids
+    assert got1 == want1 and got2 == want2
+
+
+def test_stream_interleaves_with_background_requests():
+    """A stream driven beside queued requests advances them too: the
+    shared core keeps continuous batching across frontend calls."""
+    cfg = _cfg()
+    llm = _llm(cfg)
+    rng = np.random.default_rng(3)
+    p_bg = rng.integers(0, cfg.vocab_size, size=8)
+    p_st = rng.integers(0, cfg.vocab_size, size=8)
+    bg = llm.core.add_request(p_bg, GREEDY)
+    chunks = list(llm.stream(p_st, GREEDY))
+    assert [t for c in chunks for t in c.token_ids] != []
+    assert bg.finished                          # background rode along
+    assert len(bg.generated) == GREEDY.max_new_tokens
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sp", [GREEDY, SEEDED], ids=["greedy", "seeded"])
+def test_three_turn_session_reuses_prefix_pages(sp):
+    """Acceptance: a 3-turn Session over a prefix-cached engine serves
+    later turns from cached pages — turn 2/3 prefill strictly less than
+    their prompts (pages saved > 0). On a GQA arch retiring slots index
+    their FULL sequence, so turn N+1 prefills only the new user message
+    (up to block rounding)."""
+    cfg = _cfg(GQA_ARCH)
+    llm = _llm(cfg, prefix_cache=True)
+    ses = Session(llm, sp)
+    rng = np.random.default_rng(4)
+    ps = llm.core.ecfg.page_size
+    turn1 = ses.send(rng.integers(0, cfg.vocab_size, size=32))
+    assert turn1.cached_tokens == 0
+    saved_pages = 0
+    for _ in (2, 3):
+        msg = rng.integers(0, cfg.vocab_size, size=6)
+        hist_len = len(ses.history)
+        out = ses.send(msg)
+        assert out.cached_tokens > 0                      # reuse happened
+        assert out.prefill_tokens < hist_len + len(msg)   # not a cold run
+        # full-sequence indexing: only the tail past the last cached
+        # block boundary is forwarded — the new message + block remainder
+        assert out.prefill_tokens <= len(msg) + ps
+        saved_pages += out.cached_tokens // ps
+    assert saved_pages > 0
+    assert len(ses.turns) == 3
+    assert len(ses.history) == (32 + 6 + 6
+                                + 3 * sp.max_new_tokens)
+    llm.core.prefix_cache.clear()
+    assert llm.core.dense_pool.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_session_on_clustered_mha_arch_still_saves():
+    """On the MHA+CHAI arch dense K pages are freed at compaction, so
+    full-sequence indexing is skipped — but turn N+1 still aliases the
+    PROMPT blocks of earlier turns (cached_tokens > 0)."""
+    cfg = _cfg(MHA_ARCH)
+    llm = _llm(cfg, prefix_cache=True)
+    ses = Session(llm, GREEDY)
+    rng = np.random.default_rng(5)
+    ses.send(rng.integers(0, cfg.vocab_size, size=32))
+    out2 = ses.send(rng.integers(0, cfg.vocab_size, size=6))
+    assert out2.cached_tokens > 0
+    assert out2.prefill_tokens < len(ses.turns[1].prompt_token_ids)
+    llm.core.prefix_cache.clear()
+    assert llm.core.dense_pool.pages_in_use == 0
+    assert llm.core.chai_pool.pages_in_use == 0
+
+
+def test_llm_detokenizer_stop_strings_and_text():
+    cfg = _cfg()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    detok = lambda ids: " ".join(map(str, ids))
+    llm = LLM(cfg, params, EngineConfig(batch_slots=2, max_seq=64),
+              detokenizer=detok)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    probe = llm.generate(prompt, SamplingParams(max_new_tokens=8))[0]
+    assert probe.text == detok(probe.token_ids)
+    stop = " ".join(map(str, probe.token_ids[3:5]))
+    out = llm.generate(prompt, SamplingParams(max_new_tokens=8,
+                                              stop=(stop,)))[0]
+    assert out.finish_reason == "stop"
+    assert len(out.token_ids) == 5              # truncated at the match
+    # stop strings without a detokenizer are rejected at submission
+    bare = _llm(cfg)
+    with pytest.raises(ValueError):
+        bare.generate(prompt, SamplingParams(stop=("x",)))
+
+
+def test_uid_monotonic_no_collision_after_retirement():
+    """Satellite: default uids come from a monotonic counter — they can
+    no longer collide after retirement interleaving (the old default was
+    len(queue) + len(done), which repeats once requests retire)."""
+    cfg = _cfg()
+    llm = _llm(cfg)
+    rng = np.random.default_rng(7)
+    uids = []
+    for _ in range(3):
+        out = llm.generate(rng.integers(0, cfg.vocab_size, size=8),
+                           SamplingParams(max_new_tokens=2))
+        uids.append(out[0].uid)
+    assert len(set(uids)) == 3
+    # explicit uids bump the counter past themselves
+    req = llm.core.add_request(rng.integers(0, cfg.vocab_size, size=8),
+                               SamplingParams(max_new_tokens=2), uid=50)
+    nxt = llm.core.add_request(rng.integers(0, cfg.vocab_size, size=8),
+                               SamplingParams(max_new_tokens=2))
+    assert req.uid == 50 and nxt.uid == 51
+    while llm.core.has_work():
+        llm.core.step()

@@ -166,6 +166,35 @@ def test_cohort_ragged_prefill_matches_single_cohorts():
         assert ragged[uid].generated == single[uid].generated, uid
 
 
+def test_cohort_redispatch_regenerates_cleanly():
+    """Regression: a request re-dispatched after a blown cohort deadline
+    restarts from its prompt — partial tokens from the aborted attempt
+    are dropped, so the final output equals an uninterrupted run (the
+    old behaviour appended the fresh decode onto the stale prefix)."""
+    cfg = _cfg(MHA_ARCH)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    clean, _ = _run(cfg, "cohort", [(prompt, 8)], slots=1)
+
+    import jax as _jax
+    from repro.models import transformer as _tfm
+    params = _tfm.init_params(cfg, _jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(batch_slots=1, max_seq=64,
+                                     scheduler="cohort",
+                                     cohort_deadline_s=0.0))
+    req = eng.submit(prompt, max_new_tokens=8, uid=0)
+    try:        # deadline 0: times out mid-cohort, leaving partial tokens
+        eng._run_cohort([req])
+    except TimeoutError:
+        pass
+    assert req.generated                       # the stale partial prefix
+    eng.ecfg.cohort_deadline_s = 300.0
+    done = eng.run()
+    assert len(done) == 1
+    assert done[0].generated == clean[0].generated
+
+
 @pytest.mark.slow
 def test_mixed_workload_throughput_beats_cohort():
     """Mixed-length workload: continuous batching needs strictly fewer
