@@ -25,6 +25,16 @@ Five measurements:
      and seeded sampling) — TTFT plus inter-token latency (ITL) p50/p99
      from per-chunk arrival stamps, and the deterministic claim that the
      first token arrives strictly before the request completes.
+  7. **SLO storm lane**: steady Poisson decode traffic interrupted by a
+     long-prompt arrival. Monolithic prefill forwards the storm prompt
+     inside ONE ``step()`` — every decoding slot's ITL absorbs it;
+     ``prefill_chunk_tokens`` page-slices the prompt across steps so
+     decode tokens keep flowing. Gated step-domain claims (monolithic
+     stalls decode for the whole prompt, chunked interleaves every
+     intermediate step) plus the advisory wall-clock reading: chunked
+     ITL p99 within 2x the no-storm baseline where monolithic prefill
+     violates it (on paper-scale hardware; see the lane docstring for
+     why the CPU proxy inverts the ratio).
 """
 from __future__ import annotations
 
@@ -390,6 +400,150 @@ def _streaming_lane(cfg, params, pipe, *, prompt_len=16, max_new=24,
     return out
 
 
+def _slo_storm_lane(cfg, params, pipe, *, n_decode=3, decode_prompt=16,
+                    storm_len=96, max_new=24, storm_new=8, chunk=16,
+                    slots=4, mean_gap_s=0.002, seed=0):
+    """SLO under a long-prompt storm: steady Poisson decode traffic is
+    interrupted by a long-prompt arrival once every decoder has produced
+    a few tokens. Three lanes on identical jit-warm engines:
+
+    * ``baseline``   — decode traffic alone (no storm): the ITL floor.
+    * ``monolithic`` — storm admitted with ``prefill_chunk_tokens=0``:
+      the whole storm prompt forwards inside ONE ``step()``, so every
+      decoding slot's next token waits for the full prefill.
+    * ``chunked``    — ``prefill_chunk_tokens=chunk``: the storm prefill
+      page-slices across steps, decode tokens flow between chunks.
+
+    The GATED claims are step-domain and deterministic: monolithic
+    prefill emits the storm's first token in its admission step (zero
+    intermediate steps — the whole prompt's work lands inside one decode
+    interval), while chunked prefill spans ``storm_pages`` steps with
+    every decoder emitting a token in each intermediate step.
+
+    The wall-clock reading — chunked ITL p99 within 2x the no-storm
+    baseline where monolithic violates it — is what those facts mean on
+    paper-scale hardware (prefill FLOPs dwarf one decode step). It is
+    reported here but NOT gated: on this CPU container the cost ratio
+    INVERTS (the monolithic prefill is compiled jnp, a few ms, while
+    every decode step pays the interpret-mode Pallas kernel), so the
+    tiny-model wall clock measures the interpreter, not the storm."""
+    from repro.serving.api import LLM
+    from repro.serving.sampling import SamplingParams
+
+    rng = np.random.default_rng(seed)
+    gaps = np.cumsum(rng.exponential(mean_gap_s, size=n_decode))
+    prompts = [pipe.batch(9000 + i)["tokens"][0, :decode_prompt]
+               for i in range(n_decode)]
+    # pipe rows are shorter than the storm prompt — concatenate two
+    storm = np.concatenate([np.asarray(pipe.batch(9100)["tokens"][0]),
+                            np.asarray(pipe.batch(9101)["tokens"][0])
+                            ])[:storm_len]
+    assert len(storm) == storm_len, len(storm)
+    sp = SamplingParams(max_new_tokens=max_new)
+    storm_sp = SamplingParams(max_new_tokens=storm_new)
+
+    def run_lane(chunk_tokens, with_storm):
+        llm = LLM(cfg, params, EngineConfig(
+            batch_slots=slots, max_seq=128, page_size=16,
+            prefill_chunk_tokens=chunk_tokens))
+        core = llm.core
+        # Warm every jit variant the measured pass can hit. Arrival
+        # staggering is wall-clock nondeterministic, so the decode step
+        # must be warm for EVERY phase mix: the all-MHA and all-CHAI
+        # fast paths warm on a plain generate; the general mixed jit
+        # needs a STEADY slot coexisting with a WARMUP one — force that
+        # by admitting a second request (and the storm prompt, warming
+        # its monolithic bucket / chunk bucket) after the first request
+        # reaches STEADY.
+        ra = core.add_request(prompts[0], sp, uid=900)
+        for _ in range(cfg.chai.warmup_tokens + 2):
+            core.step()
+        rb = core.add_request(prompts[1], sp, uid=901)
+        rs = core.add_request(storm, storm_sp, uid=902)
+        while not (ra.finished and rb.finished and rs.finished):
+            core.step()
+        core.reap_done()
+
+        reqs = [core.add_request(p, sp, uid=i,
+                                 arrival_delay=float(gaps[i]))
+                for i, p in enumerate(prompts)]
+        stamps = {r.uid: [] for r in reqs}   # per decode uid: (step, t)
+        storm_req, storm_submit_step, storm_first_step = None, None, None
+        n_steps = 0
+        while (not all(r.finished for r in reqs)
+               or (storm_req is not None and not storm_req.finished)):
+            outs = core.step()
+            n_steps += 1
+            now = time.time()
+            for o in outs:
+                if o.uid in stamps:
+                    stamps[o.uid].extend([(n_steps, now)]
+                                         * len(o.token_ids))
+                elif storm_req is not None and o.uid == storm_req.uid \
+                        and storm_first_step is None:
+                    storm_first_step = n_steps
+            if (with_storm and storm_req is None
+                    and all(len(r.generated) >= 4 for r in reqs)):
+                storm_req = core.add_request(storm, storm_sp, uid=99)
+                storm_submit_step = n_steps
+            if not outs and not core.has_active:
+                time.sleep(1e-4)    # waiting on a Poisson arrival
+        core.reap_done()
+
+        itl = np.concatenate([np.diff([t for _, t in s])
+                              for s in stamps.values() if len(s) > 1])
+        out = {
+            "n_itl_samples": int(itl.size),
+            "itl_s_p50": float(np.percentile(itl, 50)),
+            "itl_s_p99": float(np.percentile(itl, 99)),
+            "itl_s_max": float(itl.max()),
+        }
+        if with_storm:
+            # steps strictly between the storm's admission step and the
+            # step that emitted its first token — the prefill window a
+            # decoder could starve in
+            window = range(storm_submit_step + 2, storm_first_step)
+            out["storm_prefill_intermediate_steps"] = len(window)
+            out["decode_tokens_during_storm_prefill"] = sum(
+                1 for s in stamps.values() for step, _ in s
+                if step in window)
+        return out
+
+    storm_pages = -(-storm_len // 16)
+    out = {
+        "workload": {"n_decode": n_decode, "decode_prompt": decode_prompt,
+                     "storm_len": storm_len, "storm_pages": storm_pages,
+                     "max_new": max_new, "chunk": chunk, "slots": slots},
+        "baseline": run_lane(0, with_storm=False),
+        "monolithic": run_lane(0, with_storm=True),
+        "chunked": run_lane(chunk, with_storm=True),
+    }
+    bound = 2.0 * out["baseline"]["itl_s_p99"]
+    mono, chnk = out["monolithic"], out["chunked"]
+    out["itl_p99_2x_baseline_bound_s"] = bound
+    out["claims"] = {
+        # -- deterministic, gated ------------------------------------
+        # one-shot prefill has NO intermediate steps: the storm's first
+        # token arrives in its admission step, so every decoder's next
+        # token absorbed the whole prompt's forward
+        "monolithic_prefill_stalls_decode":
+            mono["storm_prefill_intermediate_steps"] == 0,
+        # chunked prefill spans the page-sliced window and every
+        # decoder emits a token in every intermediate step
+        "chunked_decode_flows_during_prefill":
+            chnk["storm_prefill_intermediate_steps"] >= storm_pages - 2
+            and chnk["decode_tokens_during_storm_prefill"]
+                >= n_decode * (storm_pages - 2),
+        # -- wall-clock, advisory (see docstring: the CPU proxy
+        # inverts the prefill/decode cost ratio) ---------------------
+        "chunked_itl_p99_within_2x_baseline":
+            chnk["itl_s_p99"] <= bound,
+        "monolithic_violates_2x_baseline":
+            mono["itl_s_p99"] > bound,
+    }
+    return out
+
+
 def _analytic_full(seqs=(256, 512, 1024, 2048)):
     cfg = get_config("chai-llama-7b")
     h, hd = cfg.n_heads, cfg.head_dim
@@ -423,6 +577,7 @@ def run():
     fused = _fused_kernel_lane()
     prefix = _prefix_reuse_lane(cfg_chai, params, pipe)
     streaming = _streaming_lane(cfg_chai, params, pipe)
+    slo = _slo_storm_lane(cfg_chai, params, pipe)
 
     result = {
         "proxy_note": "CPU wall time on tiny model (engine incl. "
@@ -435,6 +590,7 @@ def run():
         "fused_kernel_lane": fused,
         "prefix_reuse": prefix,
         "streaming": streaming,
+        "slo_storm": slo,
         "analytic_llama7b_v5e": _analytic_full(),
         "paper_claim": "TTFT up to 1.73x, TTNT up to 5x at seq 2048",
         "claim_check": {
@@ -471,6 +627,16 @@ def run():
             # (deterministic; the ITL percentiles above are advisory)
             "stream_first_token_before_completion":
                 streaming["claims"]["stream_first_token_before_completion"],
+            # SLO storm lane, deterministic step-domain claims (the
+            # wall-clock ITL booleans stay advisory inside the lane —
+            # the CPU proxy inverts the prefill/decode cost ratio):
+            # one-shot prefill absorbs the whole storm prompt inside a
+            # single decode interval; chunked prefill keeps every
+            # decoder emitting through the storm's prefill window
+            "slo_storm_monolithic_prefill_stalls_decode":
+                slo["claims"]["monolithic_prefill_stalls_decode"],
+            "slo_storm_chunked_decode_flows_during_prefill":
+                slo["claims"]["chunked_decode_flows_during_prefill"],
         },
     }
     save_result("bench_latency", result)

@@ -1,0 +1,233 @@
+"""OpenAI-style HTTP completions server over ``AsyncLLM`` — stdlib only.
+
+POST /v1/completions with a JSON body::
+
+    {"prompt": [3, 14, 15, 9], "max_tokens": 16, "temperature": 0.0,
+     "stream": false, "priority": 0}
+
+``prompt`` is a list of token ids (this repo ships no tokenizer; the
+demo detokenizer renders ids as space-joined integers). Non-streaming
+requests get one JSON object; ``"stream": true`` gets Server-Sent
+Events (``data: {...}\\n\\n`` per chunk, ``data: [DONE]`` at the end),
+each chunk carrying the tokens that step produced. GET /v1/stats
+returns engine counters (steps, preemptions, pool occupancy).
+
+Because the server rides ``AsyncLLM``, every connection shares ONE
+continuous batch: concurrent requests are co-scheduled by the engine's
+SLO knobs (chunked prefill bounds ITL stalls; ``priority`` classes
+preempt under page pressure).
+
+Run (serves until Ctrl-C)::
+
+    python examples/serve_http.py --port 8080
+
+Self-test (starts the server in-process, runs a scripted client,
+exits)::
+
+    python examples/serve_http.py --selftest
+"""
+import argparse
+import asyncio
+import json
+import sys
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import get_config, reduced
+from repro.models import transformer as tfm
+from repro.serving.async_api import AsyncLLM
+from repro.serving.engine import EngineConfig
+from repro.serving.sampling import SamplingParams
+
+
+def build_llm(arch: str = "chai-llama-7b") -> AsyncLLM:
+    """A tiny demo model (random weights) behind a full serving stack."""
+    cfg = reduced(get_config(arch), n_layers=2, d_model=64, d_ff=128,
+                  vocab=256).replace(dtype="float32")
+    cfg = cfg.with_chai(enabled=True, warmup_tokens=8)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(batch_slots=4, max_seq=256, page_size=16,
+                        prefix_cache=True, prefill_chunk_tokens=32)
+    detok = lambda ids: " ".join(map(str, ids))
+    return AsyncLLM(cfg, params, ecfg, detokenizer=detok)
+
+
+def _params_of(body: dict) -> SamplingParams:
+    return SamplingParams(
+        max_new_tokens=int(body.get("max_tokens", 16)),
+        temperature=float(body.get("temperature", 0.0)),
+        top_k=int(body.get("top_k", 0)),
+        top_p=float(body.get("top_p", 1.0)),
+        seed=int(body.get("seed", 0)))
+
+
+async def _read_request(reader) -> tuple:
+    """Minimal HTTP/1.1 parse: (method, path, body-bytes)."""
+    line = await reader.readline()
+    if not line:
+        return None, None, b""
+    method, path, _ = line.decode("latin1").split(" ", 2)
+    length = 0
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        name, _, val = h.decode("latin1").partition(":")
+        if name.strip().lower() == "content-length":
+            length = int(val.strip())
+    body = await reader.readexactly(length) if length else b""
+    return method, path, body
+
+
+def _response(code: int, payload: bytes, ctype: str = "application/json",
+              extra: str = "") -> bytes:
+    reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+              503: "Service Unavailable"}[code]
+    return (f"HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\n"
+            f"Content-Length: {len(payload)}\r\nConnection: close\r\n"
+            f"{extra}\r\n").encode("latin1") + payload
+
+
+class Server:
+    def __init__(self, llm: AsyncLLM):
+        self.llm = llm
+
+    async def handle(self, reader, writer):
+        try:
+            method, path, raw = await _read_request(reader)
+            if method is None:
+                return
+            if method == "GET" and path == "/v1/stats":
+                await self._stats(writer)
+            elif method == "POST" and path == "/v1/completions":
+                await self._completions(writer, raw)
+            else:
+                writer.write(_response(404, b'{"error": "not found"}'))
+        except (asyncio.IncompleteReadError, ConnectionResetError):
+            pass
+        except Exception as err:  # noqa: BLE001 — report, keep serving
+            msg = json.dumps({"error": str(err)}).encode()
+            try:
+                writer.write(_response(400, msg))
+            except Exception:   # noqa: BLE001
+                pass
+        finally:
+            try:
+                await writer.drain()
+                writer.close()
+            except Exception:   # noqa: BLE001
+                pass
+
+    async def _stats(self, writer):
+        core = self.llm.core
+        stats = {"steps": core.steps_executed,
+                 "preemptions": core.preemptions,
+                 "cluster_transitions": core.cluster_transitions,
+                 "dense_pages_in_use": core.dense_pool.pages_in_use,
+                 "prefix_cache": core.prefix_stats()}
+        writer.write(_response(200, json.dumps(stats).encode()))
+
+    async def _completions(self, writer, raw: bytes):
+        body = json.loads(raw or b"{}")
+        prompt = np.asarray(body["prompt"], np.int32)
+        sp = _params_of(body)
+        priority = int(body.get("priority", 0))
+        if body.get("stream"):
+            head = ("HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n"
+                    "Cache-Control: no-cache\r\nConnection: close\r\n\r\n")
+            writer.write(head.encode("latin1"))
+            await writer.drain()
+            async for chunk in self.llm.stream(prompt, sp,
+                                               priority=priority):
+                data = {"tokens": chunk.token_ids,
+                        "finished": chunk.finished,
+                        "finish_reason": chunk.finish_reason or None}
+                writer.write(f"data: {json.dumps(data)}\n\n".encode())
+                await writer.drain()
+            writer.write(b"data: [DONE]\n\n")
+        else:
+            out = await self.llm.generate(prompt, sp, priority=priority)
+            payload = {"tokens": out.token_ids, "text": out.text,
+                       "finish_reason": out.finish_reason,
+                       "cached_tokens": out.cached_tokens,
+                       "prefill_tokens": out.prefill_tokens}
+            writer.write(_response(200, json.dumps(payload).encode()))
+
+
+async def serve(host: str, port: int, llm=None, ready=None):
+    llm = llm or build_llm()
+    async with llm:
+        server = await asyncio.start_server(Server(llm).handle, host, port)
+        addr = server.sockets[0].getsockname()
+        print(f"serving on http://{addr[0]}:{addr[1]}  "
+              f"(POST /v1/completions, GET /v1/stats)")
+        if ready is not None:
+            ready.set_result(addr)
+        async with server:
+            await server.serve_forever()
+
+
+async def _client(host, port, body) -> dict:
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = json.dumps(body).encode()
+    writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Type: application/json\r\n"
+                  f"Content-Length: {len(payload)}\r\n\r\n"
+                  ).encode() + payload)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    head, _, tail = data.partition(b"\r\n\r\n")
+    if b"text/event-stream" in head:
+        chunks = [json.loads(ln[6:]) for ln in tail.split(b"\n")
+                  if ln.startswith(b"data: ") and b"[DONE]" not in ln]
+        return {"stream": chunks}
+    return json.loads(tail)
+
+
+async def selftest(port: int = 8181):
+    loop = asyncio.get_running_loop()
+    ready = loop.create_future()
+    task = loop.create_task(serve("127.0.0.1", port, ready=ready))
+    await ready
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 256, size=24).tolist()
+    out = await _client("127.0.0.1", port,
+                        {"prompt": prompt, "max_tokens": 8})
+    assert len(out["tokens"]) == 8, out
+    srm = await _client("127.0.0.1", port,
+                        {"prompt": prompt, "max_tokens": 8,
+                         "stream": True})
+    got = [t for c in srm["stream"] for t in c["tokens"]]
+    assert got == out["tokens"], (got, out)
+    both = await asyncio.gather(
+        _client("127.0.0.1", port, {"prompt": prompt, "max_tokens": 8}),
+        _client("127.0.0.1", port,
+                {"prompt": rng.integers(0, 256, size=16).tolist(),
+                 "max_tokens": 8, "priority": 1}))
+    assert both[0]["tokens"] == out["tokens"]
+    print("selftest OK:", out["tokens"])
+    task.cancel()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--selftest", action="store_true",
+                    help="start the server in-process, run a scripted "
+                         "client, exit")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        asyncio.run(selftest(args.port))
+    else:
+        try:
+            asyncio.run(serve(args.host, args.port))
+        except KeyboardInterrupt:
+            pass
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -606,6 +606,87 @@ def restore_slot_snapshot(state, slot, bt_kg_row, bt_vg_row, bt_kc_row,
     return state
 
 
+_PAGED_POOL_KEYS = ("kvp", "kvp_scale", "cp", "cp_scale")
+
+
+def save_slot_paged(state, slot, kg_pages, vg_pages, kc_pages, vc_pages):
+    """Preemption swap-out: gather slot ``slot``'s entire per-slot state
+    — every per-slot column (``pos``, ``phase``, ``chai_scores``, local
+    rings, …) plus the CONTENTS of its pool pages — so the engine can
+    free the physical pages and later restore the slot bitwise
+    (``load_slot_paged``). Recompute-based resume cannot be exact here:
+    CHAI decode is an approximation of full attention, so the K/V rows a
+    re-prefill would produce for generated tokens differ from the rows
+    the original decode wrote.
+
+    Page vectors are the null-padded ``(P,)`` logical->physical maps; a
+    pool kind the slot does not hold (e.g. dense K after compaction)
+    passes an all-null vector and round-trips null-sink garbage, keeping
+    one trace per arch. Returns ``(cols, pools)`` pytrees."""
+    cols = {}
+    for k, v in state.items():
+        if k in _PAGED_POOL_KEYS or k.startswith("bt_"):
+            continue
+        axis = 0 if v.ndim == 1 else 1
+        cols[k] = jax.lax.dynamic_index_in_dim(v, slot, axis,
+                                               keepdims=True)
+    pools = {}
+    if "kvp" in state:
+        pools["kg"] = state["kvp"][:, kg_pages]
+        pools["vg"] = state["kvp"][:, vg_pages]
+        if "kvp_scale" in state:
+            pools["kg_scale"] = state["kvp_scale"][:, kg_pages]
+            pools["vg_scale"] = state["kvp_scale"][:, vg_pages]
+    if "cp" in state:
+        pools["kc"] = state["cp"][:, kc_pages]
+        if "cp_scale" in state:
+            pools["kc_scale"] = state["cp_scale"][:, kc_pages]
+        if "bt_vc" in state:
+            pools["vc"] = state["cp"][:, vc_pages]
+            if "cp_scale" in state:
+                pools["vc_scale"] = state["cp_scale"][:, vc_pages]
+    return cols, pools
+
+
+def load_slot_paged(state, slot, cols, pools, kg_pages, vg_pages,
+                    kc_pages, vc_pages, bt_kg_row, bt_vg_row, bt_kc_row,
+                    bt_vc_row):
+    """Preemption swap-in: the inverse of ``save_slot_paged`` against
+    freshly allocated pages. Per-slot columns are written back verbatim,
+    saved page contents are scattered at the new physical ids, and the
+    block tables are rebuilt from the new logical->physical maps
+    (null-padded vectors land their tails in the null sink, as every
+    paged write does). Donate ``state`` when jitting."""
+    state = dict(state)
+    for k, v in cols.items():
+        axis = 0 if state[k].ndim == 1 else 1
+        state[k] = jax.lax.dynamic_update_index_in_dim(
+            state[k], v.astype(state[k].dtype), slot, axis)
+    if "kvp" in state:
+        state["kvp"] = state["kvp"].at[:, kg_pages].set(pools["kg"])
+        state["kvp"] = state["kvp"].at[:, vg_pages].set(pools["vg"])
+        if "kvp_scale" in state:
+            state["kvp_scale"] = state["kvp_scale"].at[:, kg_pages].set(
+                pools["kg_scale"])
+            state["kvp_scale"] = state["kvp_scale"].at[:, vg_pages].set(
+                pools["vg_scale"])
+        state["bt_kg"] = state["bt_kg"].at[slot].set(bt_kg_row)
+        state["bt_vg"] = state["bt_vg"].at[slot].set(bt_vg_row)
+    if "cp" in state:
+        state["cp"] = state["cp"].at[:, kc_pages].set(pools["kc"])
+        if "cp_scale" in state:
+            state["cp_scale"] = state["cp_scale"].at[:, kc_pages].set(
+                pools["kc_scale"])
+        state["bt_kc"] = state["bt_kc"].at[slot].set(bt_kc_row)
+        if "bt_vc" in state:
+            state["cp"] = state["cp"].at[:, vc_pages].set(pools["vc"])
+            if "cp_scale" in state:
+                state["cp_scale"] = state["cp_scale"].at[:, vc_pages].set(
+                    pools["vc_scale"])
+            state["bt_vc"] = state["bt_vc"].at[slot].set(bt_vc_row)
+    return state
+
+
 def reset_slot_paged(state, slot):
     """Paged retire: phase -> FREE, rewind ``pos``, null every block-table
     row (the engine frees the physical pages host-side)."""

@@ -75,9 +75,10 @@ def chai_decode_attention(xn, p, cfg, state, idxs, chai_ctx, *, local,
 
 
 def _fused_ok(cfg):
-    """The fused kernel covers everything the engine serves except the
-    gemma2-style attention-logit softcap (tanh inside the softmax)."""
-    return USE_FUSED_DECODE and not cfg.attn_logit_softcap
+    """The fused kernel covers everything the engine serves — the
+    gemma2-style attention-logit softcap is applied in-kernel between
+    QK-scale and the online-softmax update (static ``softcap`` flag)."""
+    return USE_FUSED_DECODE
 
 
 def _dense_ts(decode_ts, s):
@@ -214,20 +215,23 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None, *,
     if _fused_ok(cfg):
         # One fused Pallas launch: scores + online softmax + h2c AV.
         from repro.kernels import ops as kops
+        cap = float(cfg.attn_logit_softcap or 0.0)
         if paged:
             if share_v:
                 out = kops.paged_chai_decode_attention(
                     q_rep, cp, state["bt_kc"], cp, state["bt_vc"],
-                    gather_idx, pos, k_scale_pool=csc, share_values=True)
+                    gather_idx, pos, k_scale_pool=csc, share_values=True,
+                    softcap=cap)
             else:
                 out = kops.paged_chai_decode_attention(
                     q_rep, cp, state["bt_kc"], vp, state["bt_vg"],
-                    gather_idx, pos, k_scale_pool=csc, v_scale_pool=vsp)
+                    gather_idx, pos, k_scale_pool=csc, v_scale_pool=vsp,
+                    softcap=cap)
         else:
             out = kops.chai_decode_attention(
                 q_rep, kc, vc, gather_idx, pos, k_scale=ksc, v_scale=vsc,
                 share_values=share_v,
-                ts=_dense_ts(decode_ts, kc.shape[2]))
+                ts=_dense_ts(decode_ts, kc.shape[2]), softcap=cap)
     else:
         # jnp fallback (softcap configs / reference path): densify and
         # dequantize, then the pre-fusion three-step math.
@@ -377,7 +381,8 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
             out = kops.paged_chai_decode_attention(
                 q_flat, pool, state["bt_kg"], pool, state["bt_vg"],
                 h2c_flat, pos, k_scale_pool=spool, v_scale_pool=spool,
-                reps_per_group=r)
+                reps_per_group=r,
+                softcap=float(cfg.attn_logit_softcap or 0.0))
             return out.astype(xn.dtype), state
         state, kc, vc = _paged_global_update(state, idxs, k_new, v_new,
                                              pos, write_mask, cfg)
@@ -431,7 +436,8 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
             from repro.kernels import ops as kops
             out = kops.chai_decode_attention(
                 q_flat, kc, vc, h2c_flat, pos, k_scale=ksc, v_scale=vsc,
-                reps_per_group=r, ts=_dense_ts(decode_ts, s))
+                reps_per_group=r, ts=_dense_ts(decode_ts, s),
+                softcap=float(cfg.attn_logit_softcap or 0.0))
             return out.astype(xn.dtype), _commit_dense(state)
         if int8:
             kc_f, vc_f = dequant_rows(kc, ksc), dequant_rows(vc, vsc)

@@ -335,7 +335,7 @@ def paged_chai_av(a, v_pool, bt_v, h2c, *, interpret=None):
 # ------------------------------------------------- fused one-pass decode ---
 def _fused_tile(pos_ref, q_ref, h2c_ref, k_ref, ks_ref, v_ref, vs_ref,
                 o_ref, m_scr, l_scr, acc_scr, *, scale, ts, window, n_tiles,
-                reps_per_group, v_rep, share_values):
+                reps_per_group, v_rep, share_values, softcap=0.0):
     """One (batch, S-tile) step of the fused clustered decode.
 
     Shared by the dense and paged variants — the paged caller only differs
@@ -368,6 +368,10 @@ def _fused_tile(pos_ref, q_ref, h2c_ref, k_ref, ks_ref, v_ref, vs_ref,
     if ks_ref is not None:   # int8: scores scaled by the per-row K scales
         sc = sc * ks_ref[0].astype(jnp.float32)[:, None, :]
     sc = sc.reshape(r_total, ts) * scale
+    if softcap:
+        # tanh logit softcap (gemma2): between QK-scale and the validity
+        # mask, matching the jnp oracle's insertion point exactly.
+        sc = softcap * jnp.tanh(sc / softcap)
     idx = s * ts + jax.lax.broadcasted_iota(jnp.int32, (1, ts), 1)
     pos = pos_ref[b]
     valid = idx <= pos
@@ -466,7 +470,7 @@ def _fused_shapes(q_rep, v_rows, h2c, share_values):
 
 def chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos, *, k_scale=None,
                       v_scale=None, reps_per_group=1, share_values=False,
-                      window=0, ts=512, interpret=None):
+                      window=0, ts=512, softcap=0.0, interpret=None):
     """One-pass fused clustered decode over a dense cache.
 
     q_rep: (B, R, hd) rep-head queries; k_cache: (B, KVk, S, hd) with
@@ -514,7 +518,7 @@ def chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos, *, k_scale=None,
     kernel = _fused_arg_router(
         1, k_scale is not None, v_scale is not None, scale=scale, ts=ts,
         window=window, n_tiles=n_tiles, reps_per_group=reps_per_group,
-        v_rep=v_rep, share_values=share_values)
+        v_rep=v_rep, share_values=share_values, softcap=softcap)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -537,7 +541,7 @@ def chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos, *, k_scale=None,
 def paged_chai_fused_decode(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
                             k_scale_pool=None, v_scale_pool=None,
                             reps_per_group=1, share_values=False, window=0,
-                            interpret=None):
+                            softcap=0.0, interpret=None):
     """One-pass fused clustered decode over block-table page pools.
 
     q_rep: (B, R, hd); k_pool: (nP, KVk, page, hd) clustered pages (MHA:
@@ -591,7 +595,7 @@ def paged_chai_fused_decode(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
         3, k_scale_pool is not None, v_scale_pool is not None, scale=scale,
         ts=page, window=window, n_tiles=n_pages,
         reps_per_group=reps_per_group, v_rep=v_rep,
-        share_values=share_values)
+        share_values=share_values, softcap=softcap)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

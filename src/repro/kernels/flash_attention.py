@@ -206,7 +206,8 @@ def paged_decode(q, kv_pool, bt_k, bt_v, pos, *, window=0, interpret=None):
 
 # ------------------------------------------------------------------ prefill
 def _prefill_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
-                    acc_scr, *, scale, window, tq, ts, n_tiles):
+                    acc_scr, *, scale, window, tq, ts, n_tiles,
+                    softcap=0.0):
     i = pl.program_id(2)           # q tile
     j = pl.program_id(3)           # kv tile
 
@@ -233,6 +234,10 @@ def _prefill_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         q = q_ref[0, 0].astype(jnp.float32)                  # (Tq, hd)
         k = k_ref[0, 0].astype(jnp.float32)                  # (Ts, hd)
         sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            # tanh logit softcap (gemma2): after QK-scale, before the
+            # causal mask — the jnp oracle's exact insertion point.
+            sc = softcap * jnp.tanh(sc / softcap)
         qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (tq, ts), 0)
         ki = kv_start + jax.lax.broadcasted_iota(jnp.int32, (tq, ts), 1)
         valid = ki <= qi
@@ -258,7 +263,7 @@ def _prefill_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
 
 def flash_prefill(q, k, v, *, offset=0, window=0, tq=256, ts=512,
-                  interpret=None):
+                  softcap=0.0, interpret=None):
     """q: (B, T, H, hd); k/v: (B, S, KV, hd) (time-major KV, as projected).
     Causal: query t at absolute position offset+t. ``offset`` may be a
     python int OR a traced int32 scalar (it rides in via scalar prefetch)
@@ -283,7 +288,8 @@ def flash_prefill(q, k, v, *, offset=0, window=0, tq=256, ts=512,
 
     grid = (b, h, t // tq, n_tiles)
     kernel = functools.partial(_prefill_kernel, scale=scale, window=window,
-                               tq=tq, ts=ts, n_tiles=n_tiles)
+                               tq=tq, ts=ts, n_tiles=n_tiles,
+                               softcap=softcap)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

@@ -26,21 +26,23 @@ def flash_decode_attention(q, k_cache, v_cache, pos, *, window=0, ts=512,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("window", "tq", "ts", "interpret"))
+                   static_argnames=("window", "tq", "ts", "softcap",
+                                    "interpret"))
 def flash_prefill_attention(q, k, v, offset=0, *, window=0, tq=256, ts=512,
-                            interpret=None):
+                            softcap=0.0, interpret=None):
     """``offset`` is a regular (traceable) argument: the prefix-cache
-    suffix prefill varies it per request without retracing."""
+    suffix prefill varies it per request without retracing. ``softcap``
+    is static — a python float baked into the kernel (0 = off)."""
     return fk.flash_prefill(q, k, v, offset=offset, window=window, tq=tq,
-                            ts=ts, interpret=interpret)
+                            ts=ts, softcap=softcap, interpret=interpret)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("reps_per_group", "share_values",
-                                    "window", "ts", "interpret"))
+                                    "window", "ts", "softcap", "interpret"))
 def chai_decode_attention(q_rep, k_cache, v_cache, h2c, pos, *,
                           k_scale=None, v_scale=None, reps_per_group=1,
-                          share_values=False, window=0, ts=512,
+                          share_values=False, window=0, ts=512, softcap=0.0,
                           interpret=None):
     """The paper's decode op — ONE fused Pallas launch. q_rep: (B, R, hd)
     rep-head queries; k_cache: (B, KVk, S, hd) (clustered for MHA:
@@ -52,7 +54,8 @@ def chai_decode_attention(q_rep, k_cache, v_cache, h2c, pos, *,
                                 k_scale=k_scale, v_scale=v_scale,
                                 reps_per_group=reps_per_group,
                                 share_values=share_values, window=window,
-                                ts=ts, interpret=interpret)
+                                ts=ts, softcap=softcap,
+                                interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
@@ -67,11 +70,11 @@ def paged_decode_attention(q, kv_pool, bt_k, bt_v, pos, *, window=0,
 
 @functools.partial(jax.jit,
                    static_argnames=("reps_per_group", "share_values",
-                                    "window", "interpret"))
+                                    "window", "softcap", "interpret"))
 def paged_chai_decode_attention(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
                                 pos, *, k_scale_pool=None,
                                 v_scale_pool=None, reps_per_group=1,
-                                share_values=False, window=0,
+                                share_values=False, window=0, softcap=0.0,
                                 interpret=None):
     """The paper's decode op over the serving engine's paged layout — ONE
     fused Pallas launch streaming pages through VMEM (no densifying
@@ -85,7 +88,7 @@ def paged_chai_decode_attention(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
         q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos,
         k_scale_pool=k_scale_pool, v_scale_pool=v_scale_pool,
         reps_per_group=reps_per_group, share_values=share_values,
-        window=window, interpret=interpret)
+        window=window, softcap=softcap, interpret=interpret)
 
 
 def decode_flop_estimate(b, h, r, s, hd, *, share_values=False, window=0):

@@ -7,6 +7,15 @@ import jax.numpy as jnp
 NEG_INF = -2.0e38
 
 
+def _softcap(sc, cap):
+    """Gemma2-style tanh logit softcap (identity when cap <= 0), applied
+    after QK-scale and before the validity mask — the exact insertion
+    point of the fused kernels' static ``softcap`` flag."""
+    if cap:
+        return cap * jnp.tanh(sc / cap)
+    return sc
+
+
 def flash_decode_ref(q, k_cache, v_cache, pos, *, window=0):
     """q: (B, H, hd); k/v_cache: (B, KV, S, hd); pos: (B,) int32 (number of
     valid tokens - 1 == current position). Returns (B, H, hd) fp32."""
@@ -27,7 +36,7 @@ def flash_decode_ref(q, k_cache, v_cache, pos, *, window=0):
     return out.reshape(b, h, hd)
 
 
-def flash_prefill_ref(q, k, v, *, offset=0, window=0):
+def flash_prefill_ref(q, k, v, *, offset=0, window=0, softcap=0.0):
     """q: (B, T, H, hd); k/v: (B, S, KV, hd); causal with query positions
     offset..offset+T-1 against key positions 0..S-1."""
     b, t, h, hd = q.shape
@@ -36,6 +45,7 @@ def flash_prefill_ref(q, k, v, *, offset=0, window=0):
     qs = q.reshape(b, t, n_kv, qpk, hd).astype(jnp.float32)
     sc = jnp.einsum("btkgd,bskd->btkgs", qs,
                     k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    sc = _softcap(sc, softcap)
     qp = offset + jnp.arange(t)[:, None]
     kp = jnp.arange(s)[None, :]
     valid = kp <= qp
@@ -47,7 +57,8 @@ def flash_prefill_ref(q, k, v, *, offset=0, window=0):
     return out.reshape(b, t, h, hd)
 
 
-def chai_scores_ref(q_rep, k_cache, pos, *, reps_per_group=0, window=0):
+def chai_scores_ref(q_rep, k_cache, pos, *, reps_per_group=0, window=0,
+                    softcap=0.0):
     """Clustered scores. q_rep: (B, R, hd) representative-head queries;
     k_cache: (B, KV, S, hd). reps_per_group r maps rep j -> KV group j//r
     (MHA clustered cache: KV == R, r == 1). Returns normalized A (B, R, S)."""
@@ -57,6 +68,7 @@ def chai_scores_ref(q_rep, k_cache, pos, *, reps_per_group=0, window=0):
     kg = k_cache[:, jnp.arange(r_total) // r]            # (B, R, S, hd)
     sc = jnp.einsum("bre,brse->brs", q_rep.astype(jnp.float32),
                     kg.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    sc = _softcap(sc, softcap)
     kv_pos = jnp.arange(s, dtype=jnp.int32)
     valid = kv_pos[None, :] <= pos[:, None]
     if window:
@@ -129,7 +141,7 @@ def paged_chai_decode_ref(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
 # ------------------------------------------------------ fused decode -------
 def chai_fused_decode_ref(q_rep, k_cache, v_cache, h2c, pos, *,
                           k_scale=None, v_scale=None, reps_per_group=0,
-                          share_values=False, window=0):
+                          share_values=False, window=0, softcap=0.0):
     """Oracle for ``chai_fused_decode`` across the full dispatch matrix:
     {MHA, GQA} x {fp32, int8 scale rows} x {share_values} x {window}.
 
@@ -142,7 +154,7 @@ def chai_fused_decode_ref(q_rep, k_cache, v_cache, h2c, pos, *,
     if k_scale is not None:
         kf = kf * k_scale.astype(jnp.float32)[..., None]
     a = chai_scores_ref(q_rep, kf, pos, reps_per_group=reps_per_group,
-                        window=window)                       # (B, R, S)
+                        window=window, softcap=softcap)      # (B, R, S)
     vf = v_cache.astype(jnp.float32)
     if v_scale is not None:
         vf = vf * v_scale.astype(jnp.float32)[..., None]
@@ -160,7 +172,7 @@ def chai_fused_decode_ref(q_rep, k_cache, v_cache, h2c, pos, *,
 def paged_chai_fused_decode_ref(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
                                 pos, *, k_scale_pool=None,
                                 v_scale_pool=None, reps_per_group=0,
-                                share_values=False, window=0):
+                                share_values=False, window=0, softcap=0.0):
     """Oracle for ``paged_chai_fused_decode``: densify then dense-ref."""
     return chai_fused_decode_ref(
         q_rep, gather_pages_ref(k_pool, bt_k),
@@ -170,7 +182,7 @@ def paged_chai_fused_decode_ref(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
         v_scale=(None if v_scale_pool is None
                  else gather_pages_ref(v_scale_pool, bt_v)),
         reps_per_group=reps_per_group, share_values=share_values,
-        window=window)
+        window=window, softcap=softcap)
 
 
 # ------------------------------------- three-kernel pipeline (oracle) ------

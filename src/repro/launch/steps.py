@@ -107,48 +107,64 @@ def make_serve_step(cfg: ModelConfig, *, chai=False, moe_impl="capacity",
     return serve_step
 
 
-def make_sampler():
+def make_sampler(top_k_cap: int = 256):
     """Batched per-slot token sampler — the single device-side sampling
     path shared by the continuous and cohort schedulers.
 
     ``sample(logits, temperature, top_k, top_p, seed, count)``:
 
     * ``logits`` (B, V); per-slot vectors ``temperature`` (B,) f32,
-      ``top_k`` (B,) i32 (0 = full vocab), ``top_p`` (B,) f32,
+      ``top_k`` (B,) i32 (0 = widest support), ``top_p`` (B,) f32,
       ``seed`` (B,) u32, ``count`` (B,) i32 — tokens the slot's request
       has sampled so far.
     * Slots with ``temperature == 0`` take ``argmax(logits)`` — computed
       on the raw logits exactly as the engine's historical greedy path,
       so greedy decode stays BITWISE identical (CHAI snapshot replay and
-      every cross-layout parity test rest on this).
+      every cross-layout parity test rest on this). The whole sampling
+      lane sits behind one batch-level ``lax.cond``: an all-greedy batch
+      never pays for it, and greedy rows inside a mixed batch feed the
+      lane a zeroed row instead of their (discarded) logits.
     * Sampling slots draw from ``fold_in(PRNGKey(seed), count)``: token
       n of a request depends only on (seed, n, logits) — never the slot
       id or engine step — so seeded runs reproduce across schedulers.
-    * top-k / top-p masks are applied in descending-logit order (top-p
-      after top-k, rank 0 always kept) and the categorical draw happens
-      in sorted space, mapped back through the argsort permutation.
+    * The candidate set is ``lax.top_k(scaled, min(top_k_cap, V))`` — an
+      O(V·cap) selection instead of the old full-vocab argsort. top-k /
+      top-p masks apply in descending order within the candidates (top-p
+      after top-k, rank 0 always kept); probabilities are normalized
+      against the FULL vocab (logsumexp over the row), so the nucleus
+      mass matches the unsorted distribution exactly. ``top_k == 0`` and
+      any nucleus extending past ``top_k_cap`` truncate to the cap.
     """
     def sample(logits, temperature, top_k, top_p, seed, count):
         lg = logits.astype(jnp.float32)
         greedy_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         v = lg.shape[-1]
+        cap = min(top_k_cap, v)
 
         def one(row, t, k, p, s, c):
             key = jax.random.fold_in(jax.random.PRNGKey(s), c)
             scaled = row / jnp.maximum(t, 1e-6)
-            order = jnp.argsort(-scaled)               # descending, stable
-            sl = jnp.take(scaled, order)
-            probs = jax.nn.softmax(sl)
+            sl, idx = jax.lax.top_k(scaled, cap)       # descending, stable
+            probs = jnp.exp(sl - jax.nn.logsumexp(scaled))
             cum = jnp.cumsum(probs)
-            ranks = jnp.arange(v)
-            keep = ranks < jnp.where(k > 0, k, v)      # top-k
+            ranks = jnp.arange(cap)
+            keep = ranks < jnp.where(k > 0, k, cap)    # top-k
             keep &= (cum - probs) < p                  # top-p (nucleus)
             keep = keep.at[0].set(True)                # never mask rank 0
             masked = jnp.where(keep, sl, -jnp.inf)
             pick = jax.random.categorical(key, masked)
-            return jnp.take(order, pick).astype(jnp.int32)
+            return jnp.take(idx, pick).astype(jnp.int32)
 
-        sampled = jax.vmap(one)(lg, temperature, top_k, top_p, seed, count)
+        def sampling_lane(_):
+            # Greedy rows contribute a dead zero row — their draw is
+            # discarded by the final select, so don't feed it real work.
+            live = temperature > 0.0
+            rows = jnp.where(live[:, None], lg, 0.0)
+            return jax.vmap(one)(rows, temperature, top_k, top_p, seed,
+                                 count)
+
+        sampled = jax.lax.cond(jnp.any(temperature > 0.0), sampling_lane,
+                               lambda _: greedy_tok, None)
         return jnp.where(temperature > 0.0, sampled, greedy_tok)
 
     return sample
@@ -306,6 +322,62 @@ def make_paged_suffix_prefill(cfg: ModelConfig, max_seq: int, *,
         return logits[:, 0], state
 
     return suffix_prefill
+
+
+def make_paged_chunk_prefill(cfg: ModelConfig, max_seq: int, *,
+                             moe_impl="capacity", unroll=False):
+    """Chunked (Sarathi-style) prefill: forward ONE page-aligned chunk of
+    a long prompt, treating everything the slot has already prefilled —
+    radix-aliased prefix pages AND earlier chunks — as the cached prefix
+    of a suffix prefill. ``prefix_len`` is the chunk's start position;
+    ``kg_scatter``/``vg_scatter`` null every page outside the chunk's
+    range, so the mini state touches only the pages this chunk fills.
+
+    ``phase`` distinguishes the final chunk (``PHASE_WARMUP``: the slot
+    joins the decode batch next step) from intermediate ones
+    (``PHASE_FREE``: the interleaved batched decode treats the slot as
+    empty — its stray write at ``pos`` lands in a page the NEXT chunk's
+    whole-page scatter overwrites, and ``insert_slot_paged`` re-anchors
+    ``pos`` and zeroes the clustering features every chunk). Donate the
+    state when jitting; shape-specialized per chunk bucket."""
+    def chunk_prefill(params, tokens, true_len, prefix_len, state, slot,
+                      kg_scatter, vg_scatter, bt_kg_row, bt_vg_row, phase):
+        prefix_kv = {"kg": _paged_dense_view(state, bt_kg_row, cfg),
+                     "vg": _paged_dense_view(state, bt_vg_row, cfg)}
+        mini = tfm.init_decode_state(cfg, 1, max_seq)
+        logits, mini, _ = tfm.forward_fullseq(
+            params, cfg, tokens, state=mini, logits_slice="last",
+            moe_impl=moe_impl, unroll=unroll, valid_len=true_len,
+            prefix_len=prefix_len, prefix_kv=prefix_kv)
+        state = chai_cache.insert_slot_paged(
+            state, mini, slot, kg_scatter, vg_scatter,
+            bt_kg_row=bt_kg_row, bt_vg_row=bt_vg_row)
+        state["phase"] = state["phase"].at[slot].set(phase)
+        return logits[:, 0], state
+
+    return chunk_prefill
+
+
+def make_slot_swap(cfg: ModelConfig):
+    """Preemption KV swap (out, in): a preempted slot's per-slot state
+    and page CONTENTS move to the host so its physical pages can be
+    reclaimed, and move back verbatim into fresh pages at resume.
+    Resume-by-recompute cannot be output-identical here: CHAI decode is
+    an approximation of full attention, so a re-prefill would produce
+    different K/V rows for the generated tokens than the original decode
+    wrote (and re-running identify could change membership outright).
+    Swapping the actual rows makes resume bitwise."""
+    def swap_out(state, slot, kg_pages, vg_pages, kc_pages, vc_pages):
+        return chai_cache.save_slot_paged(state, slot, kg_pages, vg_pages,
+                                          kc_pages, vc_pages)
+
+    def swap_in(state, slot, cols, pools, kg_pages, vg_pages, kc_pages,
+                vc_pages, bt_kg_row, bt_vg_row, bt_kc_row, bt_vc_row):
+        return chai_cache.load_slot_paged(
+            state, slot, cols, pools, kg_pages, vg_pages, kc_pages,
+            vc_pages, bt_kg_row, bt_vg_row, bt_kc_row, bt_vc_row)
+
+    return swap_out, swap_in
 
 
 def make_snapshot_restore(cfg: ModelConfig):

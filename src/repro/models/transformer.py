@@ -348,9 +348,9 @@ def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
     logical views of the pages already holding positions
     [0, prefix_len); the new tokens' queries (at absolute positions
     ``prefix_len + t``) attend over cached prefix + fresh suffix through
-    ``flash_prefill`` with the traced query offset (jnp fallback under a
-    logit softcap). Only global layers support a prefix — the engine
-    gates the prefix cache to local-free archs."""
+    ``flash_prefill`` with the traced query offset (logit softcap applied
+    in-kernel). Only global layers support a prefix — the engine gates
+    the prefix cache to local-free archs."""
 
     def attn_branch(op, *, local):
         x, state, idxs = op
@@ -374,17 +374,12 @@ def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
                 vp, v.astype(vp.dtype), (0, off, 0, 0))
             s_all = k_all.shape[1]
             t_q = q.shape[1]
-            if cfg.attn_logit_softcap:
-                y = attn_mod.attention_fullseq(
-                    q, k_all, v_all, positions,
-                    jnp.arange(s_all, dtype=jnp.int32),
-                    attn_softcap=cfg.attn_logit_softcap,
-                    chunk=_tile_size(s_all, 1024))
-            else:
-                from repro.kernels import flash_attention as fk
-                y = fk.flash_prefill(q, k_all, v_all, offset=off,
-                                     tq=_tile_size(t_q, 256),
-                                     ts=_tile_size(s_all, 512))
+            from repro.kernels import flash_attention as fk
+            y = fk.flash_prefill(q, k_all, v_all, offset=off,
+                                 tq=_tile_size(t_q, 256),
+                                 ts=_tile_size(s_all, 512),
+                                 softcap=float(cfg.attn_logit_softcap
+                                               or 0.0))
         else:
             y = attn_mod.attention_fullseq(
                 q, k, v, positions, positions, window=window,

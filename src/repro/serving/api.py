@@ -102,10 +102,12 @@ class LLM:
     # -- public API --------------------------------------------------------
     def generate(self, prompts,
                  params: Union[SamplingParams, Sequence[SamplingParams],
-                               None] = None) -> List[RequestOutput]:
+                               None] = None, *,
+                 priority: int = 0) -> List[RequestOutput]:
         """Submit one prompt (flat token sequence) or a batch of prompts
         and block until all finish. ``params``: one ``SamplingParams``
-        shared by every prompt, or one per prompt."""
+        shared by every prompt, or one per prompt. ``priority``: the
+        engine's preemption class (see ``EngineCore.add_request``)."""
         single = _is_single_prompt(prompts)
         batch = [prompts] if single else list(prompts)
         if params is None or isinstance(params, SamplingParams):
@@ -115,7 +117,8 @@ class LLM:
             if len(plist) != len(batch):
                 raise ValueError(f"{len(plist)} SamplingParams for "
                                  f"{len(batch)} prompts")
-        reqs = [self.core.add_request(p, sp) for p, sp in zip(batch, plist)]
+        reqs = [self.core.add_request(p, sp, priority=priority)
+                for p, sp in zip(batch, plist)]
         while any(not r.finished for r in reqs):
             self._drive()
         outs = [self._output_of(r) for r in reqs]
@@ -123,8 +126,8 @@ class LLM:
         return outs
 
     def stream(self, prompt, params: Optional[SamplingParams] = None, *,
-               max_new_tokens: Optional[int] = None
-               ) -> Iterator[StepOutput]:
+               max_new_tokens: Optional[int] = None,
+               priority: int = 0) -> Iterator[StepOutput]:
         """Submit one prompt and yield its tokens incrementally: one
         ``StepOutput`` per engine step that emitted tokens for THIS
         request (the admission chunk carries the first token; the final
@@ -147,7 +150,8 @@ class LLM:
             # an unstarted generator never runs the body, so an eager
             # add_request would orphan a queued request).
             req = self.core.add_request(prompt, params,
-                                        max_new_tokens=max_new_tokens)
+                                        max_new_tokens=max_new_tokens,
+                                        priority=priority)
             emitted = 0
             delivered_fin = False
             try:

@@ -32,10 +32,18 @@ class CohortSchedulerMixin:
                 time.sleep(max(1e-4,
                                self.queue[0].t_arrival - time.time()))
                 continue
-            cohort = []
-            while (self.queue and len(cohort) < self.ecfg.batch_slots
-                   and self.queue[0].t_arrival <= time.time()):
-                cohort.append(self.queue.popleft())
+            # Priority classes pick cohort membership (lockstep cohorts
+            # cannot preempt mid-flight like the continuous core, so the
+            # class is honored at formation): over the whole arrived run,
+            # highest ``priority`` first, FIFO within a class (stable
+            # sort); the overflow goes back to the queue in that order.
+            arrived = []
+            while self.queue and self.queue[0].t_arrival <= time.time():
+                arrived.append(self.queue.popleft())
+            arrived.sort(key=lambda r: -r.priority)
+            cohort = arrived[:self.ecfg.batch_slots]
+            for r in reversed(arrived[self.ecfg.batch_slots:]):
+                self.queue.appendleft(r)
             try:
                 self._run_cohort(cohort)
             except TimeoutError:

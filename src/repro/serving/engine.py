@@ -11,8 +11,24 @@ Request lifecycle (paper Fig 10), tracked PER BATCH SLOT:
                 gather)-->
     STEADY   --(Clustered Head Attention decode until a finish condition)
 
-plus the out-of-band ABORT edge: ``abort(uid)`` cancels a request at any
-phase (or still queued), returning every page it held to the pools.
+plus three out-of-band edges:
+
+* ABORT — ``abort(uid)`` cancels a request at any phase (or still
+  queued), returning every page it held to the pools.
+* chunked PREFILL self-loop — with ``EngineConfig.prefill_chunk_tokens``
+  set, a long prompt forwards one page-aligned chunk per ``step()``
+  instead of monolithically, so a prompt storm cannot stall the decoding
+  slots for its whole length (greedy tokens are unchanged; paged layout,
+  global-attention archs only).
+* PREEMPT / RESUME — with ``EngineConfig.preemption`` (default on), a
+  strictly-higher-``priority`` arrival that cannot be admitted for page
+  budget evicts the lowest-priority running slot: the victim's pages and
+  per-slot state are swapped to the host, its pages freed, and the
+  request requeued at the front; re-admission swaps everything back into
+  fresh pages and continues the SAME decode chain bitwise. (The swap is
+  correctness, not just speed: CHAI decode approximates full attention,
+  so recomputing the victim's generated tokens by prefill would diverge
+  from the decode-written KV.) A mid-PREFILL victim restarts instead.
 
 The engine is layered:
 
@@ -95,6 +111,7 @@ class Request:                         # abort() membership-test Requests
     max_new_tokens: int = 32
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
+    priority: int = 0                  # preemption class: higher outranks
     # -- filled by the engine --
     generated: Optional[List[int]] = None
     finish_reason: str = ""            # "" while in flight; "length" |
@@ -110,6 +127,13 @@ class Request:                         # abort() membership-test Requests
     cache_hit: str = ""                # "" | "prefix" | "snapshot" | "replay"
     cached_tokens: int = 0             # prompt tokens served from cache
     prefill_tokens: int = -1           # tokens actually forwarded (prefill)
+    # -- preemption --
+    preemptions: int = 0               # times this request lost its slot
+    # Host-swapped slot state (phase/count, per-slot columns, page
+    # contents, CHAI membership) captured at eviction; consumed by the
+    # swap-in admission. None for fresh and mid-PREFILL-evicted requests.
+    resume_state: Optional[dict] = dataclasses.field(default=None,
+                                                     repr=False)
 
     @property
     def finished(self) -> bool:
@@ -172,6 +196,23 @@ class EngineConfig:
     # message. Cached pages are refcounted, copy-on-write, LRU-evicted
     # under pressure.
     prefix_cache: bool = False
+    # -- SLO-aware scheduling (continuous + paged) ----------------------
+    # Chunked prefill (Sarathi-style): a prompt longer than this
+    # forwards at most ``prefill_chunk_tokens`` per ``step()`` (rounded
+    # up to a page multiple), interleaved with running decodes — a long
+    # prompt no longer stalls every concurrent stream for its whole
+    # monolithic prefill, bounding inter-token latency. 0 = monolithic.
+    # Global-attention-only archs (same constraint as prefix_cache:
+    # local rings / recurrent state cannot be rebuilt suffix-only).
+    prefill_chunk_tokens: int = 0
+    # Priority preemption: when the arrived queue head outranks a
+    # running request and the pools cannot cover it, the lowest-priority
+    # running slot is preempted — its pages return refcount-exactly via
+    # the abort path's free, and the request re-queues right behind the
+    # preemptor carrying its progress cursor (generated tokens, CHAI
+    # membership / warmup scores), so resumed decoding continues where
+    # it stopped instead of failing. Equal priorities never preempt.
+    preemption: bool = True
 
 
 class EngineCore(CohortSchedulerMixin):
@@ -240,6 +281,18 @@ class EngineCore(CohortSchedulerMixin):
             from repro.serving.prefix_cache import PrefixCache
             self.prefix_cache = PrefixCache(self.dense_pool,
                                             self.chai_pool, ecfg.page_size)
+        # -- chunked prefill (page-aligned chunks; paged layout only) -----
+        self._chunk = 0
+        if ecfg.prefill_chunk_tokens and self.paged:
+            if (cfg.n_local_layers or cfg.n_rec_layers
+                    or cfg.n_rwkv_layers):
+                raise ValueError(
+                    "prefill_chunk_tokens supports global-attention-only "
+                    f"archs (got {cfg.name!r} with local/recurrent "
+                    "layers): chunk forwards cannot rebuild local rings "
+                    "or recurrent state from earlier chunks")
+            ps = ecfg.page_size
+            self._chunk = -(-ecfg.prefill_chunk_tokens // ps) * ps
         # Device state persists across step()/run() calls: paged, so
         # cached pages keep their contents between request waves; dense,
         # so the step-driven core never rebuilds mid-stream (retired
@@ -255,6 +308,9 @@ class EngineCore(CohortSchedulerMixin):
         self._slot_count = [0] * b          # tokens generated this admission
         self._slot_pages: List[dict] = [{} for _ in range(b)]  # page ids
         self._slot_locked: List[list] = [[] for _ in range(b)]  # cache pins
+        # chunked prefill cursors: {"req", "tokens", "cursor"} per slot
+        self._slot_prefill_state: List[Optional[dict]] = [None] * b
+        self.preemptions = 0           # slots reclaimed for priority
         self._next_tok = np.zeros((b,), np.int32)   # host mirror
         self._next_tok_dev = jnp.zeros((b,), jnp.int32)
         self._tok_dirty = False
@@ -292,8 +348,10 @@ class EngineCore(CohortSchedulerMixin):
         self._reset_slot = jax.jit(reset_maker(cfg), donate_argnums=(0,))
         self._slot_prefills: dict = {}       # pow2 length bucket -> jit
         self._suffix_prefills: dict = {}     # suffix bucket -> jit
+        self._chunk_prefills: dict = {}      # chunk bucket -> jit
         self._cohort_buckets: set = set()    # pow2 buckets seen (observab.)
         self._cluster_slot = None            # built lazily (identify hook)
+        self._swap_fns = None                # preemption KV swap (out, in)
         if self.paged:
             self._restore_snapshot = jax.jit(
                 steps_mod.make_snapshot_restore(cfg), donate_argnums=(0,))
@@ -323,15 +381,19 @@ class EngineCore(CohortSchedulerMixin):
 
     def add_request(self, prompt, sampling: Optional[SamplingParams] = None,
                     *, max_new_tokens: Optional[int] = None, uid=None,
-                    arrival_delay: float = 0.0) -> Request:
+                    arrival_delay: float = 0.0,
+                    priority: int = 0) -> Request:
         """Enqueue a request with per-request ``SamplingParams``.
 
         ``max_new_tokens`` (when given) overrides
         ``sampling.max_new_tokens``. ``arrival_delay`` (seconds from now)
         models open-loop arrivals: the scheduler will not admit the
-        request before its arrival time. Default uids come from a
-        monotonic engine counter (explicit uids bump it past themselves,
-        so later defaults can never collide with retired requests)."""
+        request before its arrival time. ``priority``: preemption class —
+        under page pressure a strictly-higher-priority arrival may
+        reclaim a running lower-priority slot (``EngineConfig.preemption``).
+        Default uids come from a monotonic engine counter (explicit uids
+        bump it past themselves, so later defaults can never collide with
+        retired requests)."""
         sp = sampling if sampling is not None else self.default_sampling()
         max_new = (max_new_tokens if max_new_tokens is not None
                    else sp.max_new_tokens)
@@ -348,7 +410,8 @@ class EngineCore(CohortSchedulerMixin):
             uid = self._uid_counter
         self._uid_counter = max(self._uid_counter, int(uid) + 1)
         req = Request(uid=uid, prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new, sampling=sp)
+                      max_new_tokens=max_new, sampling=sp,
+                      priority=int(priority))
         req.t_enqueue = time.time()
         req.t_arrival = req.t_enqueue + arrival_delay
         req.generated = []
@@ -410,16 +473,17 @@ class EngineCore(CohortSchedulerMixin):
         return self.queue[0].t_arrival if self.queue else None
 
     def step(self) -> List[StepOutput]:
-        """Run exactly ONE scheduler iteration: admit arrived requests
-        into free slots (prefix-cache planning included), run CLUSTER
-        transitions for slots whose warmup just completed, execute one
-        mixed-phase batched decode + sample, and retire slots that hit a
-        finish condition. Returns one ``StepOutput`` per request that
-        emitted tokens. Non-blocking: with no admissible work it returns
-        ``[]`` (use ``next_arrival()`` to wait); with the engine idle and
-        the queue head unserviceable even after draining the prefix
-        cache, raises ``MemoryError`` exactly like the page-budget gate
-        always has."""
+        """Run exactly ONE scheduler iteration: advance one prefill chunk
+        for every mid-prefill slot, admit arrived requests into free
+        slots (prefix-cache planning and priority preemption included),
+        run CLUSTER transitions for slots whose warmup just completed,
+        execute one mixed-phase batched decode + sample, and retire slots
+        that hit a finish condition. Returns one ``StepOutput`` per
+        request that emitted tokens. Non-blocking: with no admissible
+        work it returns ``[]`` (use ``next_arrival()`` to wait); with the
+        engine idle and the queue head unserviceable even after draining
+        the prefix cache, raises ``MemoryError`` exactly like the
+        page-budget gate always has."""
         if self.ecfg.scheduler != "continuous":
             raise RuntimeError("step() drives the continuous scheduler; "
                                "cohort engines run via run()")
@@ -427,12 +491,16 @@ class EngineCore(CohortSchedulerMixin):
         self._ensure_dev_state()
         b = self.ecfg.batch_slots
         drained = False
+        self._advance_prefills(outs)
         while True:
             blocked = self._admit(outs)
             active = [i for i in range(b)
-                      if self._slot_req[i] is not None]
+                      if self._slot_req[i] is not None
+                      and self._phases[i] != chai_cache.PHASE_PREFILL]
             if active:
                 break
+            if self.has_active:
+                return outs        # only mid-prefill slots: progress made
             if not self.queue or not blocked:
                 return outs        # idle, or waiting on future arrivals
             # The failed plan ran with the engine idle (no retire can
@@ -523,6 +591,16 @@ class EngineCore(CohortSchedulerMixin):
         toks[0, :t] = suffix
         return jnp.asarray(toks), jnp.int32(t)
 
+    def _chunk_prefill_fn(self, bucket: int):
+        """One compiled chunk prefill per chunk-length bucket (start
+        position and final-chunk phase ride in as traced scalars)."""
+        fn = self._chunk_prefills.get(bucket)
+        if fn is None:
+            fn = jax.jit(steps_mod.make_paged_chunk_prefill(
+                self.cfg, self.ecfg.max_seq), donate_argnums=(4,))
+            self._chunk_prefills[bucket] = fn
+        return fn
+
     def _cluster_fn(self):
         # Built on first use so a monkeypatched ``_identify`` hook (tests,
         # CHAI-static ablations) is honored.
@@ -532,6 +610,15 @@ class EngineCore(CohortSchedulerMixin):
             self._cluster_slot = jax.jit(maker(self.cfg, self._identify),
                                          donate_argnums=(0, 1))
         return self._cluster_slot
+
+    def _swap_fns_get(self):
+        """(swap_out, swap_in) jits for preemption KV swap — one trace
+        per arch (page vectors are fixed-length, null-padded)."""
+        if self._swap_fns is None:
+            out, inn = steps_mod.make_slot_swap(self.cfg)
+            self._swap_fns = (jax.jit(out),
+                              jax.jit(inn, donate_argnums=(0,)))
+        return self._swap_fns
 
     # -- sampling (host <-> device) ----------------------------------------
     def _set_slot_sampling(self, slot: int, sp: SamplingParams):
@@ -611,7 +698,11 @@ class EngineCore(CohortSchedulerMixin):
         admit loop's replay check AND the planner — one definition, no
         divergence): paged + cache on + clustered CHAI + a GREEDY request
         (replay correctness rests on greedy determinism; sampling
-        requests take the block-prefix path instead)."""
+        requests take the block-prefix path instead). Preempted requests
+        (generated tokens already emitted) never replay — their tokens
+        must continue, not repeat."""
+        if req.generated:
+            return None
         if (self.paged and self.prefix_cache is not None
                 and self.chai_clustered and req.sampling.greedy):
             return self.prefix_cache.snapshot_for(req.prompt)
@@ -637,8 +728,12 @@ class EngineCore(CohortSchedulerMixin):
         aliased, suffix prefilled), "snapshot" (full prompt cached with a
         CHAI snapshot: enter STEADY directly). The replay fast path
         (snapshot covers max_new_tokens entirely — host-side, no slot)
-        is handled by the admit loop before planning."""
+        is handled by the admit loop before planning. Preempted requests
+        (``resume_state`` set) take the swap-in plan instead: fresh pages
+        matching what the slot held, restored bitwise — no prefill."""
         cache = self.prefix_cache
+        if req.resume_state is not None:
+            return self._plan_swap_in(req)
         snap = self._eligible_snapshot(req)
         if snap is not None:
             plan = self._plan_snapshot(req, snap)
@@ -658,6 +753,24 @@ class EngineCore(CohortSchedulerMixin):
         if pages is None:
             return None
         return {"kind": "cold", "pages": pages, "locked": []}
+
+    def _plan_swap_in(self, req):
+        """Allocate fresh pages matching exactly what the preempted slot
+        held per pool kind (a clustered STEADY victim, e.g., holds no
+        dense K pages); the swap-in restores the saved contents into
+        them. Never more pages than the original admission, so a request
+        that was admitted once can always be planned again."""
+        want = req.resume_state["npages"]
+        dense_need = want.get("kg", 0) + want.get("vg", 0)
+        chai_need = want.get("kc", 0) + want.get("vc", 0)
+        if not self._pool_space(dense_need, chai_need):
+            return None
+        pages = {}
+        for kind, pool in (("kg", self.dense_pool), ("vg", self.dense_pool),
+                           ("kc", self.chai_pool), ("vc", self.chai_pool)):
+            if want.get(kind):
+                pages[kind] = pool.alloc(want[kind])
+        return {"kind": "swap", "pages": pages, "locked": []}
 
     def _plan_prefix(self, req, matched):
         """Alias ``matched`` block pages; allocate fresh pages for the
@@ -844,12 +957,12 @@ class EngineCore(CohortSchedulerMixin):
     def _admit(self, outs: List[StepOutput]) -> bool:
         """Fill free slots from the arrived FIFO prefix while the page
         budget covers prompt + generation headroom (prefix-cache hits
-        alias shared pages and need fewer). Returns True when the queue
-        head had arrived but could not be planned (page-blocked)."""
+        alias shared pages and need fewer). When the head outranks a
+        running request and the pools cannot cover it, preempt the
+        lowest-priority slot and retry the plan. Returns True when the
+        queue head had arrived but could not be planned (page-blocked)."""
         now = time.time()
         blocked = False
-        free_slots = [i for i in range(self.ecfg.batch_slots)
-                      if self._slot_req[i] is None]
         while self.queue and self.queue[0].t_arrival <= now:
             head = self.queue[0]
             snap = self._eligible_snapshot(head)
@@ -862,28 +975,41 @@ class EngineCore(CohortSchedulerMixin):
                 outs.append(StepOutput(req.uid, list(req.generated), True,
                                        req.finish_reason))
                 continue
-            if not free_slots:
+            free_slots = [i for i in range(self.ecfg.batch_slots)
+                          if self._slot_req[i] is None]
+            if not free_slots and not self._try_preempt(head):
                 break
+            if not free_slots:      # preemption just freed a slot
+                continue
             plan = (self._plan_admission(head) if self.paged
                     else {"kind": "cold", "pages": {}, "locked": []})
             if plan is None:        # FIFO holds until pages free up
+                if self._try_preempt(head):
+                    continue        # pages reclaimed — retry the plan
                 blocked = True
                 break
-            i = free_slots.pop(0)
+            i = free_slots[0]
             req = self.queue.popleft()
+            resumed = bool(req.generated)
             self._admit_to_slot(i, req, plan)
-            req.t_first_token = time.time()
+            if req.generated and not req.t_first_token:
+                req.t_first_token = time.time()
             req.slot, req.admit_step = i, self.steps_executed
             self._slot_req[i] = req
             self._set_slot_sampling(i, req.sampling)
+            if resumed:
+                continue    # tokens so far were already emitted/checked
             trunc, reason = sampling_mod.scan_finish(
                 req.generated, req.sampling, req.max_new_tokens,
                 self.detokenizer)
             if reason:
                 req.generated = trunc
                 self._retire_slot(i, reason)
-            outs.append(StepOutput(req.uid, list(req.generated),
-                                   bool(reason), reason))
+            if req.generated or reason:
+                # Chunked admissions have no first token yet — their
+                # StepOutput comes from the final chunk.
+                outs.append(StepOutput(req.uid, list(req.generated),
+                                       bool(reason), reason))
         return blocked
 
     def _admit_to_slot(self, i: int, req: Request, plan: dict):
@@ -919,10 +1045,35 @@ class EngineCore(CohortSchedulerMixin):
             self._next_tok[i] = snap.tokens[-1]
             self._tok_dirty = True
             return
+        if plan["kind"] == "swap":
+            self._swap_in_slot(i, req)
+            return
         self._phases[i] = chai_cache.PHASE_PREFILL
+        prompt = req.prompt
         if plan["kind"] == "prefix":
             pre = plan["prefix_len"]
-            toks, true_len = self._padded_suffix(req.prompt[pre:], pre)
+            req.cache_hit = "prefix"
+            req.cached_tokens = pre
+            req.prefill_tokens = len(prompt) - pre
+            self.prefix_cache.stats["partial_hits"] += 1
+            self.prefix_cache.stats["tokens_reused"] += pre
+            self.prefix_cache.stats["tokens_prefilled"] += \
+                req.prefill_tokens
+        else:
+            pre = 0
+            req.prefill_tokens = len(prompt)
+            if self.prefix_cache is not None:
+                self.prefix_cache.stats["misses"] += 1
+                self.prefix_cache.stats["tokens_prefilled"] += len(prompt)
+        if self._chunk and len(prompt) - pre > self._chunk:
+            # Chunked prefill: run the first chunk now; step() advances
+            # one chunk per iteration until _finish_prefill fires.
+            self._slot_prefill_state[i] = {"req": req, "tokens": prompt,
+                                           "cursor": pre}
+            self._advance_chunk(i)
+            return
+        if plan["kind"] == "prefix":
+            toks, true_len = self._padded_suffix(prompt[pre:], pre)
             fn = self._suffix_prefill_fn(toks.shape[1])
             logits, st = fn(
                 self.params, toks, true_len, jnp.int32(pre),
@@ -931,15 +1082,8 @@ class EngineCore(CohortSchedulerMixin):
                 self._page_vec(plan["scatter_vg"]),
                 self._page_vec(self._slot_pages[i]["kg"]),
                 self._page_vec(self._slot_pages[i]["vg"]))
-            req.cache_hit = "prefix"
-            req.cached_tokens = pre
-            req.prefill_tokens = len(req.prompt) - pre
-            self.prefix_cache.stats["partial_hits"] += 1
-            self.prefix_cache.stats["tokens_reused"] += pre
-            self.prefix_cache.stats["tokens_prefilled"] += \
-                req.prefill_tokens
         else:
-            toks, true_len = self._padded_prompt(req.prompt)
+            toks, true_len = self._padded_prompt(prompt)
             prefill = self._slot_prefill_fn(toks.shape[1])
             if self.paged:
                 logits, st = prefill(
@@ -950,21 +1094,169 @@ class EngineCore(CohortSchedulerMixin):
             else:
                 logits, st = prefill(self.params, toks, true_len,
                                      self._dev_state, jnp.int32(i))
-            req.prefill_tokens = len(req.prompt)
-            if self.prefix_cache is not None:
-                self.prefix_cache.stats["misses"] += 1
-                self.prefix_cache.stats["tokens_prefilled"] += \
-                    len(req.prompt)
         self._dev_state = st
-        if self.prefix_cache is not None:
-            self.prefix_cache.insert(req.prompt, self._slot_pages[i]["kg"],
+        self._finish_prefill(i, req, logits)
+
+    def _advance_prefills(self, outs: List[StepOutput]):
+        """Forward ONE page-aligned chunk for every mid-prefill slot —
+        chunked prefill's per-step progress, interleaved with the batched
+        decode of the other slots. A slot whose final chunk completes
+        enters WARMUP and emits its first token here."""
+        for i in range(self.ecfg.batch_slots):
+            st = self._slot_prefill_state[i]
+            if st is None:
+                continue
+            req = st["req"]
+            self._advance_chunk(i)
+            if self._slot_prefill_state[i] is not None:
+                continue                    # more chunks to go
+            # final chunk fired: the first token was just sampled
+            reason = self._finish_of(req)
+            if reason:
+                self._retire_slot(i, reason)
+            outs.append(StepOutput(req.uid, [req.generated[-1]],
+                                   bool(reason), reason))
+
+    def _advance_chunk(self, i: int):
+        """Prefill the next chunk of slot ``i``'s pending tokens. Chunk
+        starts are page-aligned (the chunk size is a page multiple and
+        radix-aliased prefixes are whole pages), so each chunk's scatter
+        touches exactly its own page range; intermediate chunks park the
+        device phase at FREE so the interleaved decode skips the slot."""
+        st = self._slot_prefill_state[i]
+        eff, cur = st["tokens"], st["cursor"]
+        end = min(cur + self._chunk, len(eff))
+        final = end == len(eff)
+        toks, true_len = self._padded_suffix(eff[cur:end], cur)
+        ps = self.ecfg.page_size
+        lo, hi = cur // ps, chai_cache.pages_needed(end, ps)
+        pages = self._slot_pages[i]
+
+        def scatter(page_list):
+            return [p if lo <= j < hi else chai_cache.NULL_PAGE
+                    for j, p in enumerate(page_list)]
+
+        fn = self._chunk_prefill_fn(toks.shape[1])
+        phase = (chai_cache.PHASE_WARMUP if final
+                 else chai_cache.PHASE_FREE)
+        logits, self._dev_state = fn(
+            self.params, toks, true_len, jnp.int32(cur),
+            self._dev_state, jnp.int32(i),
+            self._page_vec(scatter(pages["kg"])),
+            self._page_vec(scatter(pages["vg"])),
+            self._page_vec(pages["kg"]),
+            self._page_vec(pages["vg"]),
+            jnp.int32(phase))
+        st["cursor"] = end
+        if final:
+            self._slot_prefill_state[i] = None
+            self._finish_prefill(i, st["req"], logits)
+
+    def _finish_prefill(self, i: int, req: Request, logits):
+        """Prefill completed (monolithic, or a chunked prefill's final
+        chunk): index the prompt into the prefix cache, enter WARMUP, and
+        sample the request's first token."""
+        if self.paged and self.prefix_cache is not None:
+            self.prefix_cache.insert(req.prompt,
+                                     self._slot_pages[i]["kg"],
                                      self._slot_pages[i]["vg"])
         self._phases[i] = chai_cache.PHASE_WARMUP
         self._slot_count[i] = 1
         tok = self._sample_first(logits, req)
         req.generated.append(tok)
+        if not req.t_first_token:
+            req.t_first_token = time.time()
         self._next_tok[i] = tok
         self._tok_dirty = True
+
+    # -- priority preemption -----------------------------------------------
+    def _swap_in_slot(self, i: int, req: Request):
+        """Resume a preempted request: upload its saved per-slot columns
+        and page contents into the freshly allocated pages, rebuild the
+        block tables, and restore its CHAI membership — the slot decodes
+        on bitwise the state it was evicted with."""
+        resume, req.resume_state = req.resume_state, None
+        pages = self._slot_pages[i]
+        vecs = [self._page_vec(pages.get(k, []))
+                for k in ("kg", "vg", "kc", "vc")]
+        _, swap_in = self._swap_fns_get()
+        cols = {k: jnp.asarray(v) for k, v in resume["cols"].items()}
+        pools = {k: jnp.asarray(v) for k, v in resume["pools"].items()}
+        self._dev_state = swap_in(self._dev_state, jnp.int32(i), cols,
+                                  pools, *vecs, *vecs)
+        if self.chai_on:
+            dev_ctx = {k: jnp.asarray(v) for k, v in resume["ctx"].items()}
+            self._dev_ctx = self._set_ctx(self._dev_ctx, dev_ctx,
+                                          jnp.int32(i))
+        self._phases[i] = resume["phase"]
+        self._slot_count[i] = resume["count"]
+        self._next_tok[i] = req.generated[-1]
+        self._tok_dirty = True
+        self._record_kv_bytes(self._phases)
+
+    def _try_preempt(self, head: Request) -> bool:
+        """Reclaim the lowest-priority running slot that ``head``
+        strictly outranks (ties never preempt). Returns True when a slot
+        was preempted — the caller retries its admission plan."""
+        if not (self.ecfg.preemption and self.paged):
+            return False
+        victims = [i for i in range(self.ecfg.batch_slots)
+                   if self._slot_req[i] is not None
+                   and self._slot_req[i].priority < head.priority]
+        if not victims:
+            return False
+        # Lowest priority first; among equals the most recent admission
+        # loses (least progress thrown away).
+        i = min(victims, key=lambda j: (self._slot_req[j].priority,
+                                        -self._slot_req[j].admit_step))
+        self._preempt_slot(i)
+        return True
+
+    def _preempt_slot(self, i: int):
+        """Evict slot ``i`` WITHOUT finishing its request: swap its KV to
+        the host (per-slot state columns + page contents — generated
+        tokens stay on the Request), free every page refcount-exactly via
+        the abort path's mechanics, and re-queue the request right behind
+        the current queue head. A mid-PREFILL victim has no decode state
+        worth saving and simply restarts its prefill. The victim's pages
+        are indexed into the prefix cache first, so — if they survive the
+        preemptor's own allocation — OTHER requests sharing the prompt
+        prefix can still alias them."""
+        r = self._slot_req[i]
+        phase = int(self._phases[i])
+        if phase != chai_cache.PHASE_PREFILL:
+            pages = self._slot_pages[i]
+            vecs = [self._page_vec(pages.get(k, []))
+                    for k in ("kg", "vg", "kc", "vc")]
+            swap_out, _ = self._swap_fns_get()
+            cols, pools = swap_out(self._dev_state, jnp.int32(i), *vecs)
+            resume = {
+                "phase": phase, "count": self._slot_count[i],
+                "cols": jax.device_get(cols),
+                "pools": jax.device_get(pools),
+                "npages": {k: len(pages.get(k, ()))
+                           for k in ("kg", "vg", "kc", "vc")},
+            }
+            if self.chai_on:
+                resume["ctx"] = {k: np.asarray(v[:, i])
+                                 for k, v in self._dev_ctx.items()}
+            r.resume_state = resume
+            if self.prefix_cache is not None:
+                self._index_retired(r, self._slot_pages[i])
+        r.preemptions += 1
+        self.preemptions += 1
+        self._slot_prefill_state[i] = None
+        self._slot_req[i] = None
+        self._phases[i] = chai_cache.PHASE_FREE
+        self._slot_count[i] = 0
+        self._dev_state = self._reset_slot(self._dev_state, jnp.int32(i))
+        self._free_pages(self._slot_pages[i])
+        if self._slot_locked[i]:
+            self.prefix_cache.unlock(self._slot_locked[i])
+            self._slot_locked[i] = []
+        self._samp_host["temperature"][i] = 0.0
+        self._samp_dirty = True
+        self.queue.insert(min(1, len(self.queue)), r)
 
     def _cluster_transitions(self, active):
         """CLUSTER + compact slots whose warmup just completed; paged:

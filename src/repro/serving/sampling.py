@@ -73,19 +73,42 @@ class SamplingParams:
         return self.temperature == 0
 
 
+# Extra trailing tokens decoded beyond the longest stop string: slack for
+# tokenizers where a token renders to fewer bytes than one character (BPE
+# continuation pieces, held-back incomplete UTF-8 sequences).
+_HELD_BACK_TOKENS = 4
+
+
+def _stop_window(params: SamplingParams) -> int:
+    """Tail-window size (in tokens) that bounds every stop-string match
+    completed by the newest token: the longest stop is ``L`` characters,
+    a token renders to >= 1 character in the common case, and
+    ``_HELD_BACK_TOKENS`` covers the byte-thin stragglers."""
+    return max(len(s) for s in params.stop) + _HELD_BACK_TOKENS
+
+
 def finish_reason(token_ids: Sequence[int], params: SamplingParams,
                   max_new_tokens: int,
                   detokenizer: Optional[Callable] = None) -> str:
     """Finish condition after the LAST appended token: "stop" (stop token
     id, or a stop string appearing in the detokenized output), "length"
     (budget exhausted), or "" (keep decoding). Stop wins over length when
-    both trigger on the same token."""
+    both trigger on the same token.
+
+    Stop-string matching is INCREMENTAL: this is called once per appended
+    token (the engine's per-step check and ``scan_finish`` both do), so a
+    match completing at token n must involve text the newest token
+    contributed. Only the trailing ``_stop_window(params)`` tokens are
+    re-detokenized — O(len(stop)) per token instead of re-rendering the
+    whole output (O(n^2) per request). Matches confined to older text
+    were already caught by the call that appended their final token."""
     if token_ids:
         if params.stop_token_ids and \
                 int(token_ids[-1]) in params.stop_token_ids:
             return FINISH_STOP
         if params.stop and detokenizer is not None:
-            text = detokenizer(list(token_ids))
+            tail = list(token_ids)[-_stop_window(params):]
+            text = detokenizer(tail)
             if any(s in text for s in params.stop):
                 return FINISH_STOP
     if len(token_ids) >= max_new_tokens:

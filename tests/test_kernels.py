@@ -462,6 +462,77 @@ def test_paged_fused_null_pages_masked(rng):
                                rtol=1e-6, atol=1e-6)
 
 
+# --------------------------------------------------- tanh logit softcap ----
+@pytest.mark.parametrize("softcap", [5.0, 50.0])
+@pytest.mark.parametrize("mode", ["mha", "mha_share", "gqa"])
+def test_chai_fused_decode_softcap_matches_oracle(rng, mode, softcap):
+    """gemma2-style softcap inside the fused kernel (between QK-scale and
+    the online-softmax update) vs the jnp oracle, across the dispatch
+    matrix — this is what lets softcap archs stay on the fused path."""
+    kw_case = dict(share_values=(mode == "mha_share"))
+    if mode == "gqa":
+        kw_case.update(rpg=3, qpk=4)
+    args, kw = _fused_case(rng, **kw_case)
+    got = ck.chai_fused_decode(*args, ts=32, softcap=softcap,
+                               interpret=True, **kw)
+    want = ref.chai_fused_decode_ref(*args, softcap=softcap, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+    # the flag is live: capping must actually change the output
+    uncapped = ck.chai_fused_decode(*args, ts=32, interpret=True, **kw)
+    assert not np.allclose(np.asarray(got), np.asarray(uncapped))
+
+
+@pytest.mark.parametrize("mode", ["mha", "gqa"])
+def test_paged_chai_fused_decode_softcap_matches_oracle(rng, mode):
+    b, n_pages, page, hd, cap = 2, 4, 16, 16, 30.0
+    kv, rpg = (2, 3) if mode == "gqa" else (3, 1)
+    r_total = kv * rpg
+    if mode == "gqa":
+        qpk = 4
+        h = kv * qpk
+        cluster_of = rng.integers(0, rpg, size=(b, kv, qpk))
+        h2c = (np.arange(kv)[None, :, None] * rpg
+               + cluster_of).reshape(b, h)
+        v_rows = kv
+    else:
+        h = 8
+        h2c = rng.integers(0, r_total, size=(b, h))
+        v_rows = h
+    n_pool = b * n_pages + 1
+    k_pool = _mk(rng, (n_pool, kv, page, hd), jnp.float32)
+    v_pool = _mk(rng, (n_pool, v_rows, page, hd), jnp.float32)
+    bt_k = _mk_tables(rng, b, n_pages, n_pool)
+    bt_v = _mk_tables(rng, b, n_pages, n_pool)
+    q_rep = _mk(rng, (b, r_total, hd), jnp.float32)
+    pos = np.asarray(rng.integers(1, n_pages * page, size=b))
+    pos[0] = n_pages * page - 1
+    args = (q_rep, k_pool, bt_k, v_pool, bt_v,
+            jnp.asarray(h2c, jnp.int32), jnp.asarray(pos, jnp.int32))
+    got = ck.paged_chai_fused_decode(*args, reps_per_group=rpg,
+                                     softcap=cap, interpret=True)
+    want = ref.paged_chai_fused_decode_ref(*args, reps_per_group=rpg,
+                                           softcap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("offset", [0, 8])
+def test_flash_prefill_softcap_matches_oracle(rng, offset):
+    """The prefix cache's flash suffix path under a logit softcap (the
+    gemma2 suffix prefill no longer falls back to jnp)."""
+    b, t, h, kv, hd, cap = 2, 16, 4, 4, 16, 20.0
+    s = t + offset
+    q = _mk(rng, (b, t, h, hd), jnp.float32)
+    k = _mk(rng, (b, s, kv, hd), jnp.float32)
+    v = _mk(rng, (b, s, kv, hd), jnp.float32)
+    got = fk.flash_prefill(q, k, v, offset=offset, tq=8, ts=8, softcap=cap,
+                           interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, offset=offset, softcap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+    uncapped = fk.flash_prefill(q, k, v, offset=offset, tq=8, ts=8,
+                                interpret=True)
+    assert not np.allclose(np.asarray(got), np.asarray(uncapped))
+
+
 def _all_avals(jaxpr):
     """Every aval in a (recursively closed) jaxpr."""
     seen = []
