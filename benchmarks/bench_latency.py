@@ -20,7 +20,13 @@ Five measurements:
   5. **Prefix-reuse lane**: Poisson arrivals over a shared system prompt
      through the radix prefix cache — TTFT cold vs warm (CHAI snapshot
      hits enter STEADY directly), allocator pages saved vs a no-sharing
-     engine, and zero-leak refcount checks after the pools drain.
+     engine, and zero-leak refcount checks after the pools drain. Its
+     ``relay`` sub-lane gates the shared-prefix relay decode: grouped
+     token parity with the per-request path, kernel-launch flatness in
+     the group size, and the O(prefix) per-step HBM/MXU cost structure.
+     ``python -m benchmarks.bench_latency --check`` runs ALL
+     deterministic claim checks (fused + relay) and exits non-zero on
+     regression — CI gates on it.
   6. **Streaming lane**: one request through ``LLM.stream()`` (greedy
      and seeded sampling) — TTFT plus inter-token latency (ITL) p50/p99
      from per-chunk arrival stamps, and the deterministic claim that the
@@ -349,6 +355,137 @@ def _prefix_reuse_lane(cfg, params, pipe, *, n_warm=4, prompt_len=96,
     return out
 
 
+def _relay_lane(cfg, params, pipe, *, prefix_blocks=4, max_new=8, seed=0):
+    """Shared-prefix relay decode: the system prompt's attention is
+    computed ONCE per group of STEADY slots and merged into each slot's
+    suffix-only fused decode via online-softmax state.
+
+    Deterministic gated claims (``--check`` runs these in CI):
+
+    * token parity — grouped greedy tokens match the per-request decode
+      path exactly;
+    * launch flatness — tracing the relay step for a 1-member and a
+      2-member group constructs the SAME number of kernel launches (the
+      prefix pass is grid-batched over groups, never per slot);
+    * O(prefix) cost — per-step prefix HBM bytes take no member count at
+      all and double when the prefix doubles, and the MXU pass estimate
+      stays flat across group sizes 1/2/8 (member rep rows batch along
+      the systolic row axis) while the per-request baseline pays
+      N x the single-slot cost.
+    """
+    import jax
+    from repro.kernels import ops
+    from repro.launch import steps as steps_mod
+
+    ps = 16
+    plen = prefix_blocks * ps
+    prefix = np.asarray(pipe.batch(8100)["tokens"][0, :plen])
+    tails = [np.concatenate([prefix,
+                             np.asarray(pipe.batch(8200 + i)["tokens"]
+                                        [0, :4 + i])])
+             for i in range(2)]
+
+    def serve(relay, prompts, min_group):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            batch_slots=2, max_seq=128, page_size=ps, prefix_cache=True,
+            relay_decode=relay, relay_min_group=min_group))
+        captured = {}
+        if relay:
+            orig = eng._relay_step
+
+            def spy(p, inputs, state, ctx, rel):
+                if "sds" not in captured:   # shapes only, no host copy
+                    captured["sds"] = jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        (inputs, state, ctx, rel))
+                return orig(p, inputs, state, ctx, rel)
+
+            eng._relay_step = spy
+        eng.submit(prefix, max_new_tokens=max_new, uid=0)   # seed cache
+        eng.run()
+        for j, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=max_new, uid=j + 1)
+        done = {r.uid: r for r in eng.run()}
+        toks = [done[j + 1].generated for j in range(len(prompts))]
+        return toks, eng, captured.get("sds")
+
+    base, _, _ = serve(False, tails, 2)
+    toks, eng2, sds2 = serve(True, tails, 2)          # 2-member group
+    _, eng1, sds1 = serve(True, tails[:1], 1)         # 1-member group
+
+    # Launch flatness: trace the relay step over the captured shapes and
+    # count ``pallas_call`` equations in the (recursively walked) jaxpr —
+    # the compiled step launches exactly what the trace contains. Eqn
+    # counting (not ``pallas_call`` interception) because the engine runs
+    # above already populated the nested-jit trace caches.
+    step_fn = steps_mod.make_relay_step(cfg, decode_ts=ps)
+    p_sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+
+    def trace_launches(sds):
+        inputs, state, ctx, rel = sds
+        jaxpr = jax.make_jaxpr(step_fn)(p_sds, inputs, state, ctx, rel)
+        n, todo = 0, [jaxpr.jaxpr]
+        while todo:
+            j = todo.pop()
+            for eqn in j.eqns:
+                n += eqn.primitive.name == "pallas_call"
+                for p in eqn.params.values():
+                    for sub in (p if isinstance(p, (list, tuple))
+                                else [p]):
+                        inner = getattr(sub, "jaxpr", None)
+                        if inner is not None:
+                            todo.append(inner)
+                        elif hasattr(sub, "eqns"):
+                            todo.append(sub)
+        return n
+
+    launches = {"group_of_1": trace_launches(sds1),
+                "group_of_2": trace_launches(sds2)}
+
+    # O(prefix) cost model over the ACTUAL resident-view geometry
+    k_rows, v_rows = sds2[3]["k"].shape[2], sds2[3]["v"].shape[2]
+    hd = sds2[3]["k"].shape[-1]
+    r = sds2[3]["k_row"].shape[-1] // sds2[3]["members"].shape[-1]
+    int8 = "k_scale" in sds2[3]
+    hbm = {s: ops.relay_prefix_hbm_bytes_estimate(
+               k_rows, v_rows, s, hd, cache_bytes=1 if int8 else 4,
+               int8_scales=int8) for s in (plen, 2 * plen)}
+    mxu = {n: ops.relay_prefix_mxu_pass_estimate(n, r, plen, ts=ps)
+           for n in (1, 2, 8)}
+
+    out = {
+        "prefix_len": plen,
+        "relay_steps": eng2.relay_steps,
+        "grouped_slots": eng2.relay_grouped_slots,
+        "launches_per_trace": launches,
+        "prefix_hbm_bytes_per_step": hbm[plen],
+        "prefix_hbm_bytes_per_step_2x_prefix": hbm[2 * plen],
+        "per_request_baseline_hbm_bytes_n2": 2 * hbm[plen],
+        "mxu_passes_by_group_size": mxu,
+        "per_request_baseline_mxu_passes_n8": 8 * mxu[1],
+        "claims": {
+            # grouped greedy tokens == per-request decode path
+            "relay_tokens_match_per_request":
+                toks == base and eng2.relay_steps > 0
+                and eng1.relay_steps > 0,
+            # one grid-batched prefix pass per layer, not one per slot
+            "relay_launches_flat_in_group_size":
+                0 < launches["group_of_1"] == launches["group_of_2"],
+            # per-step prefix HBM bytes: member-count-free by
+            # construction, linear in the prefix length
+            "relay_prefix_hbm_o_prefix":
+                hbm[2 * plen] == 2 * hbm[plen],
+            # QK passes flat while N*R fits one MXU tile; the
+            # per-request baseline pays N x the single-slot passes
+            "relay_mxu_passes_flat_in_n":
+                mxu[1] == mxu[2] == mxu[8]
+                and 8 * mxu[1] > mxu[8],
+        },
+    }
+    return out
+
+
 def _streaming_lane(cfg, params, pipe, *, prompt_len=16, max_new=24,
                     slots=2):
     """Per-token streaming latency through the ``LLM.stream`` frontend:
@@ -576,6 +713,7 @@ def run():
     sched = _scheduler_compare(cfg_chai, params, pipe)
     fused = _fused_kernel_lane()
     prefix = _prefix_reuse_lane(cfg_chai, params, pipe)
+    prefix["relay"] = _relay_lane(cfg_chai, params, pipe)
     streaming = _streaming_lane(cfg_chai, params, pipe)
     slo = _slo_storm_lane(cfg_chai, params, pipe)
 
@@ -623,6 +761,18 @@ def run():
             "prefix_no_page_leaks": prefix["claims"]["no_page_leaks"],
             "prefix_snapshot_hit_observed":
                 prefix["claims"]["snapshot_hit_observed"],
+            # relay decode lane: deterministic (token parity is executed,
+            # launch flatness is trace-counted, the cost-model booleans
+            # encode the O(prefix) / flat-in-N structure CI must keep)
+            "relay_tokens_match_per_request":
+                prefix["relay"]["claims"]["relay_tokens_match_per_request"],
+            "relay_launches_flat_in_group_size":
+                prefix["relay"]["claims"]
+                    ["relay_launches_flat_in_group_size"],
+            "relay_prefix_hbm_o_prefix":
+                prefix["relay"]["claims"]["relay_prefix_hbm_o_prefix"],
+            "relay_mxu_passes_flat_in_n":
+                prefix["relay"]["claims"]["relay_mxu_passes_flat_in_n"],
             # streaming frontend: tokens arrive incrementally
             # (deterministic; the ITL percentiles above are advisory)
             "stream_first_token_before_completion":
@@ -654,6 +804,19 @@ def check_fused():
     return 0 if all(gated.values()) else 1
 
 
+def check():
+    """Full deterministic claim gate (CI): the fused-decode checks plus
+    the relay-decode lane (token parity, launch flatness, O(prefix) cost
+    structure). Exits non-zero on any regression; never times anything."""
+    rc = check_fused()
+    cfg, params, pipe, _ = tiny_trained()
+    cfg_chai = cfg.with_chai(enabled=True,
+                             cluster_counts=(5,) * cfg.n_attn_layers)
+    lane = _relay_lane(cfg_chai, params, pipe)
+    print({"relay_lane": lane, "gated": lane["claims"]})
+    return 1 if (rc or not all(lane["claims"].values())) else 0
+
+
 if __name__ == "__main__":
     import argparse
     import sys
@@ -661,7 +824,12 @@ if __name__ == "__main__":
     ap.add_argument("--check-fused", action="store_true",
                     help="run only the deterministic fused-decode claim "
                          "checks (CI gate); exit 1 on regression")
+    ap.add_argument("--check", action="store_true",
+                    help="run every deterministic claim check (fused "
+                         "decode + relay lane); exit 1 on regression")
     args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
     if args.check_fused:
         sys.exit(check_fused())
     print(run())

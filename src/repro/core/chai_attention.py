@@ -53,21 +53,33 @@ def _qk_norm(x, scale, cfg):
 
 
 def chai_decode_attention(xn, p, cfg, state, idxs, chai_ctx, *, local,
-                          write_mask=None, decode_ts=0):
+                          write_mask=None, decode_ts=0, relay=None):
     """xn: (B, d) normed hidden. Returns (out (B, H, hd), new_state).
 
     ``write_mask`` (B,) bool: cache rows are committed only for masked
     slots (the mixed-phase continuous step runs this path alongside the
     plain MHA path on one batch). ``decode_ts``: S-tile size for the
     fused dense kernel (0 = whole sequence; the engine passes its page
-    size so dense and paged layouts tile identically)."""
+    size so dense and paged layouts tile identically).
+
+    ``relay`` (shared-prefix relay decode, paged+fused layouts): pytree
+    of group-batched arrays — see ``_relay_prefix_state`` for the
+    layout. Grouped slots' fused decode runs SUFFIX-ONLY (rolled block
+    tables + shifted ``pos``) with ``emit_state=True``, one
+    group-batched prefix pass runs per layer over the resident copy of
+    the shared pages, and the two (m, l, acc) triples merge by
+    online-softmax combine before the finalize. Non-grouped slots carry
+    the empty prefix state — the exact merge identity. The jnp fallback
+    ignores ``relay`` harmlessly: block tables still hold the prefix
+    pages, so the densified full-attention math is already complete."""
     if cfg.is_mha and not local:
         return _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx,
-                                write_mask, decode_ts=decode_ts)
+                                write_mask, decode_ts=decode_ts,
+                                relay=relay)
     if not cfg.is_mha:
         return _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx,
                                 local=local, write_mask=write_mask,
-                                decode_ts=decode_ts)
+                                decode_ts=decode_ts, relay=relay)
     # MHA arch with a local layer (none of the assigned archs hit this):
     from repro.models.transformer import _plain_decode_attention
     return _plain_decode_attention(xn, p, cfg, state, idxs, local=local,
@@ -91,9 +103,71 @@ def _layer_ctx(chai_ctx, attn_idx):
                                                keepdims=False), chai_ctx)
 
 
+# ------------------------------------------------- shared-prefix relay -----
+def _roll_bt(bt, shift):
+    """Rotate each slot's block-table row left by ``shift`` pages, so the
+    kernel's logical page 0 is the slot's first PRIVATE (post-prefix)
+    page. With ``pos`` shifted down by the prefix length, the wrapped
+    prefix entries reappearing at the tail sit at token indices
+    > pos - plen and are masked by the kernel's validity test."""
+    p = bt.shape[1]
+    idx = (jnp.arange(p, dtype=jnp.int32)[None, :] + shift[:, None]) % p
+    return jnp.take_along_axis(bt, idx, axis=1)
+
+
+def _relay_prefix_state(relay, idxs, q_rep, *, acc_rows, use_v_scale,
+                        softcap, ts):
+    """One group-batched prefix-attention pass for this layer, scattered
+    back to batch rows as an unfinalized (m, l, acc) online-softmax
+    state.
+
+    ``relay`` layout (engine-built, host-side):
+      k / v            (nG, G, KV/VR, Sp, hd)  resident copies of the
+                       shared dense pages (one contiguous view per group)
+      k_scale/v_scale  (nG, G, rows, Sp)       int8 scales (optional)
+      plen             (G,)                    shared prefix length
+      members          (G, Nmax)               slot index per member
+      k_row/a_row/v_row (nA, G, NR / A)        per-layer row-routing maps
+                       (rep -> K row, acc row -> score row, acc row ->
+                       V row) — this is where the h2c broadcast lives,
+                       deferred out of the prefix compute
+      gid/midx/len     (B,)                    slot -> (group, member)
+      in_group         (B,) bool               grouped-slot mask
+
+    Non-members scatter the empty state (m = NEG_INF, l = acc = 0) —
+    the exact bitwise merge identity, so ungrouped slots pass through
+    the merge unchanged. ``use_v_scale=False`` rides share_values int8
+    V codes scale-less, mirroring the clustered-pool reinterpret."""
+    from repro.kernels import ops as kops
+    from repro.kernels.chai_attention import NEG_INF
+    from repro.models.transformer import tree_index
+    kp = tree_index(relay["k"], idxs["global"])
+    vp = tree_index(relay["v"], idxs["global"])
+    ks = (tree_index(relay["k_scale"], idxs["global"])
+          if "k_scale" in relay else None)
+    vs = (tree_index(relay["v_scale"], idxs["global"])
+          if use_v_scale and "v_scale" in relay else None)
+    k_row = tree_index(relay["k_row"], idxs["attn"])
+    a_row = tree_index(relay["a_row"], idxs["attn"])
+    v_row = tree_index(relay["v_row"], idxs["attn"])
+    g, nmax = relay["members"].shape
+    _, r, hd = q_rep.shape
+    qg = q_rep[relay["members"]].reshape(g, nmax * r, hd)
+    m, l, acc = kops.relay_prefix_attention(
+        qg, kp, vp, k_row, a_row, v_row, relay["plen"],
+        k_scale=ks, v_scale=vs, ts=ts, softcap=softcap)
+    gid, midx, ing = relay["gid"], relay["midx"], relay["in_group"]
+    m_pb = jnp.where(ing[:, None], m.reshape(g, nmax, r)[gid, midx],
+                     NEG_INF)
+    l_pb = jnp.where(ing[:, None], l.reshape(g, nmax, r)[gid, midx], 0.0)
+    acc_pb = jnp.where(ing[:, None, None],
+                       acc.reshape(g, nmax, acc_rows, hd)[gid, midx], 0.0)
+    return m_pb, l_pb, acc_pb
+
+
 # ---------------------------------------------------------------- MHA ------
 def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None, *,
-                     decode_ts=0):
+                     decode_ts=0, relay=None):
     from repro.models.transformer import _masked_rows, tree_index, \
         tree_update
     b, d = xn.shape
@@ -217,16 +291,37 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None, *,
         from repro.kernels import ops as kops
         cap = float(cfg.attn_logit_softcap or 0.0)
         if paged:
+            relay_on = relay is not None
+            bt_kc = state["bt_kc"]
+            bt_v = state["bt_vc"] if share_v else state["bt_vg"]
+            pos_k = pos
+            if relay_on:
+                # Suffix-only fused decode: rolled tables + shifted pos
+                # drop the prefix pages from this launch; the group-
+                # batched prefix pass below covers them once per group.
+                shift = relay["len"] // page
+                bt_kc = _roll_bt(bt_kc, shift)
+                bt_v = _roll_bt(bt_v, shift)
+                pos_k = pos - relay["len"]
             if share_v:
                 out = kops.paged_chai_decode_attention(
-                    q_rep, cp, state["bt_kc"], cp, state["bt_vc"],
-                    gather_idx, pos, k_scale_pool=csc, share_values=True,
-                    softcap=cap)
+                    q_rep, cp, bt_kc, cp, bt_v,
+                    gather_idx, pos_k, k_scale_pool=csc, share_values=True,
+                    softcap=cap, emit_state=relay_on)
             else:
                 out = kops.paged_chai_decode_attention(
-                    q_rep, cp, state["bt_kc"], vp, state["bt_vg"],
-                    gather_idx, pos, k_scale_pool=csc, v_scale_pool=vsp,
-                    softcap=cap)
+                    q_rep, cp, bt_kc, vp, bt_v,
+                    gather_idx, pos_k, k_scale_pool=csc, v_scale_pool=vsp,
+                    softcap=cap, emit_state=relay_on)
+            if relay_on:
+                pref = _relay_prefix_state(
+                    relay, idxs, q_rep,
+                    acc_rows=q_rep.shape[1] if share_v else h,
+                    use_v_scale=not share_v, softcap=cap, ts=decode_ts)
+                out = kops.finalize_decode_state(
+                    kops.merge_decode_states(out, pref, gather_idx,
+                                             share_values=share_v),
+                    gather_idx, share_values=share_v)
         else:
             out = kops.chai_decode_attention(
                 q_rep, kc, vc, gather_idx, pos, k_scale=ksc, v_scale=vsc,
@@ -302,7 +397,7 @@ def _chai_mha_decode(xn, p, cfg, state, idxs, chai_ctx, write_mask=None, *,
 
 # ---------------------------------------------------------------- GQA ------
 def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
-                     write_mask=None, decode_ts=0):
+                     write_mask=None, decode_ts=0, relay=None):
     from repro.models.transformer import _masked_rows, tree_index, \
         tree_update
     b, d = xn.shape
@@ -378,11 +473,25 @@ def _chai_gqa_decode(xn, p, cfg, state, idxs, chai_ctx, *, local,
                 state, idxs, k_new, v_new, pos, write_mask, cfg)
             q_flat, h2c_flat = _flat_qrep_h2c()
             from repro.kernels import ops as kops
+            cap = float(cfg.attn_logit_softcap or 0.0)
+            relay_on = relay is not None
+            bt_kg, bt_vg, pos_k = state["bt_kg"], state["bt_vg"], pos
+            if relay_on:
+                shift = relay["len"] // pool.shape[2]
+                bt_kg = _roll_bt(bt_kg, shift)
+                bt_vg = _roll_bt(bt_vg, shift)
+                pos_k = pos - relay["len"]
             out = kops.paged_chai_decode_attention(
-                q_flat, pool, state["bt_kg"], pool, state["bt_vg"],
-                h2c_flat, pos, k_scale_pool=spool, v_scale_pool=spool,
-                reps_per_group=r,
-                softcap=float(cfg.attn_logit_softcap or 0.0))
+                q_flat, pool, bt_kg, pool, bt_vg,
+                h2c_flat, pos_k, k_scale_pool=spool, v_scale_pool=spool,
+                reps_per_group=r, softcap=cap, emit_state=relay_on)
+            if relay_on:
+                pref = _relay_prefix_state(relay, idxs, q_flat,
+                                           acc_rows=h, use_v_scale=True,
+                                           softcap=cap, ts=decode_ts)
+                out = kops.finalize_decode_state(
+                    kops.merge_decode_states(out, pref, h2c_flat),
+                    h2c_flat)
             return out.astype(xn.dtype), state
         state, kc, vc = _paged_global_update(state, idxs, k_new, v_new,
                                              pos, write_mask, cfg)

@@ -334,8 +334,9 @@ def paged_chai_av(a, v_pool, bt_v, h2c, *, interpret=None):
 
 # ------------------------------------------------- fused one-pass decode ---
 def _fused_tile(pos_ref, q_ref, h2c_ref, k_ref, ks_ref, v_ref, vs_ref,
-                o_ref, m_scr, l_scr, acc_scr, *, scale, ts, window, n_tiles,
-                reps_per_group, v_rep, share_values, softcap=0.0):
+                out_refs, m_scr, l_scr, acc_scr, *, scale, ts, window,
+                n_tiles, reps_per_group, v_rep, share_values, softcap=0.0,
+                emit_state=False):
     """One (batch, S-tile) step of the fused clustered decode.
 
     Shared by the dense and paged variants — the paged caller only differs
@@ -346,7 +347,13 @@ def _fused_tile(pos_ref, q_ref, h2c_ref, k_ref, ks_ref, v_ref, vs_ref,
     Scratch: ``m_scr``/``l_scr`` (R, 1) running max / normalizer per rep
     row; ``acc_scr`` (H, hd) per-member-head output accumulators (under
     ``share_values``: (R, hd) per-cluster — the h2c gather then happens at
-    finalize, after normalization)."""
+    finalize, after normalization).
+
+    ``emit_state``: instead of the finalized (H, hd) output, write the raw
+    online-softmax triple — m (R,), l (R,), acc (rows_acc, hd) — so a
+    caller can merge this pass with another (relay shared-prefix decode)
+    before normalizing. The deferred jnp finalize (h2c gather + divide) is
+    bitwise-identical to the in-kernel one-hot finalize."""
     b = pl.program_id(0)
     s = pl.program_id(1)
 
@@ -421,23 +428,31 @@ def _fused_tile(pos_ref, q_ref, h2c_ref, k_ref, ks_ref, v_ref, vs_ref,
 
     @pl.when(s == n_tiles - 1)
     def _fin():
-        if share_values:
-            out_r = acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)
-            out = jnp.dot(oneh, out_r,
-                          preferred_element_type=jnp.float32)    # (H, hd)
+        if emit_state:
+            m_ref, l_ref, acc_ref = out_refs
+            m_ref[0] = m_scr[:, 0]
+            l_ref[0] = l_scr[:, 0]
+            acc_ref[0] = acc_scr[...]
         else:
-            l_full = jnp.dot(oneh, l_scr[...],
-                             preferred_element_type=jnp.float32)
-            out = acc_scr[...] / jnp.maximum(l_full, 1e-37)
-        o_ref[0] = out.astype(o_ref.dtype)
+            (o_ref,) = out_refs
+            if share_values:
+                out_r = acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)
+                out = jnp.dot(oneh, out_r,
+                              preferred_element_type=jnp.float32)  # (H, hd)
+            else:
+                l_full = jnp.dot(oneh, l_scr[...],
+                                 preferred_element_type=jnp.float32)
+                out = acc_scr[...] / jnp.maximum(l_full, 1e-37)
+            o_ref[0] = out.astype(o_ref.dtype)
 
 
-def _fused_arg_router(n_prefetch, has_ks, has_vs, **flags):
+def _fused_arg_router(n_prefetch, has_ks, has_vs, *, n_out=1, **flags):
     """Positional-ref unpacking for the optional int8 scale inputs.
 
     Kernel signature: [scalar-prefetch refs] q, h2c, k, [ks], v, [vs],
-    out, m, l, acc — the first prefetch ref is always ``pos``; paged adds
-    the two block tables (consumed by the index maps only)."""
+    <n_out output refs>, m, l, acc — the first prefetch ref is always
+    ``pos``; paged adds the two block tables (consumed by the index maps
+    only). ``n_out`` is 1 (finalized output) or 3 (emit_state m/l/acc)."""
     def kernel(*refs):
         pos_ref = refs[0]
         rest = list(refs[n_prefetch:])
@@ -447,9 +462,10 @@ def _fused_arg_router(n_prefetch, has_ks, has_vs, **flags):
         ks_ref = rest.pop(0) if has_ks else None
         v_ref = rest.pop(0)
         vs_ref = rest.pop(0) if has_vs else None
-        o_ref, m_scr, l_scr, acc_scr = rest
+        out_refs = tuple(rest[:n_out])
+        m_scr, l_scr, acc_scr = rest[n_out:]
         _fused_tile(pos_ref, q_ref, h2c_ref, k_ref, ks_ref, v_ref, vs_ref,
-                    o_ref, m_scr, l_scr, acc_scr, **flags)
+                    out_refs, m_scr, l_scr, acc_scr, **flags)
     return kernel
 
 
@@ -470,7 +486,8 @@ def _fused_shapes(q_rep, v_rows, h2c, share_values):
 
 def chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos, *, k_scale=None,
                       v_scale=None, reps_per_group=1, share_values=False,
-                      window=0, ts=512, softcap=0.0, interpret=None):
+                      window=0, ts=512, softcap=0.0, emit_state=False,
+                      interpret=None):
     """One-pass fused clustered decode over a dense cache.
 
     q_rep: (B, R, hd) rep-head queries; k_cache: (B, KVk, S, hd) with
@@ -480,7 +497,11 @@ def chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos, *, k_scale=None,
     int32 flat head -> rep-row map; pos: (B,) int32. int8 caches pass
     per-row scales via ``k_scale``/``v_scale`` (B, rows, S) and are
     dequantized in VMEM. Returns (B, H, hd) fp32 in ONE kernel launch —
-    no (B, R, S) score tensor is ever materialized."""
+    no (B, R, S) score tensor is ever materialized.
+
+    ``emit_state``: return the raw mergeable online-softmax triple
+    (m (B, R), l (B, R), acc (B, rows_acc, hd)) instead of the finalized
+    output — the relay shared-prefix merge contract."""
     if interpret is None:
         interpret = _interpret_default()
     assert not (share_values and reps_per_group > 1), \
@@ -515,25 +536,42 @@ def chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos, *, k_scale=None,
                                      (bb, 0, ss)))
         inputs.append(v_scale)
 
+    if emit_state:
+        out_specs = [
+            pl.BlockSpec((1, r_total), lambda bb, ss, pos_r: (bb, 0)),
+            pl.BlockSpec((1, r_total), lambda bb, ss, pos_r: (bb, 0)),
+            pl.BlockSpec((1, rows_acc, hd),
+                         lambda bb, ss, pos_r: (bb, 0, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((b, r_total), jnp.float32),
+            jax.ShapeDtypeStruct((b, r_total), jnp.float32),
+            jax.ShapeDtypeStruct((b, rows_acc, hd), jnp.float32),
+        ]
+    else:
+        out_specs = pl.BlockSpec((1, h_total, hd),
+                                 lambda bb, ss, pos_r: (bb, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((b, h_total, hd), jnp.float32)
     kernel = _fused_arg_router(
-        1, k_scale is not None, v_scale is not None, scale=scale, ts=ts,
+        1, k_scale is not None, v_scale is not None,
+        n_out=3 if emit_state else 1, scale=scale, ts=ts,
         window=window, n_tiles=n_tiles, reps_per_group=reps_per_group,
-        v_rep=v_rep, share_values=share_values, softcap=softcap)
+        v_rep=v_rep, share_values=share_values, softcap=softcap,
+        emit_state=emit_state)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, n_tiles),
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, h_total, hd),
-                                   lambda bb, ss, pos_r: (bb, 0, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((r_total, 1), jnp.float32),
                 pltpu.VMEM((r_total, 1), jnp.float32),
                 pltpu.VMEM((rows_acc, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, h_total, hd), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
     )(pos.astype(jnp.int32), *inputs)
 
@@ -541,7 +579,7 @@ def chai_fused_decode(q_rep, k_cache, v_cache, h2c, pos, *, k_scale=None,
 def paged_chai_fused_decode(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
                             k_scale_pool=None, v_scale_pool=None,
                             reps_per_group=1, share_values=False, window=0,
-                            softcap=0.0, interpret=None):
+                            softcap=0.0, emit_state=False, interpret=None):
     """One-pass fused clustered decode over block-table page pools.
 
     q_rep: (B, R, hd); k_pool: (nP, KVk, page, hd) clustered pages (MHA:
@@ -552,7 +590,11 @@ def paged_chai_fused_decode(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
     pages stream HBM->VMEM exactly like dense tiles); h2c: (B, H) or
     (H,); pos: (B,). int8 pools pass ``k_scale_pool``/``v_scale_pool``
     (nP, rows, page) mirrors. Returns (B, H, hd) fp32 — one launch, no
-    (B, R, S) scores, no densified pool gather."""
+    (B, R, S) scores, no densified pool gather.
+
+    ``emit_state``: return (m (B, R), l (B, R), acc (B, rows_acc, hd))
+    unfinalized — the relay suffix pass runs this over the private pages
+    only and merges with the shared-prefix state before normalizing."""
     if interpret is None:
         interpret = _interpret_default()
     assert not (share_values and reps_per_group > 1), \
@@ -591,27 +633,232 @@ def paged_chai_fused_decode(q_rep, k_pool, bt_k, v_pool, bt_v, h2c, pos, *,
                                      (btv_r[bb, ss], 0, 0)))
         inputs.append(v_scale_pool)
 
+    if emit_state:
+        out_specs = [
+            pl.BlockSpec((1, r_total),
+                         lambda bb, ss, pos_r, btk_r, btv_r: (bb, 0)),
+            pl.BlockSpec((1, r_total),
+                         lambda bb, ss, pos_r, btk_r, btv_r: (bb, 0)),
+            pl.BlockSpec((1, rows_acc, hd),
+                         lambda bb, ss, pos_r, btk_r, btv_r: (bb, 0, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((b, r_total), jnp.float32),
+            jax.ShapeDtypeStruct((b, r_total), jnp.float32),
+            jax.ShapeDtypeStruct((b, rows_acc, hd), jnp.float32),
+        ]
+    else:
+        out_specs = pl.BlockSpec((1, h_total, hd),
+                                 lambda bb, ss, pos_r, btk_r, btv_r:
+                                 (bb, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((b, h_total, hd), jnp.float32)
     kernel = _fused_arg_router(
-        3, k_scale_pool is not None, v_scale_pool is not None, scale=scale,
+        3, k_scale_pool is not None, v_scale_pool is not None,
+        n_out=3 if emit_state else 1, scale=scale,
         ts=page, window=window, n_tiles=n_pages,
         reps_per_group=reps_per_group, v_rep=v_rep,
-        share_values=share_values, softcap=softcap)
+        share_values=share_values, softcap=softcap, emit_state=emit_state)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(b, n_pages),
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, h_total, hd),
-                                   lambda bb, ss, pos_r, btk_r, btv_r:
-                                   (bb, 0, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((r_total, 1), jnp.float32),
                 pltpu.VMEM((r_total, 1), jnp.float32),
                 pltpu.VMEM((rows_acc, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, h_total, hd), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
     )(pos.astype(jnp.int32), bt_k.astype(jnp.int32),
       bt_v.astype(jnp.int32), *inputs)
+
+
+# --------------------------------------- relay shared-prefix decode --------
+def _relay_prefix_kernel(plen_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                         krow_ref, arow_ref, vrow_ref, m_ref, l_ref,
+                         acc_ref, m_scr, l_scr, acc_scr, *, scale, ts,
+                         n_tiles, softcap=0.0):
+    """One (group, S-tile) step of the relay shared-prefix pass.
+
+    All member slots of a relay group attend the SAME packed resident
+    prefix K/V — the kernel batches their rep queries along one row axis
+    (NR = Nmax * R) so the prefix streams HBM->VMEM once per group, not
+    once per slot. Per-member cluster assignments differ, so three int32
+    row maps route the gathers (spelled as one-hot matmuls, the MXU
+    idiom): ``k_row`` query-row -> prefix K row, ``a_row`` accumulator
+    row -> query row (the h2c broadcast, deferred from the suffix merge),
+    ``v_row`` accumulator row -> prefix V row.
+
+    Masking is ``idx < plen`` only — every prefix position precedes every
+    decode query, so there is no causal constraint inside the prefix; the
+    same mask hides the zero-padded tail of shorter groups."""
+    g = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # (NR, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (KV, Ts, hd)
+    nr, hd = q.shape
+    kv = k.shape[0]
+    k_row = krow_ref[0]                                  # (NR,) int32
+    oneh_k = (k_row[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (nr, kv), 1)).astype(jnp.float32)     # (NR, KV)
+    kg = jnp.dot(oneh_k, k.reshape(kv, ts * hd),
+                 preferred_element_type=jnp.float32).reshape(nr, ts, hd)
+    sc = jax.lax.dot_general(q[:, None, :], kg,
+                             (((2,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)[:, 0]
+    if ks_ref is not None:   # int8: scores scaled by per-(row, pos) scales
+        ksg = jnp.dot(oneh_k, ks_ref[0].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)  # (NR, Ts)
+        sc = sc * ksg
+    sc = sc * scale
+    if softcap:
+        sc = softcap * jnp.tanh(sc / softcap)
+    idx = s * ts + jax.lax.broadcasted_iota(jnp.int32, (1, ts), 1)
+    sc = jnp.where(idx < plen_ref[g], sc, NEG_INF)       # (NR, Ts)
+
+    m_prev = m_scr[...]                                  # (NR, 1)
+    m_new = jnp.maximum(
+        jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True)), -1e30)
+    alpha = jnp.exp(m_prev - m_new)                      # (NR, 1)
+    p = jnp.exp(sc - m_new)                              # (NR, Ts)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[...] = m_new
+
+    v = v_ref[0].astype(jnp.float32)                     # (VR, Ts, hd)
+    if vs_ref is not None:
+        v = v * vs_ref[0].astype(jnp.float32)[..., None]
+    a_row = arow_ref[0]                                  # (A,) int32
+    v_row = vrow_ref[0]                                  # (A,) int32
+    a_total = a_row.shape[0]
+    vr = v.shape[0]
+    oneh_a = (a_row[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (a_total, nr), 1)).astype(jnp.float32)  # (A, NR)
+    p_a = jnp.dot(oneh_a, p, preferred_element_type=jnp.float32)
+    alpha_a = jnp.dot(oneh_a, alpha, preferred_element_type=jnp.float32)
+    oneh_v = (v_row[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (a_total, vr), 1)).astype(jnp.float32)  # (A, VR)
+    vg = jnp.dot(oneh_v, v.reshape(vr, ts * hd),
+                 preferred_element_type=jnp.float32).reshape(
+                     a_total, ts, hd)
+    pv = jax.lax.dot_general(p_a[:, None, :], vg,
+                             (((2,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)[:, 0]
+    acc_scr[...] = acc_scr[...] * alpha_a + pv           # (A, hd)
+
+    @pl.when(s == n_tiles - 1)
+    def _fin():
+        m_ref[0] = m_scr[:, 0]
+        l_ref[0] = l_scr[:, 0]
+        acc_ref[0] = acc_scr[...]
+
+
+def relay_prefix_decode(q, k, v, k_row, a_row, v_row, plen, *,
+                        k_scale=None, v_scale=None, ts=0, softcap=0.0,
+                        interpret=None):
+    """One batched shared-prefix attention pass per relay group.
+
+    q: (G, NR, hd) member rep queries stacked per group (NR = Nmax * R,
+    zero-padded members compute garbage rows that the engine's scatter
+    discards); k: (G, KV, Sp, hd) packed resident prefix K (the radix
+    chain's dense rows); v: (G, VR, Sp, hd) packed resident prefix V;
+    k_row/a_row/v_row: (G, NR)/(G, A)/(G, A) int32 routing maps (see
+    ``_relay_prefix_kernel``); plen: (G,) int32 valid prefix lengths
+    (scalar-prefetched; masks the zero-padded tail — Sp is the page-
+    aligned max over groups). int8 prefixes pass ``k_scale``/``v_scale``
+    (G, rows, Sp) mirrors (share_values V codes ride scale-less, matching
+    the clustered-pool reinterpret semantics). Returns the mergeable
+    triple (m (G, NR), l (G, NR), acc (G, A, hd)) f32 — combine with the
+    suffix ``emit_state`` triple via ``ops.merge_decode_states``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    g, nr, hd = q.shape
+    kv, sp = k.shape[1], k.shape[2]
+    vr = v.shape[1]
+    a_total = a_row.shape[1]
+    assert k_row.shape == (g, nr) and v_row.shape == (g, a_total)
+    assert v.shape[2] == sp
+    ts = ts or sp
+    ts = min(ts, sp)
+    if sp % ts:
+        ts = sp
+    n_tiles = sp // ts
+    scale = 1.0 / math.sqrt(hd)
+
+    in_specs = [
+        pl.BlockSpec((1, nr, hd), lambda gg, ss, plen_r: (gg, 0, 0)),
+        pl.BlockSpec((1, kv, ts, hd), lambda gg, ss, plen_r:
+                     (gg, 0, ss, 0)),
+    ]
+    inputs = [q, k]
+    if k_scale is not None:
+        in_specs.append(pl.BlockSpec((1, kv, ts), lambda gg, ss, plen_r:
+                                     (gg, 0, ss)))
+        inputs.append(k_scale)
+    in_specs.append(pl.BlockSpec((1, vr, ts, hd), lambda gg, ss, plen_r:
+                                 (gg, 0, ss, 0)))
+    inputs.append(v)
+    if v_scale is not None:
+        in_specs.append(pl.BlockSpec((1, vr, ts), lambda gg, ss, plen_r:
+                                     (gg, 0, ss)))
+        inputs.append(v_scale)
+    in_specs += [
+        pl.BlockSpec((1, nr), lambda gg, ss, plen_r: (gg, 0)),
+        pl.BlockSpec((1, a_total), lambda gg, ss, plen_r: (gg, 0)),
+        pl.BlockSpec((1, a_total), lambda gg, ss, plen_r: (gg, 0)),
+    ]
+    inputs += [k_row.astype(jnp.int32), a_row.astype(jnp.int32),
+               v_row.astype(jnp.int32)]
+
+    has_ks, has_vs = k_scale is not None, v_scale is not None
+
+    def kernel(*refs):
+        plen_ref = refs[0]
+        rest = list(refs[1:])
+        q_ref = rest.pop(0)
+        k_ref = rest.pop(0)
+        ks_ref = rest.pop(0) if has_ks else None
+        v_ref = rest.pop(0)
+        vs_ref = rest.pop(0) if has_vs else None
+        (krow_ref, arow_ref, vrow_ref, m_ref, l_ref, acc_ref,
+         m_scr, l_scr, acc_scr) = rest
+        _relay_prefix_kernel(plen_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                             krow_ref, arow_ref, vrow_ref, m_ref, l_ref,
+                             acc_ref, m_scr, l_scr, acc_scr, scale=scale,
+                             ts=ts, n_tiles=n_tiles, softcap=softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(g, n_tiles),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, nr), lambda gg, ss, plen_r: (gg, 0)),
+                pl.BlockSpec((1, nr), lambda gg, ss, plen_r: (gg, 0)),
+                pl.BlockSpec((1, a_total, hd), lambda gg, ss, plen_r:
+                             (gg, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((nr, 1), jnp.float32),
+                pltpu.VMEM((nr, 1), jnp.float32),
+                pltpu.VMEM((a_total, hd), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((g, nr), jnp.float32),
+            jax.ShapeDtypeStruct((g, nr), jnp.float32),
+            jax.ShapeDtypeStruct((g, a_total, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(plen.astype(jnp.int32), *inputs)

@@ -205,9 +205,9 @@ def paged_decode(q, kv_pool, bt_k, bt_v, pos, *, window=0, interpret=None):
 
 
 # ------------------------------------------------------------------ prefill
-def _prefill_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+def _prefill_kernel(off_ref, q_ref, k_ref, v_ref, out_refs, m_scr, l_scr,
                     acc_scr, *, scale, window, tq, ts, n_tiles,
-                    softcap=0.0):
+                    softcap=0.0, emit_state=False):
     i = pl.program_id(2)           # q tile
     j = pl.program_id(3)           # kv tile
 
@@ -257,19 +257,33 @@ def _prefill_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
     @pl.when(j == n_tiles - 1)
     def _fin():
-        o_ref[0, 0] = (acc_scr[...]
-                       / jnp.maximum(l_scr[:, 0], 1e-37)[:, None]).astype(
-                           o_ref.dtype)
+        if emit_state:
+            m_ref, l_ref, acc_ref = out_refs
+            m_ref[0, 0] = m_scr[:, 0]
+            l_ref[0, 0] = l_scr[:, 0]
+            acc_ref[0, 0] = acc_scr[...]
+        else:
+            (o_ref,) = out_refs
+            o_ref[0, 0] = (acc_scr[...]
+                           / jnp.maximum(l_scr[:, 0],
+                                         1e-37)[:, None]).astype(
+                               o_ref.dtype)
 
 
 def flash_prefill(q, k, v, *, offset=0, window=0, tq=256, ts=512,
-                  softcap=0.0, interpret=None):
+                  softcap=0.0, emit_state=False, interpret=None):
     """q: (B, T, H, hd); k/v: (B, S, KV, hd) (time-major KV, as projected).
     Causal: query t at absolute position offset+t. ``offset`` may be a
     python int OR a traced int32 scalar (it rides in via scalar prefetch)
     — the prefix-cache suffix prefill attends new tokens over cached
     prefix KV with a per-request offset under one jit per suffix bucket.
-    Returns (B, T, H, hd)."""
+    Returns (B, T, H, hd).
+
+    ``emit_state``: return the raw head-major online-softmax triple
+    (m (B, H, T), l (B, H, T), acc (B, H, T, hd)) f32 instead of the
+    finalized output — the paged suffix prefill merges this causal
+    self-attention pass with a ``paged_prefix_attend`` pass over the
+    cached prefix pages via ``ops.merge_prefill_states``."""
     if interpret is None:
         interpret = _interpret_default()
     b, t, h, hd = q.shape
@@ -287,9 +301,34 @@ def flash_prefill(q, k, v, *, offset=0, window=0, tq=256, ts=512,
     off = jnp.asarray(offset, jnp.int32).reshape((1,))
 
     grid = (b, h, t // tq, n_tiles)
-    kernel = functools.partial(_prefill_kernel, scale=scale, window=window,
-                               tq=tq, ts=ts, n_tiles=n_tiles,
-                               softcap=softcap)
+    base = functools.partial(_prefill_kernel, scale=scale, window=window,
+                             tq=tq, ts=ts, n_tiles=n_tiles,
+                             softcap=softcap, emit_state=emit_state)
+    n_out = 3 if emit_state else 1
+
+    def kernel(off_ref, q_ref, k_ref, v_ref, *rest):
+        base(off_ref, q_ref, k_ref, v_ref, tuple(rest[:n_out]),
+             *rest[n_out:])
+
+    if emit_state:
+        out_specs = [
+            pl.BlockSpec((1, 1, tq), lambda bb, hh, ii, jj, off_r:
+                         (bb, hh, ii)),
+            pl.BlockSpec((1, 1, tq), lambda bb, hh, ii, jj, off_r:
+                         (bb, hh, ii)),
+            pl.BlockSpec((1, 1, tq, hd), lambda bb, hh, ii, jj, off_r:
+                         (bb, hh, ii, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, t, hd), jnp.float32),
+        ]
+    else:
+        out_specs = pl.BlockSpec((1, 1, tq, hd),
+                                 lambda bb, hh, ii, jj, off_r:
+                                 (bb, hh, ii, 0))
+        out_shape = jax.ShapeDtypeStruct((b, h, t, hd), q.dtype)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -303,16 +342,177 @@ def flash_prefill(q, k, v, *, offset=0, window=0, tq=256, ts=512,
                 pl.BlockSpec((1, 1, ts, hd), lambda bb, hh, ii, jj, off_r:
                              (bb, hh // qpk, jj, 0)),
             ],
-            out_specs=pl.BlockSpec((1, 1, tq, hd),
-                                   lambda bb, hh, ii, jj, off_r:
-                                   (bb, hh, ii, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((tq, 1), jnp.float32),
                 pltpu.VMEM((tq, 1), jnp.float32),
                 pltpu.VMEM((tq, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, h, t, hd), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(off, qh, kh, vh)
+    if emit_state:
+        return out
     return out.transpose(0, 2, 1, 3)
+
+
+# --------------------------------------------------- paged prefix attend
+def _paged_prefix_kernel(plen_ref, btk_ref, btv_ref, q_ref, k_ref, ks_ref,
+                         v_ref, vs_ref, m_ref, l_ref, acc_ref, m_scr,
+                         l_scr, acc_scr, *, scale, page, n_pages,
+                         softcap=0.0):
+    """Suffix-prefill prefix pass: every suffix query attends every cached
+    prefix position (< plen) — no causal constraint inside the prefix.
+    Pages beyond the prefix are redirected to the null sink page by the
+    index map and skipped here; emits the mergeable m/l/acc triple."""
+    b = pl.program_id(0)
+    j = pl.program_id(3)               # logical page index
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    plen = plen_ref[b]
+
+    @pl.when(j * page < plen)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (Tq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (page, hd)
+        sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if ks_ref is not None:   # int8: per-(row, pos) K scales
+            sc = sc * ks_ref[0, 0].astype(jnp.float32)[None, :]
+        sc = sc * scale
+        if softcap:
+            sc = softcap * jnp.tanh(sc / softcap)
+        tq = q.shape[0]
+        ki = j * page + jax.lax.broadcasted_iota(jnp.int32, (tq, page), 1)
+        sc = jnp.where(ki < plen, sc, NEG_INF)
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(jnp.maximum(m_prev, jnp.max(sc, -1)), -1e30)
+        alpha = jnp.exp(m_prev - m_new)                  # (Tq,)
+        p = jnp.exp(sc - m_new[:, None])                 # (Tq, page)
+        l_new = l_scr[:, 0] * alpha + jnp.sum(p, -1)
+        v = v_ref[0, 0].astype(jnp.float32)              # (page, hd)
+        if vs_ref is not None:
+            v = v * vs_ref[0, 0].astype(jnp.float32)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_new
+        l_scr[:, 0] = l_new
+
+    @pl.when(j == n_pages - 1)
+    def _fin():
+        m_ref[0, 0] = m_scr[:, 0]
+        l_ref[0, 0] = l_scr[:, 0]
+        acc_ref[0, 0] = acc_scr[...]
+
+
+def paged_prefix_attend(q, kv_pool, bt_k, bt_v, plen, *, k_scale_pool=None,
+                        v_scale_pool=None, softcap=0.0, tq=256,
+                        interpret=None):
+    """Attend suffix queries over cached prefix pages, streamed via
+    scalar-prefetched block tables (no densifying slot-capacity gather).
+
+    q: (B, T, H, hd) suffix queries; kv_pool: (nP, KV, page, hd) dense
+    page pool; bt_k/bt_v: (B, P) int32 block tables; plen: (B,) int32
+    cached-prefix token counts (entries past the prefix are redirected to
+    the null sink page and masked). int8 pools pass the mirror-shaped
+    scale pools. Returns the HEAD-MAJOR mergeable triple (m (B, H, T),
+    l (B, H, T), acc (B, H, T, hd)) f32 — combine with the suffix
+    ``flash_prefill(..., emit_state=True)`` pass via
+    ``ops.merge_prefill_states``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, t, h, hd = q.shape
+    n_kv, page = kv_pool.shape[1], kv_pool.shape[2]
+    n_pages = bt_k.shape[1]
+    assert bt_v.shape == bt_k.shape == (b, n_pages)
+    qpk = h // n_kv
+    tq = min(tq, t)
+    assert t % tq == 0, (t, tq)
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.transpose(0, 2, 1, 3)       # (B, H, T, hd)
+
+    def _k_page(bb, ss, plen_r, btk_r, btv_r):
+        # Null-sink redirect past the prefix: the fetch is cheap (page 0)
+        # and the compute is skipped in-kernel.
+        return jnp.where(ss * page < plen_r[bb], btk_r[bb, ss], 0)
+
+    def _v_page(bb, ss, plen_r, btk_r, btv_r):
+        return jnp.where(ss * page < plen_r[bb], btv_r[bb, ss], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, tq, hd),
+                     lambda bb, hh, ii, jj, plen_r, btk_r, btv_r:
+                     (bb, hh, ii, 0)),
+        pl.BlockSpec((1, 1, page, hd),
+                     lambda bb, hh, ii, jj, plen_r, btk_r, btv_r:
+                     (_k_page(bb, jj, plen_r, btk_r, btv_r),
+                      hh // qpk, 0, 0)),
+    ]
+    inputs = [qh, kv_pool]
+    if k_scale_pool is not None:
+        in_specs.append(pl.BlockSpec(
+            (1, 1, page), lambda bb, hh, ii, jj, plen_r, btk_r, btv_r:
+            (_k_page(bb, jj, plen_r, btk_r, btv_r), hh // qpk, 0)))
+        inputs.append(k_scale_pool)
+    in_specs.append(pl.BlockSpec(
+        (1, 1, page, hd), lambda bb, hh, ii, jj, plen_r, btk_r, btv_r:
+        (_v_page(bb, jj, plen_r, btk_r, btv_r), hh // qpk, 0, 0)))
+    inputs.append(kv_pool)
+    if v_scale_pool is not None:
+        in_specs.append(pl.BlockSpec(
+            (1, 1, page), lambda bb, hh, ii, jj, plen_r, btk_r, btv_r:
+            (_v_page(bb, jj, plen_r, btk_r, btv_r), hh // qpk, 0)))
+        inputs.append(v_scale_pool)
+
+    has_ks = k_scale_pool is not None
+    has_vs = v_scale_pool is not None
+
+    def kernel(plen_ref, btk_ref, btv_ref, *refs):
+        rest = list(refs)
+        q_ref = rest.pop(0)
+        k_ref = rest.pop(0)
+        ks_ref = rest.pop(0) if has_ks else None
+        v_ref = rest.pop(0)
+        vs_ref = rest.pop(0) if has_vs else None
+        m_ref, l_ref, acc_ref, m_scr, l_scr, acc_scr = rest
+        _paged_prefix_kernel(plen_ref, btk_ref, btv_ref, q_ref, k_ref,
+                             ks_ref, v_ref, vs_ref, m_ref, l_ref, acc_ref,
+                             m_scr, l_scr, acc_scr, scale=scale, page=page,
+                             n_pages=n_pages, softcap=softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, h, t // tq, n_pages),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, 1, tq),
+                             lambda bb, hh, ii, jj, plen_r, btk_r, btv_r:
+                             (bb, hh, ii)),
+                pl.BlockSpec((1, 1, tq),
+                             lambda bb, hh, ii, jj, plen_r, btk_r, btv_r:
+                             (bb, hh, ii)),
+                pl.BlockSpec((1, 1, tq, hd),
+                             lambda bb, hh, ii, jj, plen_r, btk_r, btv_r:
+                             (bb, hh, ii, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((tq, 1), jnp.float32),
+                pltpu.VMEM((tq, 1), jnp.float32),
+                pltpu.VMEM((tq, hd), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, t, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(plen.astype(jnp.int32), bt_k.astype(jnp.int32),
+      bt_v.astype(jnp.int32), *inputs)

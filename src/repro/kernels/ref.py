@@ -245,3 +245,72 @@ def paged_chai_three_kernel_decode(q_rep, k_pool, bt_k, v_pool, bt_v, h2c,
     if v_pool.shape[1] != h:   # GQA: expand per-group V pool rows
         v_pool = jnp.repeat(v_pool, h // v_pool.shape[1], axis=1)
     return ck.paged_chai_av(a, v_pool, bt_v, h2c, interpret=interpret)
+
+
+# ------------------------------------------- relay shared-prefix decode ----
+def relay_prefix_decode_ref(q, k, v, k_row, a_row, v_row, plen, *,
+                            k_scale=None, v_scale=None, softcap=0.0):
+    """Oracle for ``relay_prefix_decode``: dense row gathers + the masked
+    softmax state computed in one shot. q: (G, NR, hd); k: (G, KV, Sp,
+    hd); v: (G, VR, Sp, hd); k_row: (G, NR); a_row/v_row: (G, A); plen:
+    (G,). Returns (m (G, NR), l (G, NR), acc (G, A, hd)) f32."""
+    g, nr, hd = q.shape
+    sp = k.shape[2]
+    kf = k.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+    kg = jnp.take_along_axis(
+        kf, k_row[:, :, None, None].astype(jnp.int32), axis=1)
+    sc = jnp.einsum("gre,grse->grs", q.astype(jnp.float32),
+                    kg) / jnp.sqrt(jnp.float32(hd))
+    sc = _softcap(sc, softcap)
+    idx = jnp.arange(sp, dtype=jnp.int32)
+    sc = jnp.where(idx[None, None, :] < plen[:, None, None], sc, NEG_INF)
+    m = jnp.maximum(jnp.max(sc, axis=-1), -1e30)          # (G, NR)
+    p = jnp.exp(sc - m[..., None])                        # (G, NR, Sp)
+    l = jnp.sum(p, axis=-1)                               # (G, NR)
+    vf = v.astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    vg = jnp.take_along_axis(
+        vf, v_row[:, :, None, None].astype(jnp.int32), axis=1)
+    p_a = jnp.take_along_axis(p, a_row[:, :, None].astype(jnp.int32),
+                              axis=1)                     # (G, A, Sp)
+    acc = jnp.einsum("gas,gasd->gad", p_a, vg)            # (G, A, hd)
+    return m, l, acc
+
+
+def paged_prefix_attend_ref(q, kv_pool, bt_k, bt_v, plen, *,
+                            k_scale_pool=None, v_scale_pool=None,
+                            softcap=0.0):
+    """Oracle for ``paged_prefix_attend``: densify the pool through the
+    block tables, then the non-causal masked softmax state. Returns the
+    head-major triple (m (B, H, T), l (B, H, T), acc (B, H, T, hd))."""
+    b, t, h, hd = q.shape
+    kf = gather_pages_ref(kv_pool, bt_k).astype(jnp.float32)
+    if k_scale_pool is not None:
+        kf = kf * gather_pages_ref(k_scale_pool, bt_k)[..., None]
+    vf = gather_pages_ref(kv_pool, bt_v).astype(jnp.float32)
+    if v_scale_pool is not None:
+        vf = vf * gather_pages_ref(v_scale_pool, bt_v)[..., None]
+    qpk = h // kf.shape[1]
+    kf = jnp.repeat(kf, qpk, axis=1)                      # (B, H, S, hd)
+    vf = jnp.repeat(vf, qpk, axis=1)
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32)      # (B, H, T, hd)
+    sc = jnp.einsum("bhtd,bhsd->bhts", qh, kf) / jnp.sqrt(
+        jnp.float32(hd))
+    sc = _softcap(sc, softcap)
+    s = kf.shape[2]
+    idx = jnp.arange(s, dtype=jnp.int32)
+    sc = jnp.where(idx[None, None, None, :] < plen[:, None, None, None],
+                   sc, NEG_INF)
+    # plen == 0 rows never run a tile in-kernel, so their m stays NEG_INF
+    # (the merge identity); computed rows clamp at -1e30 like every kernel.
+    m = jnp.where(plen[:, None, None] > 0,
+                  jnp.maximum(jnp.max(sc, axis=-1), -1e30),
+                  NEG_INF)                                # (B, H, T)
+    p = jnp.where(plen[:, None, None, None] > 0,
+                  jnp.exp(sc - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhts,bhsd->bhtd", p, vf)
+    return m, l, acc

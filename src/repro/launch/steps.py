@@ -203,6 +203,34 @@ def make_mixed_step(cfg: ModelConfig, *, moe_impl="ragged", unroll=False,
     return mixed_step
 
 
+def make_relay_step(cfg: ModelConfig, *, moe_impl="ragged", unroll=False,
+                    decode_ts=0):
+    """Shared-prefix relay decode step: ``make_mixed_step`` plus a
+    ``relay`` pytree of group-batched arrays (resident prefix K/V copies,
+    row-routing maps, membership) built host-side by the engine. Grouped
+    STEADY slots run ONE prefix-attention pass per group per layer and a
+    suffix-only fused decode, merged by online-softmax state inside the
+    attention branch; non-grouped slots ride through unchanged (their
+    prefix state is the exact merge identity). Always mixed-phase — a
+    relay batch may carry WARMUP slots, which are never grouped.
+    Shape-specialized per (groups, max members, max prefix) signature."""
+    def relay_step(params, batch_inputs, state, chai_ctx, relay):
+        kw = {}
+        if "embeddings" in batch_inputs:
+            kw["embeddings"] = batch_inputs["embeddings"]
+            tokens = None
+        else:
+            tokens = batch_inputs["tokens"]
+        logits, state = tfm.decode_step(params, cfg, tokens, state,
+                                        chai_ctx=chai_ctx, mixed_phase=True,
+                                        moe_impl=moe_impl, unroll=unroll,
+                                        decode_ts=decode_ts, relay=relay,
+                                        **kw)
+        return logits, state
+
+    return relay_step
+
+
 def make_slot_prefill(cfg: ModelConfig, max_seq: int, *,
                       moe_impl="capacity", unroll=False):
     """Prefill ONE request (batch=1 forward) and insert it into batch slot
@@ -277,19 +305,15 @@ def make_paged_slot_prefill(cfg: ModelConfig, max_seq: int, *,
     return slot_prefill
 
 
-def _paged_dense_view(state, bt_row, cfg):
-    """Dense logical (nG, 1, KV, S, hd) fp view of one slot's pages
-    through a block-table row (dequantized under int8) — the cached
-    prefix the suffix prefill attends over."""
-    g = state["kvp"][:, bt_row]                  # (nG, P, KV, page, hd)
-    ng, p, kv, page, hd = g.shape
-    m = g.transpose(0, 2, 1, 3, 4).reshape(ng, kv, p * page, hd)
-    if "kvp_scale" in state:
-        from repro.core.cache import dequant_rows
-        sg = state["kvp_scale"][:, bt_row]       # (nG, P, KV, page)
-        sm = sg.transpose(0, 2, 1, 3).reshape(ng, kv, p * page)
-        m = dequant_rows(m, sm)
-    return m[:, None]                            # (nG, 1, KV, S, hd)
+def _paged_prefix_kv(state, bt_kg_row, bt_vg_row):
+    """Paged prefix_kv dict for a suffix/chunk prefill: the pool and
+    block tables go to the kernel as-is — the paged prefix pass streams
+    only the real pages through scalar-prefetched tables instead of
+    gathering the whole slot-capacity view per layer."""
+    return {"pool": state["kvp"],
+            "scale": state.get("kvp_scale"),
+            "bt_k": bt_kg_row[None],             # (1, P)
+            "bt_v": bt_vg_row[None]}
 
 
 def make_paged_suffix_prefill(cfg: ModelConfig, max_seq: int, *,
@@ -303,14 +327,13 @@ def make_paged_suffix_prefill(cfg: ModelConfig, max_seq: int, *,
     mapping (aliased prefix + fresh suffix pages); ``kg_scatter``/
     ``vg_scatter`` the same rows with the aliased entries nulled so the
     mini state's scatter cannot touch shared pages (copy-on-write: the
-    suffix writes only into the slot's own pages). Suffix queries attend
-    over cached prefix + suffix via ``flash_prefill``'s traced query
-    offset; shape-specialized per suffix bucket only. Donate the state
-    when jitting."""
+    suffix writes only into the slot's own pages). Suffix queries take a
+    paged non-causal pass over the cached prefix pages plus a causal
+    flash pass over the suffix, merged by online-softmax state; shape-
+    specialized per suffix bucket only. Donate the state when jitting."""
     def suffix_prefill(params, tokens, true_len, prefix_len, state, slot,
                        kg_scatter, vg_scatter, bt_kg_row, bt_vg_row):
-        prefix_kv = {"kg": _paged_dense_view(state, bt_kg_row, cfg),
-                     "vg": _paged_dense_view(state, bt_vg_row, cfg)}
+        prefix_kv = _paged_prefix_kv(state, bt_kg_row, bt_vg_row)
         mini = tfm.init_decode_state(cfg, 1, max_seq)
         logits, mini, _ = tfm.forward_fullseq(
             params, cfg, tokens, state=mini, logits_slice="last",
@@ -342,8 +365,7 @@ def make_paged_chunk_prefill(cfg: ModelConfig, max_seq: int, *,
     state when jitting; shape-specialized per chunk bucket."""
     def chunk_prefill(params, tokens, true_len, prefix_len, state, slot,
                       kg_scatter, vg_scatter, bt_kg_row, bt_vg_row, phase):
-        prefix_kv = {"kg": _paged_dense_view(state, bt_kg_row, cfg),
-                     "vg": _paged_dense_view(state, bt_vg_row, cfg)}
+        prefix_kv = _paged_prefix_kv(state, bt_kg_row, bt_vg_row)
         mini = tfm.init_decode_state(cfg, 1, max_seq)
         logits, mini, _ = tfm.forward_fullseq(
             params, cfg, tokens, state=mini, logits_slice="last",

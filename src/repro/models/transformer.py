@@ -344,12 +344,14 @@ def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
     how the engine prefills.)
 
     ``prefix_kv`` (+ traced ``prefix_len``): cached-prefix suffix
-    prefill. ``prefix_kv["kg"]/["vg"]`` are dense (nG, B, KV, S, hd)
-    logical views of the pages already holding positions
-    [0, prefix_len); the new tokens' queries (at absolute positions
-    ``prefix_len + t``) attend over cached prefix + fresh suffix through
-    ``flash_prefill`` with the traced query offset (logit softcap applied
-    in-kernel). Only global layers support a prefix — the engine gates
+    prefill. ``prefix_kv`` is {"pool": (nG, nP, KV, page, hd) paged KV
+    pool, "scale": matching int8 scale pool or None, "bt_k"/"bt_v":
+    (B, P) block tables} addressing the pages that already hold
+    positions [0, prefix_len). The new tokens' queries (at absolute
+    positions ``prefix_len + t``) take a non-causal paged pass over the
+    real prefix pages plus a causal flash pass over the fresh suffix,
+    merged by online-softmax state (logit softcap applied in both
+    kernels). Only global layers support a prefix — the engine gates
     the prefix cache to local-free archs."""
 
     def attn_branch(op, *, local):
@@ -359,27 +361,34 @@ def _mixer_fullseq_branch(kind, cfg, params, plan_arrays, positions,
         q, k, v = attn_mod.project_qkv(xn, p, cfg, positions)
         window = cfg.window_size if local else 0
         if prefix_kv is not None and not local:
-            # Suffix prefill: splice the fresh K/V into the cached-prefix
-            # view at the traced offset (index == absolute position), so
-            # causal masking by position covers prefix + suffix at once;
-            # rows past prefix_len + T are garbage but never attended.
-            kp = jnp.moveaxis(tree_index(prefix_kv["kg"], idxs["global"]),
-                              1, 2)                       # (B, S, KV, hd)
-            vp = jnp.moveaxis(tree_index(prefix_kv["vg"], idxs["global"]),
-                              1, 2)
-            off = jnp.asarray(prefix_len, jnp.int32)
-            k_all = jax.lax.dynamic_update_slice(
-                kp, k.astype(kp.dtype), (0, off, 0, 0))
-            v_all = jax.lax.dynamic_update_slice(
-                vp, v.astype(vp.dtype), (0, off, 0, 0))
-            s_all = k_all.shape[1]
-            t_q = q.shape[1]
+            # Suffix prefill, two passes merged via online-softmax state:
+            # (1) a paged prefix pass streams ONLY the real cached pages
+            # through scalar-prefetched block tables (non-causal — every
+            # suffix query sits past the whole prefix), (2) a causal
+            # flash pass over the fresh suffix at relative offset 0.
+            # Each emits unfinalized (m, l, acc); the merge rescales by
+            # exp(m_i - m) and the finalize normalizes once. plen == 0
+            # (cold first chunk) leaves the prefix state at the exact
+            # merge identity (m = -inf, l = acc = 0).
             from repro.kernels import flash_attention as fk
-            y = fk.flash_prefill(q, k_all, v_all, offset=off,
-                                 tq=_tile_size(t_q, 256),
-                                 ts=_tile_size(s_all, 512),
-                                 softcap=float(cfg.attn_logit_softcap
-                                               or 0.0))
+            from repro.kernels import ops as kops
+            pool = tree_index(prefix_kv["pool"], idxs["global"])
+            spool = (tree_index(prefix_kv["scale"], idxs["global"])
+                     if prefix_kv.get("scale") is not None else None)
+            t_q = q.shape[1]
+            cap = float(cfg.attn_logit_softcap or 0.0)
+            plen_vec = jnp.broadcast_to(
+                jnp.asarray(prefix_len, jnp.int32), (q.shape[0],))
+            st_p = fk.paged_prefix_attend(
+                q, pool, prefix_kv["bt_k"], prefix_kv["bt_v"], plen_vec,
+                k_scale_pool=spool, v_scale_pool=spool, softcap=cap,
+                tq=_tile_size(t_q, 256))
+            st_s = fk.flash_prefill(q, k, v, offset=0,
+                                    tq=_tile_size(t_q, 256),
+                                    ts=_tile_size(t_q, 512),
+                                    softcap=cap, emit_state=True)
+            y = kops.finalize_prefill_state(
+                kops.merge_prefill_states(st_s, st_p), dtype=q.dtype)
         else:
             y = attn_mod.attention_fullseq(
                 q, k, v, positions, positions, window=window,
@@ -565,11 +574,12 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
     writes mask the padding tail (the engine's power-of-two prompt
     buckets reuse one jit per bucket; the cohort scheduler passes a
     per-example vector for ragged cohorts).
-    ``prefix_len``/``prefix_kv`` (traced scalar + dense (nG, B, KV, S,
-    hd) views): cached-prefix suffix prefill — this call's tokens sit at
-    absolute positions ``prefix_len + arange(T)`` and attend over the
-    cached prefix KV; global-cache writes land at those absolute
-    positions, and ``pos`` starts at ``prefix_len + valid_len``.
+    ``prefix_len``/``prefix_kv`` (traced scalar + paged pool/block-table
+    dict, see ``_mixer_fullseq_branch``): cached-prefix suffix prefill —
+    this call's tokens sit at absolute positions ``prefix_len +
+    arange(T)`` and attend over the cached prefix pages; global-cache
+    writes land at those absolute positions, and ``pos`` starts at
+    ``prefix_len + valid_len``.
     """
     plan = layer_plan(cfg)
     if inputs.dtype in (jnp.int32, jnp.int64):
@@ -649,7 +659,7 @@ def forward_fullseq(params, cfg: ModelConfig, inputs, *, state=None,
 # ---------------------------------------------------------------------------
 
 def _mixer_decode_branch(kind, cfg, params, chai_ctx, mixed_phase=False,
-                         decode_ts=0):
+                         decode_ts=0, relay=None):
     from repro.core import chai_attention as chai_mod
 
     def attn_branch(op, *, local):
@@ -671,12 +681,12 @@ def _mixer_decode_branch(kind, cfg, params, chai_ctx, mixed_phase=False,
                                                  write_mask=~steady)
             y_c, state = chai_mod.chai_decode_attention(
                 xn, p, cfg, state, idxs, chai_ctx, local=local,
-                write_mask=steady, decode_ts=decode_ts)
+                write_mask=steady, decode_ts=decode_ts, relay=relay)
             y = jnp.where(steady[:, None, None], y_c, y_m)
         elif chai_ctx is not None:
             y, state = chai_mod.chai_decode_attention(
                 xn, p, cfg, state, idxs, chai_ctx, local=local,
-                decode_ts=decode_ts)
+                decode_ts=decode_ts, relay=relay)
         else:
             y, state = _plain_decode_attention(xn, p, cfg, state, idxs,
                                                local=local)
@@ -934,7 +944,7 @@ def _ffn_decode_branch(kind, cfg, params, moe_impl="ragged"):
 
 def decode_step(params, cfg: ModelConfig, tokens, state, *, chai_ctx=None,
                 mixed_phase=False, embeddings=None, moe_impl="ragged",
-                unroll=False, decode_ts=0):
+                unroll=False, decode_ts=0, relay=None):
     """One decode step. tokens: (B,) int32 (or embeddings (B, d) for stub
     frontends). Returns (logits (B, V), new_state).
 
@@ -951,6 +961,25 @@ def decode_step(params, cfg: ModelConfig, tokens, state, *, chai_ctx=None,
     the fused CHAI decode kernel on dense layouts (the engine passes its
     page size so every KV layout tiles — and therefore rounds —
     identically).
+
+    ``relay`` (shared-prefix relay decode, pytree of group-batched
+    arrays built by the engine): STEADY slots grouped by their deepest
+    shared radix node skip their prefix pages in the fused decode and
+    instead share ONE group-batched prefix-attention pass per layer over
+    a contiguous resident copy of the shared pages. Both passes run on
+    the online-softmax side-output contract: ``emit_state=True`` makes
+    the fused decode kernels return the unfinalized triple
+    (m (B, R), l (B, R), acc (B, A, hd)) — running row-max, running
+    exp-sum, and UNNORMALIZED weighted-V accumulator, one row per rep
+    (m, l) / per accumulator row (acc) — instead of finalized outputs.
+    Triples combine associatively: m' = max(m1, m2), each side rescaled
+    by exp(m_i - m'), and a single finalize divides acc by the gathered
+    l and applies the head->cluster broadcast. The empty state
+    (m = NEG_INF, l = 0, acc = 0) is the exact (bitwise) merge identity
+    because in-kernel m is clamped >= -1e30 whenever any tile computed,
+    so non-grouped slots ride through the same merge unchanged. See
+    ``repro.kernels.ops.merge_decode_states`` / ``finalize_decode_state``
+    and ``repro.core.chai_attention`` for the relay dict layout.
     """
     plan = layer_plan(cfg)
     if embeddings is not None:
@@ -966,7 +995,7 @@ def decode_step(params, cfg: ModelConfig, tokens, state, *, chai_ctx=None,
                  ("attn", "global", "local", "dense", "moe", "rec", "rwkv")},
     }
     mixer_branches = [_mixer_decode_branch(k, cfg, params, chai_ctx,
-                                           mixed_phase, decode_ts)
+                                           mixed_phase, decode_ts, relay)
                       for k in plan["present_mixers"]]
     ffn_branches = [_ffn_decode_branch(k, cfg, params, moe_impl)
                     for k in plan["present_ffns"]]

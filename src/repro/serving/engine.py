@@ -213,6 +213,21 @@ class EngineConfig:
     # membership / warmup scores), so resumed decoding continues where
     # it stopped instead of failing. Equal priorities never preempt.
     preemption: bool = True
+    # -- shared-prefix relay decode (prefix_cache + paged + CHAI) -------
+    # Compute system-prompt attention once per batch: STEADY slots
+    # admitted through the same radix chain group on their deepest
+    # shared node with >= relay_min_group members; each decode step runs
+    # ONE group-batched prefix-attention pass per layer over a resident
+    # contiguous copy of the shared pages (rep rows only — the
+    # head->cluster broadcast is deferred to the merge), while each
+    # slot's fused decode covers only its private suffix pages; the two
+    # online-softmax states merge before the finalize. Per-step prefix
+    # attention cost is O(prefix), independent of the group size.
+    # Grouped tokens match the per-request decode path token-for-token
+    # (the two-phase merge reorders float accumulation); ungrouped slots
+    # stay BITWISE identical to relay_decode=False.
+    relay_decode: bool = False
+    relay_min_group: int = 2       # smallest group worth a prefix pass
 
 
 class EngineCore(CohortSchedulerMixin):
@@ -373,6 +388,35 @@ class EngineCore(CohortSchedulerMixin):
                                     donate_argnums=(0,))
             self._identify = jax.jit(
                 lambda sc: clustering.identify_membership(sc, cfg))
+        # -- shared-prefix relay decode -----------------------------------
+        # Host caches keyed by a clustering-context version: the per-slot
+        # head->cluster maps feeding the relay row maps change only at
+        # CLUSTER transitions, snapshot restores and preemption swap-ins,
+        # so row maps / host ctx mirrors are rebuilt only when the
+        # version moves (not every step).
+        self._ctx_version = 0
+        self._ctx_host_cache = None    # (version, {name: np.ndarray})
+        self._relay_rows_cache = None  # (key, {k_row, a_row, v_row})
+        self._pack_prefix = {}         # chain length -> resident-pack jit
+        self.relay_steps = 0           # decode steps that ran the relay
+        self.relay_grouped_slots = 0   # cumulative grouped-slot count
+        # Mixed-batch sampling sub-batch (greedy slots skip the sampling
+        # lane): row gather / scatter-over-argmax helpers.
+        self._take_rows = jax.jit(lambda a, idx: a[idx])
+        self._put_rows = jax.jit(lambda a, idx, v: a.at[idx].set(v))
+        self.relay_decode = False
+        if ecfg.relay_decode:
+            if not (self.paged and chai_on and ecfg.prefix_cache):
+                raise ValueError(
+                    "relay_decode requires prefix_cache on the paged "
+                    "layout with CHAI enabled (the relay groups STEADY "
+                    "slots by their locked radix chain)")
+            self.relay_decode = True
+            # One jit; jax retraces per relay signature (G, Nmax, Sp) —
+            # group shapes recur across steps so the trace cache holds.
+            self._relay_step = jax.jit(
+                steps_mod.make_relay_step(cfg, decode_ts=ecfg.page_size),
+                donate_argnums=(2,))
 
     # -- public API --------------------------------------------------------
     def default_sampling(self) -> SamplingParams:
@@ -1034,6 +1078,7 @@ class EngineCore(CohortSchedulerMixin):
             dev_ctx = {k: jnp.asarray(v) for k, v in snap.ctx.items()}
             self._dev_ctx = self._set_ctx(self._dev_ctx, dev_ctx,
                                           jnp.int32(i))
+            self._ctx_version += 1
             req.generated.extend(snap.tokens)
             req.cache_hit = "snapshot"
             req.cached_tokens = len(req.prompt)
@@ -1188,6 +1233,7 @@ class EngineCore(CohortSchedulerMixin):
             dev_ctx = {k: jnp.asarray(v) for k, v in resume["ctx"].items()}
             self._dev_ctx = self._set_ctx(self._dev_ctx, dev_ctx,
                                           jnp.int32(i))
+            self._ctx_version += 1
         self._phases[i] = resume["phase"]
         self._slot_count[i] = resume["count"]
         self._next_tok[i] = req.generated[-1]
@@ -1277,6 +1323,7 @@ class EngineCore(CohortSchedulerMixin):
                 self._dev_state, self._dev_ctx = self._cluster_fn()(
                     self._dev_state, self._dev_ctx, jnp.int32(i),
                     kc_vec, vc_vec)
+                self._ctx_version += 1
                 if (self.prefix_cache is not None
                         and self.chai_clustered
                         and self._slot_req[i].sampling.greedy):
@@ -1290,7 +1337,224 @@ class EngineCore(CohortSchedulerMixin):
             else:
                 self._dev_state, self._dev_ctx = self._cluster_fn()(
                     self._dev_state, self._dev_ctx, jnp.int32(i))
+                self._ctx_version += 1
             self._phases[i] = chai_cache.PHASE_STEADY
+
+    # -- shared-prefix relay decode ----------------------------------------
+    def _ctx_host(self):
+        """np mirror of the clustering context, rebuilt only when the
+        ctx version moved (CLUSTER transition / snapshot restore /
+        preemption swap-in)."""
+        if (self._ctx_host_cache is None
+                or self._ctx_host_cache[0] != self._ctx_version):
+            self._ctx_host_cache = (
+                self._ctx_version,
+                {k: np.asarray(v) for k, v in self._dev_ctx.items()})
+        return self._ctx_host_cache[1]
+
+    def _pack_prefix_fn(self, n_pages):
+        """Jit that copies ``n_pages`` dense-pool prefix pages into a
+        contiguous ``(nG, rows, n_pages*page, hd)`` resident view (+ int8
+        scale planes). A copy, not an alias: relay steps donate the
+        state, and cached views must survive the buffer reuse."""
+        fn = self._pack_prefix.get(n_pages)
+        if fn is None:
+            def pack(state, kg, vg):
+                def view(bt):
+                    g = state["kvp"][:, bt]     # (nG, p0, rows, page, hd)
+                    ng, p, rows, page, hd = g.shape
+                    return (g.transpose(0, 2, 1, 3, 4)
+                            .reshape(ng, rows, p * page, hd))
+                out = {"k": view(kg), "v": view(vg)}
+                if state.get("kvp_scale") is not None:
+                    def sview(bt):
+                        sg = state["kvp_scale"][:, bt]
+                        ng, p, rows, page = sg.shape
+                        return (sg.transpose(0, 2, 1, 3)
+                                .reshape(ng, rows, p * page))
+                    out["k_scale"] = sview(kg)
+                    out["v_scale"] = sview(vg)
+                return out
+            fn = jax.jit(pack)
+            self._pack_prefix[n_pages] = fn
+        return fn
+
+    def _resident_view(self, chain):
+        """Packed resident copy of a radix chain's shared pages, cached
+        on the deepest node and keyed by the chain's page identity.
+        Prefix pages are immutable while cached (COW re-plans divergent
+        writers onto fresh pages; eviction flips ``node.evicted`` and
+        drops ``node.resident``), so the cache survives across steps."""
+        node = chain[-1]
+        key = (tuple(n.kg_page for n in chain),
+               tuple(n.vg_page for n in chain))
+        if node.resident is None or node.resident[0] != key:
+            fn = self._pack_prefix_fn(len(chain))
+            node.resident = (key, fn(self._dev_state,
+                                     jnp.asarray(key[0], jnp.int32),
+                                     jnp.asarray(key[1], jnp.int32)))
+        return node.resident[1]
+
+    def _relay_row_maps(self, groups, nmax):
+        """Per-layer kernel row maps for the grouped prefix pass (see
+        ``repro.core.chai_attention._relay_prefix_state`` for the layout
+        contract). Host numpy, cached per (ctx version, membership):
+        padded member entries keep index 0 — their rows compute garbage
+        the per-slot scatter discards."""
+        key = (self._ctx_version,
+               tuple((id(g["node"]), tuple(g["members"])) for g in groups))
+        if (self._relay_rows_cache is not None
+                and self._relay_rows_cache[0] == key):
+            return self._relay_rows_cache[1]
+        ctx = self._ctx_host()
+        cfg = self.cfg
+        G = len(groups)
+        if cfg.is_mha:
+            reps, h2c = ctx["reps"], ctx["h2c"]   # (nA,B,R), (nA,B,H)
+            nA, _, R = reps.shape
+            H = h2c.shape[-1]
+            share = cfg.chai.share_values
+            A = nmax * (R if share else H)
+            k_row = np.zeros((nA, G, nmax * R), np.int32)
+            a_row = np.zeros((nA, G, A), np.int32)
+            v_row = np.zeros((nA, G, A), np.int32)
+            for g, grp in enumerate(groups):
+                for j, slot in enumerate(grp["members"]):
+                    # Prefix K = the slot's rep rows gathered from the
+                    # chain's DENSE pages (bitwise == the clustered rows
+                    # the suffix pass reads: compaction is a gather).
+                    k_row[:, g, j * R:(j + 1) * R] = reps[:, slot]
+                    if share:
+                        # share_values: acc stays per-rep; V gathers the
+                        # rep's dense row (scale-less under int8 — the
+                        # codes were moved into cp, not requantized).
+                        a_row[:, g, j * R:(j + 1) * R] = \
+                            j * R + np.arange(R, dtype=np.int32)
+                        v_row[:, g, j * R:(j + 1) * R] = reps[:, slot]
+                    else:
+                        a_row[:, g, j * H:(j + 1) * H] = \
+                            j * R + h2c[:, slot]
+                        v_row[:, g, j * H:(j + 1) * H] = \
+                            np.arange(H, dtype=np.int32)
+        else:
+            reps = ctx["reps"]                  # (nA, B, KV, r)
+            cluster_of = ctx["cluster_of"]      # (nA, B, KV, qpk)
+            nA, _, n_kv, r = reps.shape
+            qpk = cluster_of.shape[-1]
+            H = n_kv * qpk
+            rt = n_kv * r
+            k_row = np.zeros((nA, G, nmax * rt), np.int32)
+            a_row = np.zeros((nA, G, nmax * H), np.int32)
+            v_row = np.zeros((nA, G, nmax * H), np.int32)
+            kv_of_rep = np.repeat(np.arange(n_kv, dtype=np.int32), r)
+            kv_of_head = np.repeat(np.arange(n_kv, dtype=np.int32), qpk)
+            for g, grp in enumerate(groups):
+                for j, slot in enumerate(grp["members"]):
+                    k_row[:, g, j * rt:(j + 1) * rt] = kv_of_rep
+                    h2c_flat = (np.arange(n_kv, dtype=np.int32)
+                                [None, :, None] * r
+                                + cluster_of[:, slot]).reshape(nA, H)
+                    a_row[:, g, j * H:(j + 1) * H] = j * rt + h2c_flat
+                    v_row[:, g, j * H:(j + 1) * H] = kv_of_head
+        maps = {"k_row": jnp.asarray(k_row), "a_row": jnp.asarray(a_row),
+                "v_row": jnp.asarray(v_row)}
+        self._relay_rows_cache = (key, maps)
+        return maps
+
+    def _build_relay(self, active):
+        """Form shared-prefix relay groups over the STEADY slots.
+
+        Slots admitted through the radix prefix cache keep their matched
+        chain pinned in ``_slot_locked``; each slot picks the DEEPEST
+        chain node shared by >= ``relay_min_group`` eligible slots, and
+        slots that picked the same node form one group. Returns the
+        relay dict consumed by ``make_relay_step`` (``None`` -> plain
+        phase-mix dispatch): group-batched resident prefix views + row
+        maps + per-slot scatter coords. Non-grouped slots ride along
+        with ``in_group=False`` / ``len=0`` — the merge identity keeps
+        them bitwise-identical to the non-relay path."""
+        from repro.core import chai_attention as chai_mod
+        from repro.serving.prefix_cache import BlockNode
+        if not chai_mod.USE_FUSED_DECODE:
+            return None       # jnp fallback attends full tables already
+        min_g = max(1, self.ecfg.relay_min_group)
+        chains = {}
+        for i in active:
+            if self._phases[i] != chai_cache.PHASE_STEADY:
+                continue
+            locked = self._slot_locked[i]
+            if not locked or not all(isinstance(e, BlockNode)
+                                     for e in locked):
+                continue      # snapshot pins / no radix plan
+            if any(e.evicted for e in locked):
+                continue      # chain lost pages since admission
+            chains[i] = locked
+        if len(chains) < min_g:
+            return None
+        counts: dict = {}
+        for chain in chains.values():
+            for node in chain:
+                counts[id(node)] = counts.get(id(node), 0) + 1
+        by_node: dict = {}
+        for i, chain in sorted(chains.items()):
+            pick = None
+            for depth, node in enumerate(chain, start=1):
+                if counts[id(node)] >= min_g:
+                    pick = (node, depth)        # deepest wins
+            if pick is None:
+                continue
+            node, depth = pick
+            grp = by_node.setdefault(
+                id(node), {"node": node, "depth": depth, "members": []})
+            grp["members"].append(i)
+        groups = [g for g in by_node.values()
+                  if len(g["members"]) >= min_g]
+        if not groups:
+            return None
+        ps = self.ecfg.page_size
+        b = self.ecfg.batch_slots
+        nmax = max(len(g["members"]) for g in groups)
+        packs = [self._resident_view(chains[g["members"][0]][:g["depth"]])
+                 for g in groups]
+        sp_max = max(p["k"].shape[2] for p in packs)
+
+        def stack(name):
+            arrs = []
+            for p in packs:
+                a = p[name]
+                pad = sp_max - a.shape[2]
+                if pad:     # zero tail; plen masks it in the kernel
+                    widths = [(0, 0)] * a.ndim
+                    widths[2] = (0, pad)
+                    a = jnp.pad(a, widths)
+                arrs.append(a)
+            return jnp.stack(arrs, axis=1)
+
+        relay = {"k": stack("k"), "v": stack("v")}
+        if "k_scale" in packs[0]:
+            relay["k_scale"] = stack("k_scale")
+            relay["v_scale"] = stack("v_scale")
+        members = np.zeros((len(groups), nmax), np.int32)
+        plen_g = np.zeros((len(groups),), np.int32)
+        gid = np.zeros((b,), np.int32)
+        midx = np.zeros((b,), np.int32)
+        plen_b = np.zeros((b,), np.int32)
+        ing = np.zeros((b,), bool)
+        for g, grp in enumerate(groups):
+            plen_g[g] = grp["depth"] * ps
+            for j, slot in enumerate(grp["members"]):
+                members[g, j] = slot
+                gid[slot] = g
+                midx[slot] = j
+                plen_b[slot] = plen_g[g]
+                ing[slot] = True
+        relay.update(self._relay_row_maps(groups, nmax))
+        relay.update({
+            "plen": jnp.asarray(plen_g), "members": jnp.asarray(members),
+            "gid": jnp.asarray(gid), "midx": jnp.asarray(midx),
+            "len": jnp.asarray(plen_b), "in_group": jnp.asarray(ing)})
+        self.relay_grouped_slots += int(ing.sum())
+        return relay
 
     def _decode(self, active) -> List[StepOutput]:
         """One batched decode step; host-dispatch the cheapest jit that
@@ -1306,7 +1570,12 @@ class EngineCore(CohortSchedulerMixin):
         inputs = {"tokens": self._next_tok_dev}
         occupied = self._phases[self._phases != chai_cache.PHASE_FREE]
         state = self._dev_state
-        if not self.chai_on:
+        relay = self._build_relay(active) if self.relay_decode else None
+        if relay is not None:
+            self.relay_steps += 1
+            logits, state = self._relay_step(self.params, inputs, state,
+                                             self._dev_ctx, relay)
+        elif not self.chai_on:
             logits, state = self._mha_step(self.params, inputs, state)
         elif (occupied == chai_cache.PHASE_STEADY).all():
             logits, state = self._chai_step(self.params, inputs, state,
@@ -1317,21 +1586,46 @@ class EngineCore(CohortSchedulerMixin):
             logits, state = self._mixed_step(self.params, inputs, state,
                                              self._dev_ctx)
         self._dev_state = state
-        if not self._samp_host["temperature"].any():
+        temps = self._samp_host["temperature"]
+        if not temps.any():
             tok_dev = self._argmax(logits)      # all-greedy fast path
         else:
-            if self._samp_dirty:
-                self._samp_dev = {k: jnp.asarray(v)
-                                  for k, v in self._samp_host.items()}
-                self._samp_dirty = False
             counts = np.zeros((b,), np.int32)
             for i in active:
                 counts[i] = len(self._slot_req[i].generated)
-            tok_dev = self._sampler(logits, self._samp_dev["temperature"],
-                                    self._samp_dev["top_k"],
-                                    self._samp_dev["top_p"],
-                                    self._samp_dev["seed"],
-                                    jnp.asarray(counts))
+            rows = np.nonzero(temps > 0.0)[0]
+            nb = 1 << (len(rows) - 1).bit_length()
+            if nb < b:
+                # Mixed batch: greedy slots skip the sampling lane
+                # (argsort + softmax + PRNG) entirely — the sampler runs
+                # on a gathered power-of-two sub-batch of the sampling
+                # rows, scattered over the batched argmax. Bitwise-
+                # identical to the full sampler: each row's draw depends
+                # only on that row's (logits, params, seed, count), and
+                # greedy rows argmax the same raw f32 logits either way.
+                idx = np.full((nb,), rows[0], np.int32)   # pad: dup row0
+                idx[:len(rows)] = rows
+                idx_dev = jnp.asarray(idx)
+                drawn = self._sampler(
+                    self._take_rows(logits, idx_dev),
+                    jnp.asarray(temps[idx]),
+                    jnp.asarray(self._samp_host["top_k"][idx]),
+                    jnp.asarray(self._samp_host["top_p"][idx]),
+                    jnp.asarray(self._samp_host["seed"][idx]),
+                    jnp.asarray(counts[idx]))
+                tok_dev = self._put_rows(self._argmax(logits), idx_dev,
+                                         drawn)
+            else:
+                if self._samp_dirty:
+                    self._samp_dev = {k: jnp.asarray(v)
+                                      for k, v in self._samp_host.items()}
+                    self._samp_dirty = False
+                tok_dev = self._sampler(logits,
+                                        self._samp_dev["temperature"],
+                                        self._samp_dev["top_k"],
+                                        self._samp_dev["top_p"],
+                                        self._samp_dev["seed"],
+                                        jnp.asarray(counts))
         self._next_tok_dev = tok_dev
         toks = np.asarray(tok_dev)
         self._next_tok[:] = toks

@@ -73,10 +73,28 @@ class BlockNode:
     children: Dict[Tuple[int, ...], "BlockNode"] = \
         dataclasses.field(default_factory=dict)
     locks: int = 0                 # active slots aliasing this node
+    # Relay decode (engine-owned): ``resident`` caches a packed
+    # contiguous copy of the chain's prefix pages, keyed by the page
+    # lists it was built from; ``evicted`` marks a node dropped from the
+    # tree so in-flight relay groups referencing it stop re-forming
+    # (slots still hold their own page references — only the shared
+    # resident view dies with the node).
+    resident: Optional[tuple] = None
+    evicted: bool = False
 
     @property
     def is_leaf(self):
         return not self.children
+
+    def chain(self) -> List["BlockNode"]:
+        """Root-first list of nodes from the root (exclusive) to here."""
+        out: List[BlockNode] = []
+        node = self
+        while node is not None and node.parent is not None:
+            out.append(node)
+            node = node.parent
+        out.reverse()
+        return out
 
 
 @dataclasses.dataclass
@@ -284,6 +302,8 @@ class PrefixCache:
             self.stats["evicted_snapshots"] += 1
         else:
             victim.parent.children.pop(victim.key)
+            victim.evicted = True
+            victim.resident = None
             self.dense_pool.free([victim.kg_page])
             self.dense_pool.free([victim.vg_page])
             self.stats["evicted_blocks"] += 1
