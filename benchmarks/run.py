@@ -29,6 +29,7 @@ BENCHES = {
     "bench_latency": "Fig 12 + scheduler / fused-kernel / prefix_reuse "
                      "lanes",
     "bench_cluster_dist": "Fig 13 (cluster size distribution)",
+    "bench_fault_soak": "robustness lane (seeded fault soak, deep audit)",
 }
 
 

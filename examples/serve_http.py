@@ -3,7 +3,7 @@
 POST /v1/completions with a JSON body::
 
     {"prompt": [3, 14, 15, 9], "max_tokens": 16, "temperature": 0.0,
-     "stream": false, "priority": 0}
+     "stream": false, "priority": 0, "timeout_s": 0}
 
 ``prompt`` is a list of token ids (this repo ships no tokenizer; the
 demo detokenizer renders ids as space-joined integers). Non-streaming
@@ -11,6 +11,24 @@ requests get one JSON object; ``"stream": true`` gets Server-Sent
 Events (``data: {...}\\n\\n`` per chunk, ``data: [DONE]`` at the end),
 each chunk carrying the tokens that step produced. GET /v1/stats
 returns engine counters (steps, preemptions, pool occupancy).
+
+The serving tier's typed failure taxonomy maps onto HTTP status codes:
+
+=====  =====================================================
+400    ``ValidationError`` / malformed body — the request
+       itself is wrong (never admitted, nothing to clean up)
+408    per-request wall-clock ``timeout_s`` expired — the
+       request is ABORTED engine-side (pages returned) and
+       the partial tokens are returned with
+       ``finish_reason="timeout"``
+429    ``CapacityError`` — the request can never fit the
+       page pool; retry smaller or elsewhere
+500    quarantine (``finish_reason="error"`` terminal chunk
+       or a raised ``QuarantineError``) — ONE request was
+       typed-failed mid-flight; the batch keeps serving
+503    ``EngineFault`` / dead driver — the engine itself is
+       suspect; every stream gets this until restart
+=====  =====================================================
 
 Because the server rides ``AsyncLLM``, every connection shares ONE
 continuous batch: concurrent requests are co-scheduled by the engine's
@@ -30,6 +48,7 @@ import argparse
 import asyncio
 import json
 import sys
+import time
 
 import numpy as np
 
@@ -39,19 +58,39 @@ from repro.configs.base import get_config, reduced
 from repro.models import transformer as tfm
 from repro.serving.async_api import AsyncLLM
 from repro.serving.engine import EngineConfig
-from repro.serving.sampling import SamplingParams
+from repro.serving.faults import (CapacityError, EngineFault, RequestError,
+                                  ValidationError)
+from repro.serving.sampling import FINISH_ERROR, SamplingParams
 
 
-def build_llm(arch: str = "chai-llama-7b") -> AsyncLLM:
-    """A tiny demo model (random weights) behind a full serving stack."""
+def build_llm(arch: str = "chai-llama-7b", *, faults=None) -> AsyncLLM:
+    """A tiny demo model (random weights) behind a full serving stack.
+
+    ``num_pages`` is deliberately smaller than the auto worst case so an
+    oversized (but max_seq-legal) request hits the page-budget
+    ``CapacityError`` -> 429 path instead of being admissible always."""
     cfg = reduced(get_config(arch), n_layers=2, d_model=64, d_ff=128,
                   vocab=256).replace(dtype="float32")
     cfg = cfg.with_chai(enabled=True, warmup_tokens=8)
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
     ecfg = EngineConfig(batch_slots=4, max_seq=256, page_size=16,
-                        prefix_cache=True, prefill_chunk_tokens=32)
+                        prefix_cache=True, prefill_chunk_tokens=32,
+                        num_pages=17)       # 16 usable = 128 tokens/req
     detok = lambda ids: " ".join(map(str, ids))
-    return AsyncLLM(cfg, params, ecfg, detokenizer=detok)
+    return AsyncLLM(cfg, params, ecfg, detokenizer=detok, faults=faults)
+
+
+def _code_of(err: BaseException) -> int:
+    """Typed failure taxonomy -> HTTP status (see module docstring)."""
+    if isinstance(err, CapacityError):
+        return 429
+    if isinstance(err, (ValidationError, ValueError, KeyError, TypeError)):
+        return 400
+    if isinstance(err, RequestError):
+        return 500                          # quarantined mid-flight
+    if isinstance(err, (EngineFault, RuntimeError)):
+        return 503                          # engine/driver is suspect
+    return 500
 
 
 def _params_of(body: dict) -> SamplingParams:
@@ -84,7 +123,8 @@ async def _read_request(reader) -> tuple:
 def _response(code: int, payload: bytes, ctype: str = "application/json",
               extra: str = "") -> bytes:
     reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
-              503: "Service Unavailable"}[code]
+              408: "Request Timeout", 429: "Too Many Requests",
+              500: "Internal Server Error", 503: "Service Unavailable"}[code]
     return (f"HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\n"
             f"Content-Length: {len(payload)}\r\nConnection: close\r\n"
             f"{extra}\r\n").encode("latin1") + payload
@@ -108,9 +148,10 @@ class Server:
         except (asyncio.IncompleteReadError, ConnectionResetError):
             pass
         except Exception as err:  # noqa: BLE001 — report, keep serving
-            msg = json.dumps({"error": str(err)}).encode()
+            msg = json.dumps({"error": str(err),
+                              "type": type(err).__name__}).encode()
             try:
-                writer.write(_response(400, msg))
+                writer.write(_response(_code_of(err), msg))
             except Exception:   # noqa: BLE001
                 pass
         finally:
@@ -131,9 +172,12 @@ class Server:
 
     async def _completions(self, writer, raw: bytes):
         body = json.loads(raw or b"{}")
+        if "prompt" not in body:
+            raise ValidationError("body is missing 'prompt'")
         prompt = np.asarray(body["prompt"], np.int32)
         sp = _params_of(body)
         priority = int(body.get("priority", 0))
+        timeout_s = float(body.get("timeout_s", 0) or 0)
         if body.get("stream"):
             head = ("HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n"
                     "Cache-Control: no-cache\r\nConnection: close\r\n\r\n")
@@ -147,13 +191,50 @@ class Server:
                 writer.write(f"data: {json.dumps(data)}\n\n".encode())
                 await writer.drain()
             writer.write(b"data: [DONE]\n\n")
-        else:
-            out = await self.llm.generate(prompt, sp, priority=priority)
-            payload = {"tokens": out.token_ids, "text": out.text,
-                       "finish_reason": out.finish_reason,
-                       "cached_tokens": out.cached_tokens,
-                       "prefill_tokens": out.prefill_tokens}
-            writer.write(_response(200, json.dumps(payload).encode()))
+            return
+        tokens, finish, timed_out = await self._collect(
+            prompt, sp, priority, timeout_s)
+        if timed_out:
+            payload = {"tokens": tokens, "finish_reason": "timeout",
+                       "error": f"request exceeded timeout_s={timeout_s}"}
+            writer.write(_response(408, json.dumps(payload).encode()))
+            return
+        code = 500 if finish == FINISH_ERROR else 200
+        payload = {"tokens": tokens, "finish_reason": finish}
+        if code == 200:
+            payload["text"] = self.llm.core.detokenizer(tokens) \
+                if self.llm.core.detokenizer else ""
+        writer.write(_response(code, json.dumps(payload).encode()))
+
+    async def _collect(self, prompt, sp, priority, timeout_s):
+        """Drain one request's stream under an optional wall-clock
+        deadline. On expiry the stream generator is closed, which aborts
+        the request ENGINE-side (its pages return refcount-exactly) —
+        the partial tokens are still returned to the client."""
+        tokens, finish = [], None
+        deadline = time.monotonic() + timeout_s if timeout_s > 0 else None
+        agen = self.llm.stream(prompt, sp, priority=priority)
+        try:
+            while True:
+                if deadline is None:
+                    chunk = await agen.__anext__()
+                else:
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        return tokens, finish, True
+                    try:
+                        chunk = await asyncio.wait_for(agen.__anext__(),
+                                                       left)
+                    except asyncio.TimeoutError:
+                        return tokens, finish, True
+                tokens.extend(chunk.token_ids)
+                finish = chunk.finish_reason
+                if chunk.finished:
+                    return tokens, finish, False
+        except StopAsyncIteration:          # defensive: stream drained
+            return tokens, finish, False
+        finally:
+            await agen.aclose()             # no-op if already finished
 
 
 async def serve(host: str, port: int, llm=None, ready=None):
@@ -169,7 +250,8 @@ async def serve(host: str, port: int, llm=None, ready=None):
             await server.serve_forever()
 
 
-async def _client(host, port, body) -> dict:
+async def _client(host, port, body) -> tuple:
+    """POST /v1/completions; returns (status_code, parsed body)."""
     reader, writer = await asyncio.open_connection(host, port)
     payload = json.dumps(body).encode()
     writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n"
@@ -180,11 +262,12 @@ async def _client(host, port, body) -> dict:
     data = await reader.read()
     writer.close()
     head, _, tail = data.partition(b"\r\n\r\n")
+    code = int(head.split(b" ", 2)[1])
     if b"text/event-stream" in head:
         chunks = [json.loads(ln[6:]) for ln in tail.split(b"\n")
                   if ln.startswith(b"data: ") and b"[DONE]" not in ln]
-        return {"stream": chunks}
-    return json.loads(tail)
+        return code, {"stream": chunks}
+    return code, json.loads(tail)
 
 
 async def selftest(port: int = 8181):
@@ -194,22 +277,69 @@ async def selftest(port: int = 8181):
     await ready
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, 256, size=24).tolist()
-    out = await _client("127.0.0.1", port,
-                        {"prompt": prompt, "max_tokens": 8})
-    assert len(out["tokens"]) == 8, out
-    srm = await _client("127.0.0.1", port,
-                        {"prompt": prompt, "max_tokens": 8,
-                         "stream": True})
+    code, out = await _client("127.0.0.1", port,
+                              {"prompt": prompt, "max_tokens": 8})
+    assert code == 200 and len(out["tokens"]) == 8, (code, out)
+    code, srm = await _client("127.0.0.1", port,
+                              {"prompt": prompt, "max_tokens": 8,
+                               "stream": True})
     got = [t for c in srm["stream"] for t in c["tokens"]]
-    assert got == out["tokens"], (got, out)
+    assert code == 200 and got == out["tokens"], (got, out)
     both = await asyncio.gather(
         _client("127.0.0.1", port, {"prompt": prompt, "max_tokens": 8}),
         _client("127.0.0.1", port,
                 {"prompt": rng.integers(0, 256, size=16).tolist(),
                  "max_tokens": 8, "priority": 1}))
-    assert both[0]["tokens"] == out["tokens"]
+    assert both[0][0] == 200 and both[0][1]["tokens"] == out["tokens"]
+
+    # -- typed failures -> HTTP codes -----------------------------------
+    # 400: malformed (no prompt) and ValidationError (exceeds max_seq)
+    code, body = await _client("127.0.0.1", port, {"max_tokens": 4})
+    assert code == 400, (code, body)
+    code, body = await _client("127.0.0.1", port,
+                               {"prompt": prompt, "max_tokens": 300})
+    assert code == 400 and body["type"] == "ValidationError", (code, body)
+    # 429: legal length but can never fit the (deliberately small) pool
+    code, body = await _client(
+        "127.0.0.1", port,
+        {"prompt": rng.integers(0, 256, size=150).tolist(),
+         "max_tokens": 8})
+    assert code == 429 and body["type"] == "CapacityError", (code, body)
+    # 408: wall-clock timeout aborts engine-side, returns partial tokens
+    code, body = await _client("127.0.0.1", port,
+                               {"prompt": prompt, "max_tokens": 64,
+                                "timeout_s": 0.15})
+    assert code == 408 and body["finish_reason"] == "timeout", (code, body)
+    assert len(body["tokens"]) < 64, body
+    # the engine kept serving through all of the above
+    code, out2 = await _client("127.0.0.1", port,
+                               {"prompt": prompt, "max_tokens": 8})
+    assert code == 200 and out2["tokens"] == out["tokens"], (code, out2)
     print("selftest OK:", out["tokens"])
     task.cancel()
+
+    # -- quarantine (500) and dead driver (503) on a faulted instance ---
+    from repro.serving.faults import FaultInjector, FaultSpec
+    llm2 = build_llm(faults=FaultInjector(
+        [FaultSpec("step.logits", mode="nan", count=1)]))
+    ready2 = loop.create_future()
+    task2 = loop.create_task(
+        serve("127.0.0.1", port + 1, llm=llm2, ready=ready2))
+    await ready2
+    code, body = await _client("127.0.0.1", port + 1,
+                               {"prompt": prompt, "max_tokens": 8})
+    assert code == 500 and body["finish_reason"] == "error", (code, body)
+
+    def _dead_step():
+        raise RuntimeError("injected persistent engine failure")
+    llm2.core.step = _dead_step
+    code, body = await _client("127.0.0.1", port + 1,
+                               {"prompt": prompt, "max_tokens": 8})
+    assert code == 503, (code, body)
+    if llm2._driver is not None and llm2._driver.done():
+        llm2._driver.exception()        # retrieve: silence the task log
+    print("failure-model selftest OK (400/408/429/500/503)")
+    task2.cancel()
 
 
 def main(argv=None):

@@ -1,5 +1,9 @@
 from repro.serving.api import LLM, RequestOutput, Session  # noqa: F401
 from repro.serving.engine import (EngineConfig, EngineCore,  # noqa: F401
                                   Request, ServingEngine, StepOutput)
+from repro.serving.faults import (CapacityError,  # noqa: F401
+                                  EngineFault, FaultInjector, FaultSpec,
+                                  QuarantineError, RequestError,
+                                  SnapshotRestoreError, ValidationError)
 from repro.serving.prefix_cache import ChaiSnapshot, PrefixCache  # noqa: F401
 from repro.serving.sampling import SamplingParams  # noqa: F401

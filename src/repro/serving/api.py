@@ -66,7 +66,8 @@ class LLM:
     """
 
     def __init__(self, cfg, params, ecfg: Optional[EngineConfig] = None, *,
-                 detokenizer: Optional[Callable] = None, **ecfg_kw):
+                 detokenizer: Optional[Callable] = None, faults=None,
+                 **ecfg_kw):
         if ecfg is None:
             ecfg = EngineConfig(**ecfg_kw)
         elif ecfg_kw:
@@ -76,7 +77,8 @@ class LLM:
             raise ValueError("LLM drives EngineCore.step(): continuous "
                              "scheduler only (use ServingEngine for the "
                              "legacy cohort path)")
-        self.core = EngineCore(cfg, params, ecfg, detokenizer=detokenizer)
+        self.core = EngineCore(cfg, params, ecfg, detokenizer=detokenizer,
+                               faults=faults)
         self.detokenizer = detokenizer
 
     # -- driving -----------------------------------------------------------

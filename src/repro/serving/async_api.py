@@ -20,10 +20,20 @@ Lifecycle of a request:
 * ``abort(uid)`` cancels the request on the engine (pages return
   refcount-exactly) and pushes the empty terminal chunk itself — the
   engine's abort emits no StepOutput of its own.
-* A ``MemoryError`` from ``step()`` (queue head can never fit) is
-  routed to THAT request's queue and re-raised from its coroutine; the
-  driver and every other request keep running. Any other driver error
-  is broadcast to all open queues and re-raised everywhere.
+
+The driver is SUPERVISED (failure taxonomy in ``repro.serving.faults``):
+
+* A ``RequestError`` from ``step()`` is routed to the named request's
+  queue (or the queue head's, for a legacy bare ``MemoryError``) and
+  re-raised from that coroutine; the driver and every other request
+  keep running. Engine-side quarantines never even raise — they arrive
+  as ordinary terminal chunks with ``finish_reason="error"``.
+* Any other ``Exception`` from ``step()`` is retried with bounded
+  exponential backoff (``max_restarts``); only when retries run out is
+  it escalated to an ``EngineFault``.
+* An ``EngineFault`` (invariant breach, exhausted retries, a
+  ``MemoryError`` with no queue head to blame) is broadcast to ALL open
+  queues and kills the driver — the engine state itself is suspect.
 
 ``AsyncLLM`` assumes it is the only frontend driving its core (uids are
 chosen by the AsyncLLM side; mixing with direct ``core.add_request``
@@ -39,6 +49,7 @@ from typing import AsyncIterator, Callable, Optional
 from repro.serving.api import RequestOutput
 from repro.serving.engine import (EngineConfig, EngineCore, Request,
                                   StepOutput)
+from repro.serving.faults import EngineFault, FaultInjector, RequestError
 from repro.serving.sampling import FINISH_ABORT, SamplingParams
 
 
@@ -54,7 +65,10 @@ class AsyncLLM:
     """
 
     def __init__(self, cfg, params, ecfg: Optional[EngineConfig] = None, *,
-                 detokenizer: Optional[Callable] = None, **ecfg_kw):
+                 detokenizer: Optional[Callable] = None,
+                 faults: Optional[FaultInjector] = None,
+                 max_restarts: int = 3,
+                 restart_backoff: float = 0.05, **ecfg_kw):
         if ecfg is None:
             ecfg = EngineConfig(**ecfg_kw)
         elif ecfg_kw:
@@ -63,7 +77,11 @@ class AsyncLLM:
         if ecfg.scheduler != "continuous":
             raise ValueError("AsyncLLM drives EngineCore.step(): "
                              "continuous scheduler only")
-        self.core = EngineCore(cfg, params, ecfg, detokenizer=detokenizer)
+        self.core = EngineCore(cfg, params, ecfg, detokenizer=detokenizer,
+                               faults=faults)
+        self._max_restarts = int(max_restarts)
+        self._restart_backoff = float(restart_backoff)
+        self.restarts = 0                 # cumulative supervised retries
         self.detokenizer = detokenizer
         self._exec = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="engine")
@@ -101,14 +119,39 @@ class AsyncLLM:
 
     async def _drive_forever(self):
         core = self.core
+        retries = 0
         try:
             while True:
                 self._wake.clear()
                 try:
                     outs, active, arrival = await self._call(
                         self._step_once)
-                except MemoryError as err:
+                    retries = 0
+                except EngineFault:
+                    raise          # engine state suspect: broadcast + die
+                except RequestError as err:
+                    # Request-isolatable: fail THAT request, keep serving.
+                    if err.uid is not None:
+                        await self._fail_uid(err.uid, err)
+                    elif isinstance(err, MemoryError):
+                        await self._fail_head(err)
+                    else:
+                        raise EngineFault(
+                            "request-isolatable failure named no "
+                            f"request: {err!r}") from err
+                    continue
+                except MemoryError as err:    # legacy bare page-budget
                     await self._fail_head(err)
+                    continue
+                except Exception as err:      # noqa: BLE001 — supervised
+                    retries += 1
+                    self.restarts += 1
+                    if retries > self._max_restarts:
+                        raise EngineFault(
+                            f"driver exhausted {self._max_restarts} step "
+                            f"retries; last failure: {err!r}") from err
+                    await asyncio.sleep(
+                        self._restart_backoff * (1 << (retries - 1)))
                     continue
                 for out in outs:
                     q = self._queues.get(out.uid)
@@ -141,23 +184,35 @@ class AsyncLLM:
             self._queues.clear()
             raise
 
-    async def _fail_head(self, err: MemoryError):
-        """step() proved the queue head can never fit: fail THAT request
-        and keep serving the rest."""
-        def _abort_head():
-            if not self.core.queue:
-                return None
-            uid = self.core.queue[0].uid
+    async def _fail_uid(self, uid, err: BaseException):
+        """Typed-fail ONE request: abort it on the engine and deliver the
+        error to its stream; the driver and every other request keep
+        running."""
+        def _abort():
             self.core.abort(uid)
             self.core.reap_done()
-            return uid
 
-        uid = await self._call(_abort_head)
-        if uid is None:
-            raise err                      # no head? genuine engine fault
+        await self._call(_abort)
         q = self._queues.pop(uid, None)
         if q is not None:
             q.put_nowait(err)
+
+    async def _fail_head(self, err: MemoryError):
+        """step() proved the queue head can never fit: fail THAT request
+        and keep serving the rest. A MemoryError with NO queue head
+        cannot be pinned on a request — the allocator state itself is
+        suspect, so escalate to an EngineFault (broadcast by the
+        driver's outer handler) instead of dying opaquely."""
+        def _head_uid():
+            return self.core.queue[0].uid if self.core.queue else None
+
+        uid = await self._call(_head_uid)
+        if uid is None:
+            raise EngineFault(
+                "step() raised MemoryError with no queue head to "
+                f"attribute it to — allocator state is suspect: {err}"
+            ) from err
+        await self._fail_uid(uid, err)
 
     # -- submission --------------------------------------------------------
     async def _submit(self, prompt, params, max_new_tokens, priority):

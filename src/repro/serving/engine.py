@@ -99,8 +99,14 @@ from repro.configs.base import ModelConfig
 from repro.core import cache as chai_cache
 from repro.core import clustering
 from repro.launch import steps as steps_mod
+from repro.serving import faults as faults_mod
+from repro.serving import invariants as invariants_mod
 from repro.serving import sampling as sampling_mod
 from repro.serving.cohort import CohortSchedulerMixin
+from repro.serving.faults import (CapacityError, EngineFault, FaultInjector,
+                                  InjectedFault, QuarantineError,
+                                  RequestError, SnapshotRestoreError,
+                                  ValidationError)
 from repro.serving.sampling import SamplingParams
 
 
@@ -127,6 +133,9 @@ class Request:                         # abort() membership-test Requests
     cache_hit: str = ""                # "" | "prefix" | "snapshot" | "replay"
     cached_tokens: int = 0             # prompt tokens served from cache
     prefill_tokens: int = -1           # tokens actually forwarded (prefill)
+    # -- failure taxonomy --
+    error: str = ""                    # quarantine message when
+    #                                    finish_reason == "error"
     # -- preemption --
     preemptions: int = 0               # times this request lost its slot
     # Host-swapped slot state (phase/count, per-slot columns, page
@@ -228,6 +237,14 @@ class EngineConfig:
     # stay BITWISE identical to relay_decode=False.
     relay_decode: bool = False
     relay_min_group: int = 2       # smallest group worth a prefix pass
+    # -- runtime self-checks (serving/invariants.py) --------------------
+    # "basic" (default): cheap host-side checks after every step() —
+    # pool conservation, refcount accounting, phase legality, cache
+    # lock/residency consistency. "deep": additionally pull the device
+    # block tables + phase vector and verify them against the host
+    # bookkeeping. "off": no auditing (benchmark hot loops). A failed
+    # audit raises EngineFault (the engine state itself is suspect).
+    audit_level: str = "basic"     # "off" | "basic" | "deep"
 
 
 class EngineCore(CohortSchedulerMixin):
@@ -238,15 +255,29 @@ class EngineCore(CohortSchedulerMixin):
     """
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, *,
-                 detokenizer: Optional[Callable] = None):
+                 detokenizer: Optional[Callable] = None,
+                 faults: Optional[FaultInjector] = None):
         assert cfg.n_attn_layers > 0 or not ecfg.use_chai, \
             "CHAI needs attention layers"
         assert ecfg.scheduler in ("continuous", "cohort"), ecfg.scheduler
         assert ecfg.kv_layout in ("paged", "dense"), ecfg.kv_layout
+        if ecfg.audit_level not in ("off", "basic", "deep"):
+            raise ValueError(f"audit_level must be off|basic|deep, "
+                             f"got {ecfg.audit_level!r}")
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.detokenizer = detokenizer
+        # -- fault containment / robustness --------------------------------
+        self.faults = faults           # None = no injection sites active
+        self.quarantined = 0           # requests typed-failed ("error")
+        self.audit_steps = 0           # step()s that ran the auditor
+        self.degraded_decode = False   # fused/relay path failed: jnp now
+        self.decode_fallbacks = 0      # kernel-path failures survived
+        self.relay_dissolved = 0       # relay groups dissolved by fault
+        self.swap_checksum_failures = 0
+        self._jnp_steps = None         # lazily-built degraded decode jits
+        self._fault_blocked = False    # last plan blocked by injection
         self.queue: deque = deque()
         self.done: List[Request] = []
         self.redispatched = 0
@@ -353,6 +384,11 @@ class EngineCore(CohortSchedulerMixin):
         # greedy lane (both argmax the raw f32 logits).
         self._argmax = jax.jit(
             lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        # Always-on NaN/Inf logits guard: one reduction per row — a
+        # non-finite row quarantines ITS slot; decode rows are
+        # independent, so the others are bitwise-untouched.
+        self._finite_rows = jax.jit(
+            lambda lg: jnp.isfinite(jnp.max(lg, axis=-1)))
         self._mha_step = jax.jit(
             steps_mod.make_serve_step(cfg, chai=False,
                                       decode_ts=ecfg.page_size),
@@ -442,14 +478,15 @@ class EngineCore(CohortSchedulerMixin):
         max_new = (max_new_tokens if max_new_tokens is not None
                    else sp.max_new_tokens)
         if len(prompt) + max_new > self.ecfg.max_seq:
-            raise ValueError(
+            raise ValidationError(
                 f"prompt ({len(prompt)}) + max_new_tokens "
                 f"({max_new}) exceeds max_seq "
                 f"({self.ecfg.max_seq}): the KV capacity (dense slot or "
-                f"page budget) cannot hold the request")
+                f"page budget) cannot hold the request", uid=uid)
         if sp.stop and self.detokenizer is None:
-            raise ValueError("SamplingParams.stop strings need an engine "
-                             "detokenizer (EngineCore(detokenizer=...))")
+            raise ValidationError(
+                "SamplingParams.stop strings need an engine "
+                "detokenizer (EngineCore(detokenizer=...))", uid=uid)
         if uid is None:
             uid = self._uid_counter
         self._uid_counter = max(self._uid_counter, int(uid) + 1)
@@ -526,8 +563,28 @@ class EngineCore(CohortSchedulerMixin):
         request that emitted tokens. Non-blocking: with no admissible
         work it returns ``[]`` (use ``next_arrival()`` to wait); with the
         engine idle and the queue head unserviceable even after draining
-        the prefix cache, raises ``MemoryError`` exactly like the
-        page-budget gate always has."""
+        the prefix cache, raises ``CapacityError`` (a ``MemoryError``,
+        exactly like the page-budget gate always has, now carrying the
+        uid). Request-isolatable failures (injected faults, swap-in
+        corruption, non-finite logits) never raise: the offending
+        request is QUARANTINED — typed ``StepOutput`` with
+        ``finish_reason="error"``, pages released refcount-exactly — and
+        the batch keeps running. ``EngineConfig.audit_level`` gates an
+        invariant audit after the iteration; a violation raises
+        ``EngineFault``."""
+        outs = self._step_inner()
+        if self.ecfg.audit_level != "off" \
+                and self.ecfg.scheduler == "continuous":
+            self.audit_steps += 1
+            vio = invariants_mod.audit(
+                self, deep=self.ecfg.audit_level == "deep")
+            if vio:
+                raise EngineFault(
+                    f"invariant audit failed at step "
+                    f"{self.steps_executed}", violations=vio)
+        return outs
+
+    def _step_inner(self) -> List[StepOutput]:
         if self.ecfg.scheduler != "continuous":
             raise RuntimeError("step() drives the continuous scheduler; "
                                "cohort engines run via run()")
@@ -535,6 +592,7 @@ class EngineCore(CohortSchedulerMixin):
         self._ensure_dev_state()
         b = self.ecfg.batch_slots
         drained = False
+        self._fault_blocked = False
         self._advance_prefills(outs)
         while True:
             blocked = self._admit(outs)
@@ -547,6 +605,8 @@ class EngineCore(CohortSchedulerMixin):
                 return outs        # only mid-prefill slots: progress made
             if not self.queue or not blocked:
                 return outs        # idle, or waiting on future arrivals
+            if self._fault_blocked:
+                return outs        # injected transient: retry next step
             # The failed plan ran with the engine idle (no retire can
             # intervene between the attempt and here). Drain the prefix
             # cache and retry once — only if even an empty cache cannot
@@ -560,18 +620,57 @@ class EngineCore(CohortSchedulerMixin):
             head = self.queue[0]
             n = self._pages_for(head)
             if self.dense_pool.free_pages < 2 * n:
-                raise MemoryError(
+                raise CapacityError(
                     f"request uid={head.uid} needs {2 * n} "
                     f"dense pages; pool capacity "
-                    f"{self.dense_pool.capacity}")
+                    f"{self.dense_pool.capacity}", uid=head.uid)
             share = 2 if self.cfg.chai.share_values else 1
-            raise MemoryError(
+            raise CapacityError(
                 f"request uid={head.uid} needs {n * share} "
                 f"clustered pages; pool capacity "
-                f"{self.chai_pool.capacity}")
+                f"{self.chai_pool.capacity}", uid=head.uid)
         self._cluster_transitions(active)
         outs.extend(self._decode(active))
         return outs
+
+    # -- fault injection / quarantine --------------------------------------
+    def _fault(self, site: str, uid: int = -1):
+        """Consult the fault injector at a named site; None when no
+        injector is armed or nothing fires."""
+        if self.faults is None:
+            return None
+        return self.faults.fire(site, step=self.steps_executed, uid=uid)
+
+    def _quarantine_queued(self, req: Request, err: RequestError,
+                           outs: List[StepOutput]):
+        """Typed-fail a request that is still queued (or was just popped):
+        no device state to unwind — record the error and finish it."""
+        if req in self.queue:
+            self.queue.remove(req)
+        req.finish_reason = sampling_mod.FINISH_ERROR
+        req.error = str(err)
+        req.t_done = time.time()
+        req.retire_step = self.steps_executed
+        self.quarantined += 1
+        self._done(req)
+        outs.append(StepOutput(req.uid, [], True,
+                               sampling_mod.FINISH_ERROR))
+
+    def _abort_admission(self, i: int, req: Request, gen0: int,
+                         hit0: tuple):
+        """Unwind a failed ``_admit_to_slot``: free the plan's pages and
+        locks refcount-exactly, reset the slot on device, and rewind the
+        request's progress records to their pre-admission values."""
+        self._slot_prefill_state[i] = None
+        self._phases[i] = chai_cache.PHASE_FREE
+        self._slot_count[i] = 0
+        self._dev_state = self._reset_slot(self._dev_state, jnp.int32(i))
+        self._free_pages(self._slot_pages[i])
+        if self._slot_locked[i]:
+            self.prefix_cache.unlock(self._slot_locked[i])
+            self._slot_locked[i] = []
+        req.generated = req.generated[:gen0]
+        req.cache_hit, req.cached_tokens, req.prefill_tokens = hit0
 
     # -- continuous scheduler ----------------------------------------------
     @staticmethod
@@ -775,6 +874,14 @@ class EngineCore(CohortSchedulerMixin):
         is handled by the admit loop before planning. Preempted requests
         (``resume_state`` set) take the swap-in plan instead: fresh pages
         matching what the slot held, restored bitwise — no prefill."""
+        spec = self._fault("pool.alloc", uid=req.uid)
+        if spec is not None:
+            if spec.mode == "error":
+                raise QuarantineError(
+                    f"injected allocator failure for uid={req.uid}",
+                    uid=req.uid)
+            self._fault_blocked = True
+            return None     # transient: the plan retries next step
         cache = self.prefix_cache
         if req.resume_state is not None:
             return self._plan_swap_in(req)
@@ -1025,17 +1132,37 @@ class EngineCore(CohortSchedulerMixin):
                 break
             if not free_slots:      # preemption just freed a slot
                 continue
-            plan = (self._plan_admission(head) if self.paged
-                    else {"kind": "cold", "pages": {}, "locked": []})
+            try:
+                plan = (self._plan_admission(head) if self.paged
+                        else {"kind": "cold", "pages": {}, "locked": []})
+            except RequestError as err:
+                self._quarantine_queued(head, err, outs)
+                continue
             if plan is None:        # FIFO holds until pages free up
-                if self._try_preempt(head):
+                if not self._fault_blocked and self._try_preempt(head):
                     continue        # pages reclaimed — retry the plan
                 blocked = True
                 break
             i = free_slots[0]
             req = self.queue.popleft()
             resumed = bool(req.generated)
-            self._admit_to_slot(i, req, plan)
+            gen0 = len(req.generated)
+            hit0 = (req.cache_hit, req.cached_tokens, req.prefill_tokens)
+            try:
+                self._admit_to_slot(i, req, plan)
+            except SnapshotRestoreError:
+                # Recoverable: unwind the admission, drop the damaged
+                # snapshot, and re-plan the request cold next iteration
+                # (greedy tokens are unchanged — snapshot replay is a
+                # parity guarantee, not a correctness dependency).
+                self._abort_admission(i, req, gen0, hit0)
+                self.prefix_cache.drop_snapshot(plan["snapshot"])
+                self.queue.appendleft(req)
+                continue
+            except RequestError as err:
+                self._abort_admission(i, req, gen0, hit0)
+                self._quarantine_queued(req, err, outs)
+                continue
             if req.generated and not req.t_first_token:
                 req.t_first_token = time.time()
             req.slot, req.admit_step = i, self.steps_executed
@@ -1063,6 +1190,10 @@ class EngineCore(CohortSchedulerMixin):
         self._slot_locked[i] = plan.get("locked", [])
         if plan["kind"] == "snapshot":
             snap = plan["snapshot"]
+            if self._fault("snapshot.restore", uid=req.uid) is not None:
+                raise SnapshotRestoreError(
+                    f"injected snapshot-restore failure for "
+                    f"uid={req.uid}", uid=req.uid)
             st = self._dev_state
             for kind, src, dst in plan["copies"]:
                 st = self._copy_page[kind](st, jnp.int32(src),
@@ -1219,8 +1350,22 @@ class EngineCore(CohortSchedulerMixin):
         """Resume a preempted request: upload its saved per-slot columns
         and page contents into the freshly allocated pages, rebuild the
         block tables, and restore its CHAI membership — the slot decodes
-        on bitwise the state it was evicted with."""
-        resume, req.resume_state = req.resume_state, None
+        on bitwise the state it was evicted with. Integrity: the payload
+        carries the CRC32 stamped at swap-out; a mismatch (host-side
+        corruption) quarantines the request BEFORE any device mutation."""
+        resume = req.resume_state
+        if self._fault("swap.in", uid=req.uid) is not None:
+            raise QuarantineError(
+                f"injected swap-in failure for uid={req.uid}", uid=req.uid)
+        crc = resume.get("crc")
+        if crc is not None and faults_mod.checksum_arrays(
+                {"cols": resume["cols"], "pools": resume["pools"]}) != crc:
+            self.swap_checksum_failures += 1
+            raise QuarantineError(
+                f"swap-in checksum mismatch for uid={req.uid}: the "
+                "host-side resume payload was corrupted while swapped "
+                "out", uid=req.uid)
+        req.resume_state = None
         pages = self._slot_pages[i]
         vecs = [self._page_vec(pages.get(k, []))
                 for k in ("kg", "vg", "kc", "vc")]
@@ -1286,6 +1431,14 @@ class EngineCore(CohortSchedulerMixin):
             if self.chai_on:
                 resume["ctx"] = {k: np.asarray(v[:, i])
                                  for k, v in self._dev_ctx.items()}
+            # Integrity stamp: swap-in verifies this before touching the
+            # device, so host-side damage to the payload quarantines the
+            # request instead of restoring corrupted KV.
+            resume["crc"] = faults_mod.checksum_arrays(
+                {"cols": resume["cols"], "pools": resume["pools"]})
+            if self._fault("swap.corrupt", uid=r.uid) is not None:
+                faults_mod.corrupt_arrays(resume["pools"],
+                                          seed=self.faults.seed)
             r.resume_state = resume
             if self.prefix_cache is not None:
                 self._index_retired(r, self._slot_pages[i])
@@ -1475,7 +1628,7 @@ class EngineCore(CohortSchedulerMixin):
         them bitwise-identical to the non-relay path."""
         from repro.core import chai_attention as chai_mod
         from repro.serving.prefix_cache import BlockNode
-        if not chai_mod.USE_FUSED_DECODE:
+        if not chai_mod.USE_FUSED_DECODE or self.degraded_decode:
             return None       # jnp fallback attends full tables already
         min_g = max(1, self.ecfg.relay_min_group)
         chains = {}
@@ -1510,6 +1663,12 @@ class EngineCore(CohortSchedulerMixin):
         groups = [g for g in by_node.values()
                   if len(g["members"]) >= min_g]
         if not groups:
+            return None
+        if self._fault("relay.residency") is not None:
+            # Dissolve the groups formed this step to the per-request
+            # decode path — grouped-vs-ungrouped is token-identical, so
+            # dissolving is always safe.
+            self.relay_dissolved += 1
             return None
         ps = self.ecfg.page_size
         b = self.ecfg.batch_slots
@@ -1569,22 +1728,32 @@ class EngineCore(CohortSchedulerMixin):
             self._tok_dirty = False
         inputs = {"tokens": self._next_tok_dev}
         occupied = self._phases[self._phases != chai_cache.PHASE_FREE]
-        state = self._dev_state
         relay = self._build_relay(active) if self.relay_decode else None
-        if relay is not None:
-            self.relay_steps += 1
-            logits, state = self._relay_step(self.params, inputs, state,
-                                             self._dev_ctx, relay)
-        elif not self.chai_on:
-            logits, state = self._mha_step(self.params, inputs, state)
-        elif (occupied == chai_cache.PHASE_STEADY).all():
-            logits, state = self._chai_step(self.params, inputs, state,
-                                            self._dev_ctx)
-        elif (occupied == chai_cache.PHASE_WARMUP).all():
-            logits, state = self._mha_step(self.params, inputs, state)
-        else:
-            logits, state = self._mixed_step(self.params, inputs, state,
-                                             self._dev_ctx)
+        try:
+            logits, state = self._dispatch_decode(inputs, relay, occupied)
+        except Exception as err:
+            if isinstance(err, EngineFault):
+                raise
+            # Kernel-path failure (injected or real): permanently fall
+            # back to the jnp reference jits for this engine and retry
+            # the step. Safe on CPU (buffer donation is a no-op there);
+            # donating backends would need a state re-upload first.
+            self.degraded_decode = True
+            self.decode_fallbacks += 1
+            try:
+                logits, state = self._dispatch_decode(inputs, None,
+                                                      occupied)
+            except Exception as err2:
+                raise EngineFault(
+                    "decode failed on the fused path AND the jnp "
+                    f"reference fallback: {err2!r} "
+                    f"(original failure: {err!r})") from err2
+        if self.faults is not None:
+            for i in active:
+                if self._fault("step.logits",
+                               uid=self._slot_req[i].uid) is not None:
+                    logits = logits.at[i].set(jnp.nan)
+        finite = np.asarray(self._finite_rows(logits))
         self._dev_state = state
         temps = self._samp_host["temperature"]
         if not temps.any():
@@ -1632,6 +1801,18 @@ class EngineCore(CohortSchedulerMixin):
         self.steps_executed += 1
         for i in active:
             r = self._slot_req[i]
+            if not finite[i]:
+                # NaN/Inf logits: the slot's sampled token is garbage —
+                # quarantine this request; rows are independent, so the
+                # other slots' draws are exactly what they would have
+                # been.
+                self._retire_slot(
+                    i, sampling_mod.FINISH_ERROR, index=False,
+                    error=f"non-finite logits for uid={r.uid} at step "
+                          f"{self.steps_executed - 1}")
+                outs.append(StepOutput(r.uid, [], True,
+                                       sampling_mod.FINISH_ERROR))
+                continue
             r.generated.append(int(toks[i]))
             self._slot_count[i] += 1
             reason = self._finish_of(r)
@@ -1643,22 +1824,93 @@ class EngineCore(CohortSchedulerMixin):
             self._record_kv_bytes(self._phases)
         return outs
 
-    def _retire_slot(self, i: int, reason: str):
+    def _dispatch_decode(self, inputs, relay, occupied):
+        """Host-dispatch the cheapest step jit covering the phase mix
+        (relay -> all-CHAI -> all-MHA -> mixed). ``degraded_decode``
+        swaps in the jnp reference jits (``_jnp_decode_steps``) — same
+        makers, traced with the fused kernels disabled."""
+        state = self._dev_state
+        if self._fault("kernel.decode") is not None \
+                and not self.degraded_decode:
+            raise InjectedFault("kernel.decode")
+        if relay is not None:
+            self.relay_steps += 1
+            return self._relay_step(self.params, inputs, state,
+                                    self._dev_ctx, relay)
+        if self.degraded_decode:
+            steps = self._jnp_decode_steps()
+            mha = steps["mha"]
+            chai, mixed = steps.get("chai"), steps.get("mixed")
+        else:
+            mha = self._mha_step
+            chai = self._chai_step if self.chai_on else None
+            mixed = self._mixed_step if self.chai_on else None
+        if not self.chai_on:
+            return mha(self.params, inputs, state)
+        if (occupied == chai_cache.PHASE_STEADY).all():
+            return chai(self.params, inputs, state, self._dev_ctx)
+        if (occupied == chai_cache.PHASE_WARMUP).all():
+            return mha(self.params, inputs, state)
+        return mixed(self.params, inputs, state, self._dev_ctx)
+
+    def _jnp_decode_steps(self):
+        """Degraded decode jits, built lazily on the first kernel-path
+        failure: the SAME step makers, but the module flag that routes
+        decode attention to the fused Pallas kernels is held False while
+        each jit traces, so the whole phase mix runs on the jnp
+        reference path (token-parity with the fused path; the relay is
+        skipped — ``_build_relay`` returns None while degraded)."""
+        if self._jnp_steps is None:
+            from repro.core import chai_attention as chai_mod
+
+            def unfused(fn):
+                def wrapped(*args):
+                    prev = chai_mod.USE_FUSED_DECODE
+                    chai_mod.USE_FUSED_DECODE = False
+                    try:
+                        return fn(*args)
+                    finally:
+                        chai_mod.USE_FUSED_DECODE = prev
+                return wrapped
+
+            cfg, ts = self.cfg, self.ecfg.page_size
+            steps = {"mha": jax.jit(
+                unfused(steps_mod.make_serve_step(cfg, chai=False,
+                                                  decode_ts=ts)),
+                donate_argnums=(2,))}
+            if self.chai_on:
+                steps["chai"] = jax.jit(
+                    unfused(steps_mod.make_serve_step(cfg, chai=True,
+                                                      decode_ts=ts)),
+                    donate_argnums=(2,))
+                steps["mixed"] = jax.jit(
+                    unfused(steps_mod.make_mixed_step(cfg, decode_ts=ts)),
+                    donate_argnums=(2,))
+            self._jnp_steps = steps
+        return self._jnp_steps
+
+    def _retire_slot(self, i: int, reason: str, *, error: str = "",
+                     index: bool = True):
         """Retire/abort slot ``i``: finalize the request, index its full
         sequence into the prefix cache (when the slot still holds its
         dense pages), reset the slot on device, and return every page it
         held to the pools (refcount-exact; shared pages survive while the
-        cache or concurrent slots reference them)."""
+        cache or concurrent slots reference them). Quarantine retires
+        pass ``error`` (recorded on the Request) and ``index=False`` —
+        a damaged sequence must never seed the prefix cache."""
         r = self._slot_req[i]
         r.generated = r.generated[:r.max_new_tokens]
         r.finish_reason = reason
+        r.error = error
+        if error:
+            self.quarantined += 1
         r.t_done = time.time()
         r.retire_step = self.steps_executed
         self._done(r)
         self._slot_req[i] = None
         self._phases[i] = chai_cache.PHASE_FREE
         self._slot_count[i] = 0
-        if self.paged and self.prefix_cache is not None:
+        if index and self.paged and self.prefix_cache is not None:
             self._index_retired(r, self._slot_pages[i])
         self._dev_state = self._reset_slot(self._dev_state, jnp.int32(i))
         if self.paged:      # block tables are nulled; pages go back
@@ -1683,6 +1935,18 @@ class EngineCore(CohortSchedulerMixin):
         self.prefix_cache.insert(seq, pages["kg"], pages["vg"])
 
     # -- metrics ------------------------------------------------------------
+    def fault_stats(self):
+        """Robustness counters + the injector's replayable plan/firing
+        log (None when no injector is armed)."""
+        return {"quarantined": self.quarantined,
+                "audit_steps": self.audit_steps,
+                "degraded_decode": self.degraded_decode,
+                "decode_fallbacks": self.decode_fallbacks,
+                "relay_dissolved": self.relay_dissolved,
+                "swap_checksum_failures": self.swap_checksum_failures,
+                "injector": (self.faults.report()
+                             if self.faults is not None else None)}
+
     def prefix_stats(self):
         """Prefix-cache counters + current residency (empty when the
         cache is off)."""

@@ -1,0 +1,248 @@
+"""Typed failure taxonomy + deterministic, seeded fault injection.
+
+The serving stack distinguishes two failure classes:
+
+* ``RequestError`` — a failure attributable to ONE request. The engine
+  quarantines that request (abort + refcount-exact page release + a
+  typed ``StepOutput`` with ``finish_reason="error"``) and the rest of
+  the batch keeps decoding. Subclasses keep backwards-compatible bases:
+  ``CapacityError`` is-a ``MemoryError`` (the historical page-budget
+  signal) and ``ValidationError`` is-a ``ValueError`` (the historical
+  ``add_request`` rejections), so callers catching the old types keep
+  working while new callers can catch the taxonomy root.
+* ``EngineFault`` — the engine itself is wrong (an invariant audit
+  found pool/block-table/phase corruption, or the degraded decode path
+  failed too). Not recoverable per-request: frontends broadcast it to
+  every open stream and stop the driver.
+
+``FaultInjector`` is a deterministic, seeded injector threaded through
+the engine's named sites (``SITES``). A fault *plan* is a list of
+``FaultSpec``s; whether a spec fires at a given call depends only on
+``(seed, spec index, site, step, uid)`` — never on wall clock, call
+order across sites, or process state — so any plan is replayable
+byte-for-byte against the same workload. Every firing is recorded in
+``fired`` (site, step, uid, mode), which doubles as the soak report's
+"affected requests" ledger.
+
+Injection sites (where the engine consults the injector):
+
+========================  ==================================================
+``pool.alloc``            admission planning (``_plan_admission``): mode
+                          ``transient`` blocks the plan this step (retried);
+                          mode ``error`` quarantines the queued request.
+``swap.corrupt``          preemption swap-out (``_preempt_slot``): corrupts
+                          the host-side resume payload AFTER its checksum
+                          was taken, so swap-in detects the damage.
+``swap.in``               preemption swap-in (``_swap_in_slot``): fails the
+                          restore outright (same quarantine path a checksum
+                          mismatch takes).
+``snapshot.restore``      CHAI-snapshot admission: the restore fails; the
+                          engine drops the snapshot and re-plans the request
+                          cold (greedy tokens are unchanged by design).
+``relay.residency``       relay group formation: the groups formed this
+                          step dissolve to the per-request decode path.
+``kernel.decode``         the fused decode dispatch: the engine falls back
+                          to the jnp reference path (``degraded_decode``).
+``step.logits``           per-slot logits poisoning (NaN): the NaN/Inf
+                          guard quarantines the slot, others are untouched.
+========================  ==================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import zlib
+from typing import List, Optional
+
+import numpy as np
+
+# -- taxonomy ---------------------------------------------------------------
+
+
+class RequestError(Exception):
+    """Request-isolatable failure: quarantine ONE request, keep the
+    batch running. ``uid`` names the request when known."""
+
+    def __init__(self, msg: str, *, uid: Optional[int] = None):
+        super().__init__(msg)
+        self.uid = uid
+
+
+class ValidationError(RequestError, ValueError):
+    """The request itself is malformed (rejected at ``add_request``)."""
+
+
+class CapacityError(RequestError, MemoryError):
+    """The request can NEVER be admitted: its page needs exceed pool
+    capacity even with the prefix cache drained (the historical
+    ``MemoryError`` page-budget gate, now carrying the uid)."""
+
+
+class QuarantineError(RequestError):
+    """Mid-flight state damage attributable to one request (injected
+    fault, swap-in checksum mismatch, non-finite logits): the request
+    is typed-failed; its pages return refcount-exactly."""
+
+
+class SnapshotRestoreError(RequestError):
+    """A CHAI-snapshot restore failed. Recoverable: the engine drops
+    the snapshot and re-plans the admission cold."""
+
+
+class EngineFault(RuntimeError):
+    """The engine state itself is corrupt (invariant breach) or the
+    last-resort decode path failed: broadcast to every stream."""
+
+    def __init__(self, msg: str, violations=()):
+        self.violations = list(violations)
+        if self.violations:
+            msg = msg + "\n  - " + "\n  - ".join(self.violations)
+        super().__init__(msg)
+
+
+class InjectedFault(Exception):
+    """Raised by injector arms standing in for a real runtime failure
+    (e.g. a kernel launch error) — never escapes the engine: the
+    handler at the site converts it into recovery or a typed error."""
+
+    def __init__(self, site: str, msg: str = ""):
+        super().__init__(msg or f"injected fault at {site}")
+        self.site = site
+
+
+# -- injector ---------------------------------------------------------------
+
+SITES = frozenset({
+    "pool.alloc", "swap.corrupt", "swap.in", "snapshot.restore",
+    "relay.residency", "kernel.decode", "step.logits",
+})
+
+#: spec modes with meaning at their sites (see module docstring)
+MODES = frozenset({"error", "transient", "corrupt", "nan"})
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One arm of a fault plan.
+
+    site   one of ``SITES``.
+    mode   what the site does when the arm fires (site-specific).
+    step   fire only at this engine step (-1 = any step).
+    uid    fire only for this request uid (-1 = any request).
+    count  firings before the arm is spent (-1 = unlimited).
+    p      per-eligible-call firing probability; decided by a stable
+           hash of (seed, arm index, site, step, uid), NOT a stateful
+           RNG, so replays are byte-for-byte identical.
+    """
+    site: str
+    mode: str = "error"
+    step: int = -1
+    uid: int = -1
+    count: int = 1
+    p: float = 1.0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"sites: {sorted(SITES)}")
+        if self.mode not in MODES:
+            raise ValueError(f"unknown fault mode {self.mode!r}; "
+                             f"modes: {sorted(MODES)}")
+        if not 0.0 < self.p <= 1.0:
+            raise ValueError(f"p must be in (0, 1], got {self.p}")
+
+
+class FaultInjector:
+    """Deterministic seeded injector over a list of ``FaultSpec``s.
+
+    ``fire(site, step=, uid=)`` returns the first eligible spec (or
+    None) and logs the firing. Eligibility is pure in (spec, site,
+    step, uid) plus the spec's remaining count; the probabilistic roll
+    hashes ``(seed, arm, site, step, uid)`` so two runs over the same
+    workload fire identically.
+    """
+
+    def __init__(self, specs: List[FaultSpec], *, seed: int = 0):
+        self.specs = list(specs)
+        self.seed = int(seed)
+        self._remaining = [s.count for s in self.specs]
+        self.fired: List[dict] = []
+
+    def _roll(self, idx: int, spec: FaultSpec, step: int, uid: int) -> bool:
+        if spec.p >= 1.0:
+            return True
+        key = f"{self.seed}:{idx}:{spec.site}:{step}:{uid}".encode()
+        h = int.from_bytes(hashlib.blake2b(key, digest_size=8).digest(),
+                           "big")
+        return (h / float(1 << 64)) < spec.p
+
+    def fire(self, site: str, *, step: int = -1,
+             uid: int = -1) -> Optional[FaultSpec]:
+        for idx, spec in enumerate(self.specs):
+            if spec.site != site:
+                continue
+            if spec.step != -1 and spec.step != step:
+                continue
+            if spec.uid != -1 and spec.uid != uid:
+                continue
+            if self._remaining[idx] == 0:
+                continue
+            if not self._roll(idx, spec, step, uid):
+                continue
+            if self._remaining[idx] > 0:
+                self._remaining[idx] -= 1
+            self.fired.append({"site": site, "step": int(step),
+                               "uid": int(uid), "mode": spec.mode,
+                               "arm": idx})
+            return spec
+        return None
+
+    def report(self) -> dict:
+        """JSON-ready plan + firing log (the soak report embeds it)."""
+        return {"seed": self.seed,
+                "specs": [dataclasses.asdict(s) for s in self.specs],
+                "fired": list(self.fired)}
+
+
+# -- host-payload integrity helpers ----------------------------------------
+
+def checksum_arrays(tree) -> int:
+    """Order-stable CRC32 over a (possibly nested) dict of numpy arrays
+    — the preemption swap-out stamps its resume payload with this and
+    swap-in verifies it, so host-side corruption of a victim's KV never
+    reaches the device."""
+    crc = 0
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            crc = zlib.crc32(str(k).encode(), crc)
+            crc = zlib.crc32(checksum_arrays(tree[k]).to_bytes(4, "big"),
+                             crc)
+        return crc
+    arr = np.ascontiguousarray(np.asarray(tree))
+    crc = zlib.crc32(str(arr.dtype).encode() + str(arr.shape).encode(), crc)
+    return zlib.crc32(arr.tobytes(), crc)
+
+
+def corrupt_arrays(tree: dict, *, seed: int = 0) -> bool:
+    """Deterministically flip bits in the first non-empty array of a
+    nested dict (in sorted-key order) — the ``swap.corrupt`` arm's
+    payload damage. The damaged leaf is REPLACED with a flipped copy
+    (``jax.device_get`` leaves are read-only). Returns True if anything
+    was corrupted."""
+    for k in sorted(tree):
+        v = tree[k]
+        if isinstance(v, dict):
+            if corrupt_arrays(v, seed=seed):
+                return True
+            continue
+        arr = np.asarray(v)
+        if arr.size == 0:
+            continue
+        buf = np.array(arr, copy=True)
+        flat = buf.view(np.uint8).reshape(-1)
+        rng = np.random.default_rng(seed)
+        idx = rng.integers(0, flat.size, size=min(8, flat.size))
+        flat[idx] ^= 0xFF
+        tree[k] = buf
+        return True
+    return False

@@ -245,6 +245,25 @@ class PrefixCache:
         self._lru_file(snap)
         self._touch(snap)
 
+    def drop_snapshot(self, snap: ChaiSnapshot):
+        """Remove a snapshot whose restore failed (fault recovery): its
+        page references return to the pools and the prompt re-plans cold
+        next admission. No-op if the snapshot is not registered; a
+        snapshot still locked by ANOTHER slot is left alone (that slot's
+        restore already succeeded — the entry is not provably damaged,
+        and dropping it would strand the lock)."""
+        if self._snapshots.get(snap.prompt) is not snap or snap.locks:
+            return
+        self._lru_drop(snap)
+        del self._snapshots[snap.prompt]
+        if snap.vg_pages:
+            self.dense_pool.free(snap.vg_pages)
+        if snap.kc_pages:
+            self.chai_pool.free(snap.kc_pages)
+        if snap.vc_pages:
+            self.chai_pool.free(snap.vc_pages)
+        self.stats["evicted_snapshots"] += 1
+
     # -- pinning -----------------------------------------------------------
     def lock(self, entries):
         for e in entries:

@@ -23,6 +23,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 FINISH_LENGTH = "length"      # max_new_tokens reached
 FINISH_STOP = "stop"          # stop token id or stop string matched
 FINISH_ABORT = "aborted"      # abort() mid-flight (queued or running)
+FINISH_ERROR = "error"        # quarantined by a typed RequestError
+#                               (Request.error carries the message)
 
 
 @dataclasses.dataclass(frozen=True)

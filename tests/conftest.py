@@ -17,5 +17,44 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _page_leak_gate(request):
+    """Universal serving-tier leak gate: every ``EngineCore`` built
+    during a test is audited afterwards — pool conservation always, and
+    (for cores left IDLE) zero leaked page references / dangling
+    prefix-cache locks. Replaces the old ad-hoc per-test counter
+    checks. Opt out with ``@pytest.mark.no_leak_gate`` (tests that
+    corrupt engine state on purpose)."""
+    from repro.serving.engine import EngineCore
+
+    cores = []
+    orig = EngineCore.__init__
+
+    def patched(self, *args, **kw):
+        orig(self, *args, **kw)
+        cores.append(self)
+
+    EngineCore.__init__ = patched
+    try:
+        yield
+    finally:
+        EngineCore.__init__ = orig
+    if request.node.get_closest_marker("no_leak_gate"):
+        return
+    from repro.serving import invariants
+    problems = []
+    for core in cores:
+        if getattr(core, "_slot_req", None) is None or not core.paged:
+            continue        # cohort / dense layouts: nothing paged
+        for v in invariants.audit_leaks(core):
+            problems.append(v)
+    assert not problems, (
+        "page leak gate: engine(s) left damaged state behind:\n  "
+        + "\n  ".join(problems))
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers",
+        "no_leak_gate: skip the autouse EngineCore page-leak audit")

@@ -1,0 +1,111 @@
+"""Seeded fault-injection soak (the robustness acceptance criterion).
+
+One scripted 24-request workload — shared-prefix families, CHAI
+snapshot duplicates, priority preemption, scripted aborts — is driven
+twice through an identically-configured engine with ``audit_level=
+"deep"``: once fault-free and once under a plan spanning every
+injection surface (allocator failure, swap-payload corruption, failed
+snapshot restore, relay-residency fault, NaN logits). The faulted run
+must:
+
+* drain completely — every request ends completed or typed-failed,
+* leak nothing — pool counters clean, idle-engine audit empty,
+* pass the deep invariant audit after every single step (a violation
+  raises ``EngineFault`` and fails the soak outright),
+* leave every untouched completed request bitwise-identical to the
+  fault-free run (greedy tokens are schedule-invariant),
+* produce a byte-identical injector firing log when replayed.
+"""
+import jax
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models import transformer as tfm
+from repro.serving.engine import EngineConfig
+from repro.serving.faults import FaultSpec
+from repro.serving.soak import run_soak, run_soak_pair
+
+TERMINAL = {"length", "stop", "aborted", "error"}
+
+#: one arm per injection surface; uid/step constraints deliberately
+#: loose so every arm is guaranteed eligible somewhere in the workload
+PLAN = [
+    FaultSpec("pool.alloc", mode="transient", count=1),
+    FaultSpec("pool.alloc", mode="error", uid=5, count=1),
+    FaultSpec("swap.corrupt", mode="corrupt", count=1),
+    FaultSpec("snapshot.restore", mode="error", count=1),
+    FaultSpec("relay.residency", mode="error", count=1),
+    FaultSpec("step.logits", mode="nan", uid=16, count=1),
+]
+
+
+def _setup():
+    cfg = reduced(get_config("chai-llama-7b"), n_layers=2, d_model=32,
+                  d_ff=64, vocab=128).replace(dtype="float32")
+    cfg = cfg.with_chai(enabled=True, warmup_tokens=3)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(batch_slots=3, max_seq=64, page_size=8,
+                        prefix_cache=True, relay_decode=True,
+                        audit_level="deep")
+    return cfg, params, ecfg
+
+
+@pytest.mark.slow
+def test_fault_soak_drains_clean_with_token_parity():
+    cfg, params, ecfg = _setup()
+    out = run_soak_pair(cfg, params, ecfg, specs=PLAN, fault_seed=0,
+                        seed=3, n_requests=24)
+    clean, faulted = out["clean"], out["faulted"]
+
+    # fault-free control is itself clean
+    assert clean["unfinished"] == [] and clean["leaks"] == []
+    assert clean["fault_stats"]["quarantined"] == 0
+
+    # every request ended in a typed terminal state; nothing leaked
+    assert faulted["unfinished"] == []
+    assert faulted["leaks"] == []
+    finishes = {uid: r["finish"] for uid, r in faulted["requests"].items()}
+    assert set(finishes.values()) <= TERMINAL, finishes
+    for uid, r in faulted["requests"].items():
+        if r["finish"] == "error":
+            assert r["error"], f"uid {uid} typed-failed without a message"
+    for pool in ("dense", "chai"):
+        c = faulted["counters"][pool]
+        if c is not None:
+            # drained engine: only prefix-cache references remain, and
+            # in_use pages are exactly the referenced ones
+            assert c["refs"] >= c["in_use"] >= 0
+
+    # the plan actually exercised the surfaces it names
+    fired = {f["site"] for f in
+             faulted["fault_stats"]["injector"]["fired"]}
+    assert {"pool.alloc", "snapshot.restore",
+            "relay.residency", "step.logits"} <= fired, fired
+    fs = faulted["fault_stats"]
+    assert fs["quarantined"] >= 1                 # NaN and/or swap arms
+    assert fs["relay_dissolved"] >= 1
+    assert fs["audit_steps"] >= faulted["steps"]  # deep audit every step
+
+    # untouched completed requests are bitwise identical to fault-free
+    assert out["parity"], "parity set unexpectedly empty"
+    assert out["mismatches"] == [], out["mismatches"]
+
+
+@pytest.mark.slow
+def test_fault_soak_firing_log_replays_byte_identical():
+    """Same (workload seed, plan, fault seed) twice => identical firing
+    logs AND identical per-request outcomes — the injector is pure in
+    its inputs, never in wall clock or process state."""
+    cfg, params, ecfg = _setup()
+
+    def run():
+        from repro.serving.faults import FaultInjector
+        specs = [FaultSpec(s.site, s.mode, s.step, s.uid, s.count, s.p)
+                 for s in PLAN]
+        return run_soak(cfg, params, ecfg,
+                        faults=FaultInjector(specs, seed=0), seed=3)
+
+    a, b = run(), run()
+    assert a["fault_stats"]["injector"] == b["fault_stats"]["injector"]
+    assert a["requests"] == b["requests"]
+    assert a["steps"] == b["steps"]
