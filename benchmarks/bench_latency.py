@@ -489,16 +489,23 @@ def _relay_lane(cfg, params, pipe, *, prefix_blocks=4, max_new=8, seed=0):
 def _streaming_lane(cfg, params, pipe, *, prompt_len=16, max_new=24,
                     slots=2):
     """Per-token streaming latency through the ``LLM.stream`` frontend:
-    TTFT (request submit -> first chunk) and inter-token latency (ITL)
-    p50/p99 over the chunk arrival stamps, for greedy and seeded
-    sampling. The incremental-delivery claim (first token strictly
-    before the last, more than one chunk) is deterministic; the latency
-    numbers are wall-clock and advisory on shared runners."""
+    TTFT (enqueue -> first token) and inter-token latency (ITL) p50/p99
+    for greedy and seeded sampling, read from the ENGINE's lifecycle
+    telemetry (``telemetry="basic"`` events summarized by
+    ``common.lifecycle_metrics``) instead of client-side stamps around
+    the streaming loop — the engine stamps first-token and per-token
+    times at the step that produced them, so the numbers exclude
+    frontend queue hand-off. The incremental-delivery claim (first
+    token strictly before the last, more than one chunk) is
+    deterministic; the latency numbers are wall-clock and advisory on
+    shared runners."""
+    from benchmarks.common import lifecycle_metrics
     from repro.serving.api import LLM
     from repro.serving.engine import EngineConfig
     from repro.serving.sampling import SamplingParams
 
-    llm = LLM(cfg, params, EngineConfig(batch_slots=slots, max_seq=128))
+    llm = LLM(cfg, params, EngineConfig(batch_slots=slots, max_seq=128,
+                                        telemetry="basic"))
     prompt = pipe.batch(8000)["tokens"][0, :prompt_len]
     out = {}
     lanes = {
@@ -508,27 +515,31 @@ def _streaming_lane(cfg, params, pipe, *, prompt_len=16, max_new=24,
     }
     for sp in lanes.values():       # warm BOTH samplers' jits (the
         llm.generate(prompt, sp)    # batched sampler traces separately)
+    uids = {}
     for lane, sp in lanes.items():
-        t0 = time.time()
-        stamps, n_chunks, finished = [], 0, False
+        n_chunks, finished, uid = 0, False, None
         for chunk in llm.stream(prompt, sp):
-            now = time.time()
-            stamps.extend([now] * len(chunk.token_ids))
             n_chunks += 1
             finished = chunk.finished
-        itl = np.diff(stamps)
-        out[lane] = {
-            "n_tokens": len(stamps),
-            "n_chunks": n_chunks,
-            "ttft_s": stamps[0] - t0,
+            uid = chunk.uid
+        uids[lane] = uid
+        out[lane] = {"n_chunks": n_chunks, "finished": finished}
+    summaries = lifecycle_metrics(llm.core)
+    for lane, uid in uids.items():
+        s = summaries[uid]
+        itl = np.asarray(s["itl_s"]) if s["itl_s"] else np.zeros(1)
+        out[lane].update({
+            "n_tokens": s["n_tokens"],
+            "ttft_s": s["ttft_s"],
+            "queue_s": s.get("queue_s"),
             "itl_s_p50": float(np.percentile(itl, 50)),
             "itl_s_p99": float(np.percentile(itl, 99)),
-            "total_s": stamps[-1] - t0,
-            "finished": finished,
-        }
+            "total_s": s["latency_s"],
+            "finish_reason": s["finish_reason"],
+        })
     out["claims"] = {
         # deterministic: streaming delivered the first token in its own
-        # chunk, strictly before the request completed
+        # chunk, strictly before the request completed (engine-stamped)
         "stream_first_token_before_completion": all(
             v["n_chunks"] > 1 and v["ttft_s"] < v["total_s"]
             and v["finished"] and v["n_tokens"] == max_new

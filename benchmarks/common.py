@@ -111,3 +111,33 @@ def timer(fn, *args, n=5, warmup=2):
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
+
+
+# -- engine telemetry consumption (serving/telemetry.py JSONL events) ------
+# Bench lanes read per-request TTFT / ITL / queue time from the engine's
+# lifecycle event log instead of re-deriving them from hand-placed
+# wall-clock stamps around the streaming loop.
+
+def load_events(source):
+    """Lifecycle events from a telemetry sink, an EngineCore, JSONL text,
+    or an already-decoded event list — normalized to a list of dicts."""
+    from repro.serving import exporters
+    if isinstance(source, str):
+        return exporters.read_jsonl(source)
+    if hasattr(source, "tel"):          # EngineCore
+        source = source.tel
+    if hasattr(source, "iter_events"):  # Telemetry sink
+        return list(source.iter_events())
+    return list(source)
+
+
+def lifecycle_metrics(source):
+    """Per-uid {ttft_s, queue_s, latency_s, itl_s, n_tokens, preemptions,
+    finish_reason} derived from lifecycle events (see
+    ``repro.serving.telemetry.summarize_timeline``)."""
+    from repro.serving.telemetry import summarize_timeline
+    by_uid = {}
+    for ev in load_events(source):
+        by_uid.setdefault(ev["uid"], []).append(ev)
+    return {uid: summarize_timeline(sorted(evs, key=lambda e: e["t"]))
+            for uid, evs in by_uid.items()}

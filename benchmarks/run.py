@@ -30,6 +30,8 @@ BENCHES = {
                      "lanes",
     "bench_cluster_dist": "Fig 13 (cluster size distribution)",
     "bench_fault_soak": "robustness lane (seeded fault soak, deep audit)",
+    "bench_telemetry_overhead": "observability lane (tier cost contract, "
+                                "trace/metrics export round-trips)",
 }
 
 

@@ -12,6 +12,16 @@ Events (``data: {...}\\n\\n`` per chunk, ``data: [DONE]`` at the end),
 each chunk carrying the tokens that step produced. GET /v1/stats
 returns engine counters (steps, preemptions, pool occupancy).
 
+Observability routes (live when ``EngineConfig.telemetry`` != "off";
+404 otherwise):
+
+* ``GET /v1/metrics`` — Prometheus text exposition (format 0.0.4) of
+  the engine's metrics registry, driver restarts folded in.
+* ``GET /v1/requests/<uid>/timeline`` — one request's lifecycle
+  timeline (enqueue/admit/phase/first_token/finish events + derived
+  TTFT/queue/ITL summary) as JSON; completions responses carry the
+  ``uid`` to query.
+
 The serving tier's typed failure taxonomy maps onto HTTP status codes:
 
 =====  =====================================================
@@ -63,7 +73,8 @@ from repro.serving.faults import (CapacityError, EngineFault, RequestError,
 from repro.serving.sampling import FINISH_ERROR, SamplingParams
 
 
-def build_llm(arch: str = "chai-llama-7b", *, faults=None) -> AsyncLLM:
+def build_llm(arch: str = "chai-llama-7b", *, faults=None,
+              telemetry: str = "basic") -> AsyncLLM:
     """A tiny demo model (random weights) behind a full serving stack.
 
     ``num_pages`` is deliberately smaller than the auto worst case so an
@@ -75,6 +86,7 @@ def build_llm(arch: str = "chai-llama-7b", *, faults=None) -> AsyncLLM:
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
     ecfg = EngineConfig(batch_slots=4, max_seq=256, page_size=16,
                         prefix_cache=True, prefill_chunk_tokens=32,
+                        telemetry=telemetry,
                         num_pages=17)       # 16 usable = 128 tokens/req
     detok = lambda ids: " ".join(map(str, ids))
     return AsyncLLM(cfg, params, ecfg, detokenizer=detok, faults=faults)
@@ -141,6 +153,11 @@ class Server:
                 return
             if method == "GET" and path == "/v1/stats":
                 await self._stats(writer)
+            elif method == "GET" and path == "/v1/metrics":
+                await self._metrics(writer)
+            elif (method == "GET" and path.startswith("/v1/requests/")
+                    and path.endswith("/timeline")):
+                await self._timeline(writer, path)
             elif method == "POST" and path == "/v1/completions":
                 await self._completions(writer, raw)
             else:
@@ -170,6 +187,31 @@ class Server:
                  "prefix_cache": core.prefix_stats()}
         writer.write(_response(200, json.dumps(stats).encode()))
 
+    async def _metrics(self, writer):
+        """Prometheus text exposition; 404 when telemetry is off."""
+        from repro.serving.exporters import PROMETHEUS_CONTENT_TYPE
+        text = await self.llm.metrics_text()
+        if text is None:
+            writer.write(_response(404, b'{"error": "telemetry is off"}'))
+            return
+        writer.write(_response(200, text.encode(),
+                               ctype=PROMETHEUS_CONTENT_TYPE))
+
+    async def _timeline(self, writer, path: str):
+        """GET /v1/requests/<uid>/timeline -> lifecycle event JSON."""
+        try:
+            uid = int(path.split("/")[3])
+        except (IndexError, ValueError):
+            raise ValidationError(f"bad timeline path {path!r}")
+        tl = await self.llm.timeline(uid)
+        if tl is None:
+            writer.write(_response(
+                404, json.dumps({"error": f"no timeline for uid {uid} "
+                                          "(unknown uid or telemetry "
+                                          "off)"}).encode()))
+            return
+        writer.write(_response(200, json.dumps(tl).encode()))
+
     async def _completions(self, writer, raw: bytes):
         body = json.loads(raw or b"{}")
         if "prompt" not in body:
@@ -185,22 +227,24 @@ class Server:
             await writer.drain()
             async for chunk in self.llm.stream(prompt, sp,
                                                priority=priority):
-                data = {"tokens": chunk.token_ids,
+                data = {"uid": chunk.uid,
+                        "tokens": chunk.token_ids,
                         "finished": chunk.finished,
                         "finish_reason": chunk.finish_reason or None}
                 writer.write(f"data: {json.dumps(data)}\n\n".encode())
                 await writer.drain()
             writer.write(b"data: [DONE]\n\n")
             return
-        tokens, finish, timed_out = await self._collect(
+        tokens, finish, timed_out, uid = await self._collect(
             prompt, sp, priority, timeout_s)
         if timed_out:
-            payload = {"tokens": tokens, "finish_reason": "timeout",
+            payload = {"uid": uid, "tokens": tokens,
+                       "finish_reason": "timeout",
                        "error": f"request exceeded timeout_s={timeout_s}"}
             writer.write(_response(408, json.dumps(payload).encode()))
             return
         code = 500 if finish == FINISH_ERROR else 200
-        payload = {"tokens": tokens, "finish_reason": finish}
+        payload = {"uid": uid, "tokens": tokens, "finish_reason": finish}
         if code == 200:
             payload["text"] = self.llm.core.detokenizer(tokens) \
                 if self.llm.core.detokenizer else ""
@@ -211,7 +255,7 @@ class Server:
         deadline. On expiry the stream generator is closed, which aborts
         the request ENGINE-side (its pages return refcount-exactly) —
         the partial tokens are still returned to the client."""
-        tokens, finish = [], None
+        tokens, finish, uid = [], None, None
         deadline = time.monotonic() + timeout_s if timeout_s > 0 else None
         agen = self.llm.stream(prompt, sp, priority=priority)
         try:
@@ -221,18 +265,19 @@ class Server:
                 else:
                     left = deadline - time.monotonic()
                     if left <= 0:
-                        return tokens, finish, True
+                        return tokens, finish, True, uid
                     try:
                         chunk = await asyncio.wait_for(agen.__anext__(),
                                                        left)
                     except asyncio.TimeoutError:
-                        return tokens, finish, True
+                        return tokens, finish, True, uid
+                uid = chunk.uid
                 tokens.extend(chunk.token_ids)
                 finish = chunk.finish_reason
                 if chunk.finished:
-                    return tokens, finish, False
+                    return tokens, finish, False, uid
         except StopAsyncIteration:          # defensive: stream drained
-            return tokens, finish, False
+            return tokens, finish, False, uid
         finally:
             await agen.aclose()             # no-op if already finished
 
@@ -243,11 +288,29 @@ async def serve(host: str, port: int, llm=None, ready=None):
         server = await asyncio.start_server(Server(llm).handle, host, port)
         addr = server.sockets[0].getsockname()
         print(f"serving on http://{addr[0]}:{addr[1]}  "
-              f"(POST /v1/completions, GET /v1/stats)")
+              f"(POST /v1/completions, GET /v1/stats, /v1/metrics, "
+              f"/v1/requests/<uid>/timeline)")
         if ready is not None:
             ready.set_result(addr)
         async with server:
             await server.serve_forever()
+
+
+async def _get(host, port, path) -> tuple:
+    """GET ``path``; returns (status_code, content_type, raw body)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write((f"GET {path} HTTP/1.1\r\nHost: {host}\r\n\r\n"
+                  ).encode("latin1"))
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    head, _, tail = data.partition(b"\r\n\r\n")
+    code = int(head.split(b" ", 2)[1])
+    ctype = ""
+    for ln in head.split(b"\r\n"):
+        if ln.lower().startswith(b"content-type:"):
+            ctype = ln.partition(b":")[2].strip().decode("latin1")
+    return code, ctype, tail
 
 
 async def _client(host, port, body) -> tuple:
@@ -316,12 +379,41 @@ async def selftest(port: int = 8181):
                                {"prompt": prompt, "max_tokens": 8})
     assert code == 200 and out2["tokens"] == out["tokens"], (code, out2)
     print("selftest OK:", out["tokens"])
+
+    # -- observability: /v1/metrics + per-request timelines -------------
+    from repro.serving import exporters
+    code, ctype, body = await _get("127.0.0.1", port, "/v1/metrics")
+    assert code == 200, (code, body)
+    assert ctype == exporters.PROMETHEUS_CONTENT_TYPE, ctype
+    parsed = exporters.parse_prometheus(body.decode())
+    names = {s[0] for s in parsed["samples"]}
+    for want in ("requests_finished_total", "engine_steps_total",
+                 "tokens_generated_total", "request_ttft_seconds_count"):
+        assert want in names, (want, sorted(names))
+    done = sum(v for n, _, v in parsed["samples"]
+               if n == "requests_finished_total")
+    assert done >= 6, parsed["samples"]
+    code, _, body = await _get(
+        "127.0.0.1", port, f"/v1/requests/{out2['uid']}/timeline")
+    assert code == 200, (code, body)
+    tl = json.loads(body)
+    ev_names = [e["ev"] for e in tl["events"]]
+    assert "enqueue" in ev_names and "finish" in ev_names, ev_names
+    assert tl["summary"]["n_tokens"] == 8, tl["summary"]
+    assert tl["summary"]["ttft_s"] is not None, tl["summary"]
+    code, _, _ = await _get("127.0.0.1", port,
+                            "/v1/requests/999999/timeline")
+    assert code == 404, code
+    print("observability selftest OK "
+          f"({len(parsed['samples'])} metric samples)")
     task.cancel()
 
     # -- quarantine (500) and dead driver (503) on a faulted instance ---
+    # (telemetry off: also covers the observability routes' 404 tier)
     from repro.serving.faults import FaultInjector, FaultSpec
     llm2 = build_llm(faults=FaultInjector(
-        [FaultSpec("step.logits", mode="nan", count=1)]))
+        [FaultSpec("step.logits", mode="nan", count=1)]),
+        telemetry="off")
     ready2 = loop.create_future()
     task2 = loop.create_task(
         serve("127.0.0.1", port + 1, llm=llm2, ready=ready2))
@@ -329,6 +421,11 @@ async def selftest(port: int = 8181):
     code, body = await _client("127.0.0.1", port + 1,
                                {"prompt": prompt, "max_tokens": 8})
     assert code == 500 and body["finish_reason"] == "error", (code, body)
+    code, _, body = await _get("127.0.0.1", port + 1, "/v1/metrics")
+    assert code == 404, (code, body)       # telemetry off on this server
+    code, _, body = await _get("127.0.0.1", port + 1,
+                               "/v1/requests/0/timeline")
+    assert code == 404, (code, body)
 
     def _dead_step():
         raise RuntimeError("injected persistent engine failure")

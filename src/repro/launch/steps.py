@@ -444,3 +444,21 @@ def make_paged_slot_reset(cfg: ModelConfig):
     def reset(state, slot):
         return chai_cache.reset_slot_paged(state, slot)
     return reset
+
+
+def jaxpr_text(fn, *example_args):
+    """Canonical jaxpr text of ``fn`` traced at ``example_args``.
+
+    Introspection only (telemetry overhead claims, kernel-coverage
+    tests): proves two callables lower to the same computation without
+    executing either. ``fn`` may be a ``jax.jit`` wrapper — tracing goes
+    through it; compare jit-wrapped against jit-wrapped (the pjit
+    equation wraps the inner jaxpr either way). Memory addresses of
+    embedded thunks (``custom_jvp`` prints ``<function ... at 0x...>``)
+    are scrubbed so two independently built but identical programs
+    compare equal.
+    """
+    import re
+    txt = str(jax.make_jaxpr(fn)(*example_args))
+    return re.sub(r"<(function|bound method) .+? at 0x[0-9a-f]+>",
+                  r"<\1>", txt)

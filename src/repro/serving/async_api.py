@@ -296,6 +296,40 @@ class AsyncLLM:
             q.put_nowait(StepOutput(uid, [], True, FINISH_ABORT))
         return ok
 
+    # -- telemetry ---------------------------------------------------------
+    async def metrics(self):
+        """Engine metrics snapshot (registry + driver-restart counter
+        folded in); None when ``EngineConfig.telemetry == "off"``.
+        Serialized through the engine executor like every core call."""
+        def _snap():
+            if self.core.tel.enabled:
+                self.core.tel.gauge(
+                    "driver_restarts", self.restarts,
+                    help="Supervised step() retries by the async driver")
+            return self.core.metrics()
+
+        return await self._call(_snap)
+
+    async def metrics_text(self):
+        """Prometheus text exposition (None when telemetry is off)."""
+        def _text():
+            if self.core.tel.enabled:
+                self.core.tel.gauge(
+                    "driver_restarts", self.restarts,
+                    help="Supervised step() retries by the async driver")
+            return self.core.metrics_text()
+
+        return await self._call(_text)
+
+    async def timeline(self, uid):
+        """Per-request lifecycle timeline (None when unknown or
+        telemetry is off)."""
+        return await self._call(self.core.request_timeline, uid)
+
+    async def step_trace(self):
+        """Chrome-trace JSON object of recorded step spans."""
+        return await self._call(self.core.step_trace)
+
     def _output_of(self, req: Request) -> RequestOutput:
         text = (self.detokenizer(list(req.generated))
                 if self.detokenizer is not None else "")

@@ -99,15 +99,26 @@ from repro.configs.base import ModelConfig
 from repro.core import cache as chai_cache
 from repro.core import clustering
 from repro.launch import steps as steps_mod
+from repro.serving import exporters as exporters_mod
 from repro.serving import faults as faults_mod
 from repro.serving import invariants as invariants_mod
 from repro.serving import sampling as sampling_mod
+from repro.serving import telemetry as telemetry_mod
 from repro.serving.cohort import CohortSchedulerMixin
 from repro.serving.faults import (CapacityError, EngineFault, FaultInjector,
                                   InjectedFault, QuarantineError,
                                   RequestError, SnapshotRestoreError,
                                   ValidationError)
 from repro.serving.sampling import SamplingParams
+
+#: phase id -> timeline-event name (serving/telemetry.py lifecycle)
+_PHASE_NAMES = {
+    chai_cache.PHASE_FREE: "FREE",
+    chai_cache.PHASE_PREFILL: "PREFILL",
+    chai_cache.PHASE_WARMUP: "WARMUP",
+    chai_cache.PHASE_CLUSTER: "CLUSTER",
+    chai_cache.PHASE_STEADY: "STEADY",
+}
 
 
 @dataclasses.dataclass(eq=False)       # identity semantics: the queue and
@@ -245,6 +256,23 @@ class EngineConfig:
     # bookkeeping. "off": no auditing (benchmark hot loops). A failed
     # audit raises EngineFault (the engine state itself is suspect).
     audit_level: str = "basic"     # "off" | "basic" | "deep"
+    # -- telemetry (serving/telemetry.py) -------------------------------
+    # "off" (default): NullTelemetry — every hook is a no-op behind an
+    # ``enabled`` guard, and the decode step stays jaxpr-identical to an
+    # uninstrumented engine (claim-checked by bench_telemetry_overhead).
+    # "basic": MetricsRegistry counters/gauges/histograms + per-request
+    # lifecycle timelines (TTFT / ITL / queue time). "trace":
+    # additionally records structured spans for every step() stage,
+    # exportable as a Chrome trace (``step_trace()``).
+    telemetry: str = "off"         # "off" | "basic" | "trace"
+    # -- degraded-decode healing ----------------------------------------
+    # After a kernel-path failure flips ``degraded_decode`` the engine
+    # stays on the jnp reference jits. With decode_heal_steps = N > 0 it
+    # reverts to the fused path after N consecutive clean decode steps
+    # (no kernel.decode fault observed); each revert counts in
+    # ``decode_heals``. 0 (default) = never heal (the historical
+    # permanently-degraded behaviour).
+    decode_heal_steps: int = 0
 
 
 class EngineCore(CohortSchedulerMixin):
@@ -264,6 +292,11 @@ class EngineCore(CohortSchedulerMixin):
         if ecfg.audit_level not in ("off", "basic", "deep"):
             raise ValueError(f"audit_level must be off|basic|deep, "
                              f"got {ecfg.audit_level!r}")
+        if ecfg.decode_heal_steps < 0:
+            raise ValueError("decode_heal_steps must be >= 0, got "
+                             f"{ecfg.decode_heal_steps}")
+        # telemetry tier validation happens inside make_telemetry
+        self.tel = telemetry_mod.make_telemetry(ecfg.telemetry)
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -274,6 +307,9 @@ class EngineCore(CohortSchedulerMixin):
         self.audit_steps = 0           # step()s that ran the auditor
         self.degraded_decode = False   # fused/relay path failed: jnp now
         self.decode_fallbacks = 0      # kernel-path failures survived
+        self.decode_heals = 0          # degraded->fused reverts (healing)
+        self._heal_clean = 0           # consecutive clean degraded steps
+        self._decode_fault_hit = False  # kernel.decode fired this step
         self.relay_dissolved = 0       # relay groups dissolved by fault
         self.swap_checksum_failures = 0
         self._jnp_steps = None         # lazily-built degraded decode jits
@@ -282,6 +318,8 @@ class EngineCore(CohortSchedulerMixin):
         self.done: List[Request] = []
         self.redispatched = 0
         self.steps_executed = 0        # continuous: batched decode steps
+        self._step_calls = 0           # every _step_inner entry (spans)
+        self._span_step = -1           # step ordinal current spans carry
         b, s = ecfg.batch_slots, ecfg.max_seq
 
         chai_on = ecfg.use_chai and cfg.chai.enabled and cfg.k_max > 0
@@ -498,6 +536,15 @@ class EngineCore(CohortSchedulerMixin):
         req.generated = []
         self.queue.append(req)
         self._requests[uid] = req
+        if self.tel.enabled:
+            self.tel.counter("requests_submitted_total",
+                             help="Requests enqueued via add_request")
+            self.tel.gauge("engine_queue_depth", len(self.queue),
+                           help="Requests waiting in the arrival queue")
+            self.tel.event(req.uid, "enqueue", t=req.t_enqueue,
+                           prompt_tokens=int(len(req.prompt)),
+                           max_new_tokens=int(max_new),
+                           priority=int(priority))
         return req
 
     def _done(self, req: Request):
@@ -509,6 +556,8 @@ class EngineCore(CohortSchedulerMixin):
         self.done.append(req)
         if self._requests.get(req.uid) is req:
             del self._requests[req.uid]
+        if self.tel.enabled:
+            self._tel_finish(req)
 
     def reap_done(self) -> List[Request]:
         """Return AND clear the finished-request list. Long-lived
@@ -572,16 +621,31 @@ class EngineCore(CohortSchedulerMixin):
         the batch keeps running. ``EngineConfig.audit_level`` gates an
         invariant audit after the iteration; a violation raises
         ``EngineFault``."""
-        outs = self._step_inner()
+        tel = self.tel
+        if tel.enabled:
+            t0 = time.perf_counter()
+        with tel.span("step", step=self._step_calls):
+            outs = self._step_inner()
         if self.ecfg.audit_level != "off" \
                 and self.ecfg.scheduler == "continuous":
             self.audit_steps += 1
-            vio = invariants_mod.audit(
-                self, deep=self.ecfg.audit_level == "deep")
+            with tel.span("audit", step=self._span_step):
+                vio = invariants_mod.audit(
+                    self, deep=self.ecfg.audit_level == "deep")
             if vio:
                 raise EngineFault(
                     f"invariant audit failed at step "
                     f"{self.steps_executed}", violations=vio)
+        if tel.enabled:
+            tel.observe("engine_step_seconds", time.perf_counter() - t0,
+                        help="Wall time of one step() iteration")
+            tel.counter("engine_steps_total",
+                        help="step() iterations executed")
+            tel.gauge("engine_queue_depth", len(self.queue),
+                      help="Requests waiting in the arrival queue")
+            tel.gauge("engine_active_slots",
+                      sum(1 for r in self._slot_req if r is not None),
+                      help="Batch slots holding a live request")
         return outs
 
     def _step_inner(self) -> List[StepOutput]:
@@ -593,9 +657,13 @@ class EngineCore(CohortSchedulerMixin):
         b = self.ecfg.batch_slots
         drained = False
         self._fault_blocked = False
+        tel = self.tel
+        self._span_step = self._step_calls
+        self._step_calls += 1
         self._advance_prefills(outs)
         while True:
-            blocked = self._admit(outs)
+            with tel.span("admit", step=self._span_step):
+                blocked = self._admit(outs)
             active = [i for i in range(b)
                       if self._slot_req[i] is not None
                       and self._phases[i] != chai_cache.PHASE_PREFILL]
@@ -629,8 +697,12 @@ class EngineCore(CohortSchedulerMixin):
                 f"request uid={head.uid} needs {n * share} "
                 f"clustered pages; pool capacity "
                 f"{self.chai_pool.capacity}", uid=head.uid)
-        self._cluster_transitions(active)
-        outs.extend(self._decode(active))
+        with tel.span("cluster", step=self._span_step):
+            self._cluster_transitions(active, outs)
+        # A kernel.cluster quarantine may have retired slots mid-list.
+        active = [i for i in active if self._slot_req[i] is not None]
+        if active:
+            outs.extend(self._decode(active))
         return outs
 
     # -- fault injection / quarantine --------------------------------------
@@ -639,7 +711,12 @@ class EngineCore(CohortSchedulerMixin):
         injector is armed or nothing fires."""
         if self.faults is None:
             return None
-        return self.faults.fire(site, step=self.steps_executed, uid=uid)
+        spec = self.faults.fire(site, step=self.steps_executed, uid=uid)
+        if spec is not None and self.tel.enabled:
+            self.tel.counter("faults_injected_total", site=site,
+                             mode=spec.mode,
+                             help="Injected faults that fired, by site")
+        return spec
 
     def _quarantine_queued(self, req: Request, err: RequestError,
                            outs: List[StepOutput]):
@@ -652,6 +729,8 @@ class EngineCore(CohortSchedulerMixin):
         req.t_done = time.time()
         req.retire_step = self.steps_executed
         self.quarantined += 1
+        if self.tel.enabled:
+            self.tel.event(req.uid, "quarantine", reason=str(err))
         self._done(req)
         outs.append(StepOutput(req.uid, [], True,
                                sampling_mod.FINISH_ERROR))
@@ -671,6 +750,128 @@ class EngineCore(CohortSchedulerMixin):
             self._slot_locked[i] = []
         req.generated = req.generated[:gen0]
         req.cache_hit, req.cached_tokens, req.prefill_tokens = hit0
+
+    # -- telemetry hooks (all callers guard on self.tel.enabled) -----------
+    def _tel_admit(self, i: int, req: Request, plan: dict, resumed: bool):
+        """Admission succeeded: labeled admit counter, queue-wait
+        histogram, CHAI cache-hit token counters, timeline event."""
+        tel = self.tel
+        kind = "swap" if resumed else plan["kind"]
+        tel.counter("requests_admitted_total", kind=kind,
+                    help="Slot admissions by plan kind")
+        tel.observe("request_queue_seconds",
+                    max(0.0, time.time() - req.t_enqueue),
+                    help="Enqueue-to-admission wait")
+        tel.event(req.uid, "resume" if resumed else "admit", slot=i,
+                  kind=kind, step=self.steps_executed,
+                  cached_tokens=int(req.cached_tokens))
+        if req.cache_hit == "prefix":
+            tel.counter("prefix_hit_tokens_total", req.cached_tokens,
+                        help="Prompt tokens served from the radix cache")
+        elif req.cache_hit == "snapshot":
+            tel.counter("snapshot_hit_tokens_total", req.cached_tokens,
+                        help="Prompt tokens served from CHAI snapshots")
+            # Snapshot admissions land in STEADY with warmup tokens
+            # already emitted: their first token happened here.
+            if req.generated and req.t_first_token:
+                tel.event(req.uid, "first_token", t=req.t_first_token)
+                tel.observe("request_ttft_seconds",
+                            max(0.0, req.t_first_token - req.t_enqueue),
+                            help="Enqueue-to-first-token latency")
+                tel.counter("tokens_generated_total", len(req.generated),
+                            help="Generated tokens emitted")
+                tel.token(req.uid, n=len(req.generated),
+                          t=req.t_first_token)
+
+    def _tel_finish(self, req: Request):
+        """Request reached a terminal state (retire, abort, quarantine,
+        replay): reason-labeled counter, latency histogram, timeline
+        seal."""
+        tel = self.tel
+        reason = req.finish_reason or "unknown"
+        tel.counter("requests_finished_total", reason=reason,
+                    help="Requests finished, by finish_reason")
+        if req.error:
+            tel.counter("requests_quarantined_total",
+                        help="Requests typed-failed and quarantined")
+        if req.t_done and req.t_enqueue:
+            tel.observe("request_latency_seconds",
+                        max(0.0, req.t_done - req.t_enqueue),
+                        help="Enqueue-to-completion latency")
+        data = {"reason": reason,
+                "tokens": len(req.generated or ()),
+                "preemptions": int(req.preemptions)}
+        if req.error:
+            data["error"] = req.error
+        if req.cache_hit:
+            data["cache_hit"] = req.cache_hit
+        tel.event(req.uid, "finish", t=req.t_done or None, **data)
+        tel.finish(req.uid)
+
+    def _tel_clusters(self, i: int):
+        """Per-layer cluster-count gauges from slot ``i``'s freshly
+        written clustering context (one small device fetch per CLUSTER
+        transition — never on the per-step path)."""
+        ctx = {k: np.asarray(v[:, i]) for k, v in self._dev_ctx.items()}
+        if "h2c" in ctx:                      # MHA: (nA, H) head->cluster
+            h2c = ctx["h2c"]
+            for layer in range(h2c.shape[0]):
+                self.tel.gauge("chai_clusters", len(np.unique(h2c[layer])),
+                               layer=layer,
+                               help="Clusters per attention layer at the "
+                                    "latest CLUSTER transition")
+        elif "cluster_of" in ctx:             # GQA: (nA, KV, qpk)
+            co = ctx["cluster_of"]
+            for layer in range(co.shape[0]):
+                n = sum(int(len(np.unique(co[layer, g])))
+                        for g in range(co.shape[1]))
+                self.tel.gauge("chai_clusters", n, layer=layer,
+                               help="Clusters per attention layer at the "
+                                    "latest CLUSTER transition")
+
+    def _refresh_gauges(self):
+        """Point-in-time gauges recomputed at scrape time."""
+        tel = self.tel
+        tel.gauge("engine_queue_depth", len(self.queue),
+                  help="Requests waiting in the arrival queue")
+        tel.gauge("engine_active_slots",
+                  sum(1 for r in self._slot_req if r is not None),
+                  help="Batch slots holding a live request")
+        tel.gauge("engine_degraded_decode", int(self.degraded_decode),
+                  help="1 while decode runs the jnp reference fallback")
+        if self.paged:
+            tel.gauge("kv_bytes_allocated", self.kv_bytes(),
+                      help="Allocated KV bytes right now")
+            tel.gauge("dense_pages_in_use", self.dense_pool.pages_in_use,
+                      help="Dense-pool pages in use")
+            if self.chai_pool is not None:
+                tel.gauge("chai_pages_in_use",
+                          self.chai_pool.pages_in_use,
+                          help="Clustered-pool pages in use")
+
+    def metrics(self):
+        """JSON-ready metrics snapshot (refreshes point-in-time gauges
+        first). None when ``EngineConfig.telemetry == "off"``."""
+        if not self.tel.enabled:
+            return None
+        self._refresh_gauges()
+        return self.tel.snapshot()
+
+    def metrics_text(self):
+        """Prometheus text exposition of ``metrics()`` (None when
+        telemetry is off)."""
+        snap = self.metrics()
+        return None if snap is None else exporters_mod.to_prometheus(snap)
+
+    def request_timeline(self, uid):
+        """Lifecycle timeline (events + derived TTFT/ITL/queue summary)
+        for one request uid; None when unknown or telemetry is off."""
+        return self.tel.timeline(uid)
+
+    def step_trace(self):
+        """Chrome-trace JSON object of the recorded step spans (empty
+        below the "trace" tier)."""
+        return exporters_mod.to_chrome_trace(self.tel.spans)
 
     # -- continuous scheduler ----------------------------------------------
     @staticmethod
@@ -995,6 +1196,16 @@ class EngineCore(CohortSchedulerMixin):
     def _record_kv_bytes(self, phases=None):
         bytes_now = self.kv_bytes()
         self._kv_peak = max(self._kv_peak, bytes_now)
+        if self.tel.enabled:
+            self.tel.gauge("kv_bytes_allocated", bytes_now,
+                           help="Allocated KV bytes right now")
+            self.tel.gauge("dense_pages_in_use",
+                           self.dense_pool.pages_in_use,
+                           help="Dense-pool pages in use")
+            if self.chai_pool is not None:
+                self.tel.gauge("chai_pages_in_use",
+                               self.chai_pool.pages_in_use,
+                               help="Clustered-pool pages in use")
         if len(self.kv_bytes_history) >= self._HISTORY_MAX:
             return
         rec = {
@@ -1048,6 +1259,22 @@ class EngineCore(CohortSchedulerMixin):
         req.admit_step = req.retire_step = self.steps_executed
         self.prefix_cache.stats["snapshot_hits"] += 1
         self.prefix_cache.stats["tokens_reused"] += len(req.prompt)
+        if self.tel.enabled:
+            tel = self.tel
+            tel.counter("requests_admitted_total", kind="replay",
+                        help="Slot admissions by plan kind")
+            tel.counter("snapshot_hit_tokens_total", len(req.prompt),
+                        help="Prompt tokens served from CHAI snapshots")
+            tel.event(req.uid, "admit", kind="replay", slot=-1,
+                      step=self.steps_executed,
+                      cached_tokens=int(req.cached_tokens))
+            tel.event(req.uid, "first_token", t=req.t_first_token)
+            tel.observe("request_ttft_seconds",
+                        max(0.0, req.t_first_token - req.t_enqueue),
+                        help="Enqueue-to-first-token latency")
+            tel.counter("tokens_generated_total", len(toks),
+                        help="Generated tokens emitted")
+            tel.token(req.uid, n=len(toks), t=req.t_first_token)
         self._done(req)
 
     def _capture_snapshot(self, slot, req, pages):
@@ -1168,6 +1395,8 @@ class EngineCore(CohortSchedulerMixin):
             req.slot, req.admit_step = i, self.steps_executed
             self._slot_req[i] = req
             self._set_slot_sampling(i, req.sampling)
+            if self.tel.enabled:
+                self._tel_admit(i, req, plan, resumed)
             if resumed:
                 continue    # tokens so far were already emitted/checked
             trunc, reason = sampling_mod.scan_finish(
@@ -1220,11 +1449,19 @@ class EngineCore(CohortSchedulerMixin):
             self.prefix_cache.stats["tokens_reused"] += len(req.prompt)
             self._next_tok[i] = snap.tokens[-1]
             self._tok_dirty = True
+            if self.tel.enabled:
+                self.tel.event(req.uid, "phase", phase="STEADY", slot=i)
             return
         if plan["kind"] == "swap":
             self._swap_in_slot(i, req)
             return
         self._phases[i] = chai_cache.PHASE_PREFILL
+        if self._fault("kernel.prefill", uid=req.uid) is not None:
+            raise QuarantineError(
+                f"injected prefill-kernel failure for uid={req.uid}",
+                uid=req.uid)
+        if self.tel.enabled:
+            self.tel.event(req.uid, "phase", phase="PREFILL", slot=i)
         prompt = req.prompt
         if plan["kind"] == "prefix":
             pre = plan["prefix_len"]
@@ -1340,10 +1577,25 @@ class EngineCore(CohortSchedulerMixin):
         self._slot_count[i] = 1
         tok = self._sample_first(logits, req)
         req.generated.append(tok)
-        if not req.t_first_token:
+        first = not req.t_first_token
+        if first:
             req.t_first_token = time.time()
         self._next_tok[i] = tok
         self._tok_dirty = True
+        if self.tel.enabled:
+            tel = self.tel
+            tel.event(req.uid, "phase", phase="WARMUP", slot=i)
+            if req.prefill_tokens > 0:
+                tel.counter("prefill_tokens_total", req.prefill_tokens,
+                            help="Prompt tokens actually forwarded")
+            if first:
+                tel.event(req.uid, "first_token", t=req.t_first_token)
+                tel.observe("request_ttft_seconds",
+                            max(0.0, req.t_first_token - req.t_enqueue),
+                            help="Enqueue-to-first-token latency")
+            tel.counter("tokens_generated_total",
+                        help="Generated tokens emitted")
+            tel.token(req.uid, t=req.t_first_token if first else None)
 
     # -- priority preemption -----------------------------------------------
     def _swap_in_slot(self, i: int, req: Request):
@@ -1420,7 +1672,10 @@ class EngineCore(CohortSchedulerMixin):
             vecs = [self._page_vec(pages.get(k, []))
                     for k in ("kg", "vg", "kc", "vc")]
             swap_out, _ = self._swap_fns_get()
-            cols, pools = swap_out(self._dev_state, jnp.int32(i), *vecs)
+            with self.tel.span("preempt.swap", step=self._span_step,
+                               slot=i):
+                cols, pools = swap_out(self._dev_state, jnp.int32(i),
+                                       *vecs)
             resume = {
                 "phase": phase, "count": self._slot_count[i],
                 "cols": jax.device_get(cols),
@@ -1456,10 +1711,20 @@ class EngineCore(CohortSchedulerMixin):
         self._samp_host["temperature"][i] = 0.0
         self._samp_dirty = True
         self.queue.insert(min(1, len(self.queue)), r)
+        if self.tel.enabled:
+            self.tel.counter("preemptions_total",
+                             help="Slots reclaimed for a higher-priority "
+                                  "arrival")
+            self.tel.event(r.uid, "preempt", slot=i,
+                           phase=_PHASE_NAMES.get(phase, str(phase)),
+                           step=self.steps_executed)
 
-    def _cluster_transitions(self, active):
+    def _cluster_transitions(self, active, outs: List[StepOutput]):
         """CLUSTER + compact slots whose warmup just completed; paged:
-        the slot's dense K pages return to the pool here."""
+        the slot's dense K pages return to the pool here. An injected
+        ``kernel.cluster`` fault quarantines the transitioning request
+        BEFORE clustering mutates the pools (``outs`` receives its typed
+        StepOutput); other slots keep decoding."""
         if not self.chai_on:
             return
         cfg = self.cfg
@@ -1468,8 +1733,22 @@ class EngineCore(CohortSchedulerMixin):
             if not (self._slot_count[i] == warm + 1
                     and self._phases[i] == chai_cache.PHASE_WARMUP):
                 continue
+            req = self._slot_req[i]
+            if self._fault("kernel.cluster", uid=req.uid) is not None:
+                self._retire_slot(
+                    i, sampling_mod.FINISH_ERROR, index=False,
+                    error=f"injected cluster-transition failure for "
+                          f"uid={req.uid}")
+                outs.append(StepOutput(req.uid, [], True,
+                                       sampling_mod.FINISH_ERROR))
+                continue
             self._phases[i] = chai_cache.PHASE_CLUSTER
             self.cluster_transitions += 1
+            if self.tel.enabled:
+                self.tel.counter("cluster_transitions_total",
+                                 help="WARMUP->CLUSTER->STEADY "
+                                      "transitions executed")
+                self.tel.event(req.uid, "phase", phase="CLUSTER", slot=i)
             if self.paged:
                 kc_vec = self._page_vec(self._slot_pages[i].get("kc", []))
                 vc_vec = self._page_vec(self._slot_pages[i].get("vc", []))
@@ -1483,15 +1762,25 @@ class EngineCore(CohortSchedulerMixin):
                     self._capture_snapshot(i, self._slot_req[i],
                                            self._slot_pages[i])
                 if self.chai_clustered:
+                    freed = len(self._slot_pages[i]["kg"])
                     self.dense_pool.free(self._slot_pages[i].pop("kg"))
                     if cfg.chai.share_values:
+                        freed += len(self._slot_pages[i]["vg"])
                         self.dense_pool.free(self._slot_pages[i].pop("vg"))
+                    if self.tel.enabled:
+                        self.tel.counter(
+                            "chai_dense_pages_freed_total", freed,
+                            help="Dense pages freed at compaction (the "
+                                 "paper's KV saving, realized)")
                 self._record_kv_bytes(self._phases)
             else:
                 self._dev_state, self._dev_ctx = self._cluster_fn()(
                     self._dev_state, self._dev_ctx, jnp.int32(i))
                 self._ctx_version += 1
             self._phases[i] = chai_cache.PHASE_STEADY
+            if self.tel.enabled:
+                self.tel.event(req.uid, "phase", phase="STEADY", slot=i)
+                self._tel_clusters(i)
 
     # -- shared-prefix relay decode ----------------------------------------
     def _ctx_host(self):
@@ -1669,6 +1958,10 @@ class EngineCore(CohortSchedulerMixin):
             # decode path — grouped-vs-ungrouped is token-identical, so
             # dissolving is always safe.
             self.relay_dissolved += 1
+            if self.tel.enabled:
+                self.tel.counter("relay_dissolved_total",
+                                 help="Relay groups dissolved by an "
+                                      "injected residency fault")
             return None
         ps = self.ecfg.page_size
         b = self.ecfg.batch_slots
@@ -1713,6 +2006,12 @@ class EngineCore(CohortSchedulerMixin):
             "gid": jnp.asarray(gid), "midx": jnp.asarray(midx),
             "len": jnp.asarray(plen_b), "in_group": jnp.asarray(ing)})
         self.relay_grouped_slots += int(ing.sum())
+        if self.tel.enabled:
+            self.tel.counter("relay_groups_formed_total", len(groups),
+                             help="Shared-prefix relay groups formed")
+            self.tel.counter("relay_grouped_slots_total", int(ing.sum()),
+                             help="Slot-steps decoded through a relay "
+                                  "group")
         return relay
 
     def _decode(self, active) -> List[StepOutput]:
@@ -1722,37 +2021,61 @@ class EngineCore(CohortSchedulerMixin):
         mirrors are re-uploaded only after an admission/retire edited
         them."""
         outs: List[StepOutput] = []
+        tel = self.tel
+        step_no = self._span_step
         b = self.ecfg.batch_slots
         if self._tok_dirty:
             self._next_tok_dev = jnp.asarray(self._next_tok)
             self._tok_dirty = False
         inputs = {"tokens": self._next_tok_dev}
         occupied = self._phases[self._phases != chai_cache.PHASE_FREE]
-        relay = self._build_relay(active) if self.relay_decode else None
+        with tel.span("relay.form", step=step_no):
+            relay = self._build_relay(active) if self.relay_decode \
+                else None
+        self._decode_fault_hit = False
         try:
-            logits, state = self._dispatch_decode(inputs, relay, occupied)
+            with tel.span("decode.dispatch", step=step_no,
+                          degraded=self.degraded_decode):
+                logits, state = self._dispatch_decode(inputs, relay,
+                                                      occupied)
         except Exception as err:
             if isinstance(err, EngineFault):
                 raise
-            # Kernel-path failure (injected or real): permanently fall
-            # back to the jnp reference jits for this engine and retry
-            # the step. Safe on CPU (buffer donation is a no-op there);
-            # donating backends would need a state re-upload first.
+            # Kernel-path failure (injected or real): fall back to the
+            # jnp reference jits for this engine and retry the step
+            # (``decode_heal_steps`` can revert later). Safe on CPU
+            # (buffer donation is a no-op there); donating backends
+            # would need a state re-upload first.
             self.degraded_decode = True
             self.decode_fallbacks += 1
+            self._heal_clean = 0
+            if tel.enabled:
+                tel.counter("decode_fallbacks_total",
+                            help="Fused-decode failures survived via the "
+                                 "jnp reference fallback")
+                tel.gauge("engine_degraded_decode", 1,
+                          help="1 while decode runs the jnp reference "
+                               "fallback")
             try:
-                logits, state = self._dispatch_decode(inputs, None,
-                                                      occupied)
+                with tel.span("decode.dispatch", step=step_no,
+                              degraded=True, retry=True):
+                    logits, state = self._dispatch_decode(inputs, None,
+                                                          occupied)
             except Exception as err2:
                 raise EngineFault(
                     "decode failed on the fused path AND the jnp "
                     f"reference fallback: {err2!r} "
                     f"(original failure: {err!r})") from err2
+        else:
+            if self.degraded_decode and self.ecfg.decode_heal_steps > 0:
+                self._maybe_heal()
         if self.faults is not None:
             for i in active:
                 if self._fault("step.logits",
                                uid=self._slot_req[i].uid) is not None:
                     logits = logits.at[i].set(jnp.nan)
+        sample_cm = tel.span("sample", step=step_no)
+        sample_cm.__enter__()
         finite = np.asarray(self._finite_rows(logits))
         self._dev_state = state
         temps = self._samp_host["temperature"]
@@ -1798,7 +2121,10 @@ class EngineCore(CohortSchedulerMixin):
         self._next_tok_dev = tok_dev
         toks = np.asarray(tok_dev)
         self._next_tok[:] = toks
+        sample_cm.__exit__(None, None, None)
         self.steps_executed += 1
+        retire_cm = tel.span("retire", step=step_no)
+        retire_cm.__enter__()
         for i in active:
             r = self._slot_req[i]
             if not finite[i]:
@@ -1815,11 +2141,16 @@ class EngineCore(CohortSchedulerMixin):
                 continue
             r.generated.append(int(toks[i]))
             self._slot_count[i] += 1
+            if tel.enabled:
+                tel.counter("tokens_generated_total",
+                            help="Generated tokens emitted")
+                tel.token(r.uid)
             reason = self._finish_of(r)
             if reason:
                 self._retire_slot(i, reason)
             outs.append(StepOutput(r.uid, [int(toks[i])], bool(reason),
                                    reason))
+        retire_cm.__exit__(None, None, None)
         if self.paged:
             self._record_kv_bytes(self._phases)
         return outs
@@ -1830,9 +2161,10 @@ class EngineCore(CohortSchedulerMixin):
         swaps in the jnp reference jits (``_jnp_decode_steps``) — same
         makers, traced with the fused kernels disabled."""
         state = self._dev_state
-        if self._fault("kernel.decode") is not None \
-                and not self.degraded_decode:
-            raise InjectedFault("kernel.decode")
+        if self._fault("kernel.decode") is not None:
+            self._decode_fault_hit = True
+            if not self.degraded_decode:
+                raise InjectedFault("kernel.decode")
         if relay is not None:
             self.relay_steps += 1
             return self._relay_step(self.params, inputs, state,
@@ -1852,6 +2184,29 @@ class EngineCore(CohortSchedulerMixin):
         if (occupied == chai_cache.PHASE_WARMUP).all():
             return mha(self.params, inputs, state)
         return mixed(self.params, inputs, state, self._dev_ctx)
+
+    def _maybe_heal(self):
+        """Degraded-decode healing: after ``decode_heal_steps``
+        consecutive clean decode steps (dispatch succeeded and the
+        kernel.decode injector stayed quiet), revert to the fused jits.
+        A firing arm — even one masked by the degraded path — resets the
+        clean-step count."""
+        if self._decode_fault_hit:
+            self._heal_clean = 0
+            return
+        self._heal_clean += 1
+        if self._heal_clean < self.ecfg.decode_heal_steps:
+            return
+        self.degraded_decode = False
+        self.decode_heals += 1
+        self._heal_clean = 0
+        if self.tel.enabled:
+            self.tel.counter("decode_heals_total",
+                             help="Degraded decode reverted to the fused "
+                                  "kernel path")
+            self.tel.gauge("engine_degraded_decode", 0,
+                           help="1 while decode runs the jnp reference "
+                                "fallback")
 
     def _jnp_decode_steps(self):
         """Degraded decode jits, built lazily on the first kernel-path
@@ -1904,6 +2259,8 @@ class EngineCore(CohortSchedulerMixin):
         r.error = error
         if error:
             self.quarantined += 1
+            if self.tel.enabled:
+                self.tel.event(r.uid, "quarantine", reason=error)
         r.t_done = time.time()
         r.retire_step = self.steps_executed
         self._done(r)
@@ -1942,6 +2299,7 @@ class EngineCore(CohortSchedulerMixin):
                 "audit_steps": self.audit_steps,
                 "degraded_decode": self.degraded_decode,
                 "decode_fallbacks": self.decode_fallbacks,
+                "decode_heals": self.decode_heals,
                 "relay_dissolved": self.relay_dissolved,
                 "swap_checksum_failures": self.swap_checksum_failures,
                 "injector": (self.faults.report()

@@ -43,6 +43,13 @@ Injection sites (where the engine consults the injector):
                           step dissolve to the per-request decode path.
 ``kernel.decode``         the fused decode dispatch: the engine falls back
                           to the jnp reference path (``degraded_decode``).
+``kernel.prefill``        slot prefill at admission (``_admit_to_slot``,
+                          after the slot enters PREFILL): the request is
+                          quarantined; the slot tears down refcount-exactly.
+``kernel.cluster``        the WARMUP→CLUSTER transition
+                          (``_cluster_transitions``): the transitioning
+                          request is quarantined before clustering mutates
+                          the pools; others keep decoding.
 ``step.logits``           per-slot logits poisoning (NaN): the NaN/Inf
                           guard quarantines the slot, others are untouched.
 ========================  ==================================================
@@ -114,7 +121,8 @@ class InjectedFault(Exception):
 
 SITES = frozenset({
     "pool.alloc", "swap.corrupt", "swap.in", "snapshot.restore",
-    "relay.residency", "kernel.decode", "step.logits",
+    "relay.residency", "kernel.decode", "kernel.prefill", "kernel.cluster",
+    "step.logits",
 })
 
 #: spec modes with meaning at their sites (see module docstring)

@@ -137,6 +137,15 @@ def run_soak(cfg, params, ecfg: EngineConfig, *,
         "prefix_stats": core.prefix_stats(),
         "preemptions": core.preemptions,
     }
+    if core.tel.enabled:
+        # Wall-clock-dependent, so a separate report section: the
+        # replay/parity comparisons above read only "requests" and the
+        # injector log, which stay byte-deterministic.
+        report["telemetry"] = {
+            "metrics": core.metrics(),
+            "chrome_trace": core.step_trace(),
+            "timelines": core.tel.timelines(),
+        }
     return report
 
 
