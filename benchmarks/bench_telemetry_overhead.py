@@ -139,8 +139,12 @@ def run():
     parsed = exporters.parse_prometheus(eng.metrics_text())
     tok_total = sum(v for name, _, v in parsed["samples"]
                     if name == "tokens_generated_total")
+    # The KV-tier residency gauges must survive the exposition round
+    # trip: every paged engine reports per-(tier, kind) page counts.
+    sample_names = {name for name, _, _ in parsed["samples"]}
     prom_ok = (len(parsed["samples"]) > 0
-               and int(tok_total) == n_tokens)
+               and int(tok_total) == n_tokens
+               and "kv_tier_pages" in sample_names)
 
     payload = {
         "proxy_note": "tiny CPU model; the jaxpr-identity and export "

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.clustering import chai_widths
@@ -69,6 +70,56 @@ def quant_rows(x):
 
 def dequant_rows(q, scale):
     return q.astype(jnp.float32) * scale[..., None]
+
+
+# -- int4 row quantization (host-side: the compressed KV tier) --------------
+#
+# The serving tiers (serving/kv_tiers.py) store cold KV pages in host
+# memory; under host pressure radix-cached pages drop to an int4 packed
+# representation — the same symmetric per-row scheme as ``quant_rows``
+# with the int4 extreme ±7 and two codes packed per byte. These run on
+# demoted (host-resident) payloads, so they are numpy, not jnp.
+
+def quant_rows_int4(x):
+    """Symmetric int4 over the last axis. x: (..., hd) ->
+    (int8 codes in [-7, 7] same-shape, f32 scale (...))."""
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=-1)
+    scale = np.maximum(amax, 1e-6) / 7.0
+    q = np.clip(np.rint(x / scale[..., None]), -7, 7).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+def dequant_rows_int4(q, scale):
+    return (np.asarray(q, np.int8).astype(np.float32)
+            * np.asarray(scale, np.float32)[..., None])
+
+
+def pack_int4(q):
+    """Pack int4 codes (int8 values in [-8, 7]) two per byte along the
+    last axis; odd lengths zero-pad. (..., n) int8 -> (..., ceil(n/2))
+    uint8, low nibble = even index."""
+    q = np.asarray(q, np.int8)
+    if q.shape[-1] % 2:
+        q = np.concatenate(
+            [q, np.zeros(q.shape[:-1] + (1,), np.int8)], axis=-1)
+    lo = (q[..., 0::2] & 0x0F).astype(np.uint8)
+    hi = (q[..., 1::2] & 0x0F).astype(np.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed, n):
+    """Inverse of ``pack_int4``: (..., ceil(n/2)) uint8 -> (..., n) int8
+    codes, sign-extending each nibble."""
+    p = np.asarray(packed, np.uint8)
+    lo = (p & 0x0F).astype(np.int8)
+    hi = ((p >> 4) & 0x0F).astype(np.int8)
+    lo = np.where(lo >= 8, lo - 16, lo).astype(np.int8)
+    hi = np.where(hi >= 8, hi - 16, hi).astype(np.int8)
+    out = np.empty(p.shape[:-1] + (2 * p.shape[-1],), np.int8)
+    out[..., 0::2] = lo
+    out[..., 1::2] = hi
+    return out[..., :n]
 
 
 def chai_state_structs(cfg: ModelConfig, batch: int, max_seq: int):

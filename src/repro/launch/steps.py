@@ -421,6 +421,46 @@ def make_page_copy(cfg: ModelConfig, kind: str):
     return copy
 
 
+def make_page_fetch(cfg: ModelConfig, kind: str):
+    """Gather ONE physical page's contents (all global layers) out of a
+    pool — the host-offload demotion read (``kind``: dense|chai).
+    Returns a payload dict ``{"data": (nG, rows, ps, hd)}`` plus a
+    ``"scale"`` plane under int8 KV. One trace per kind: the page id is
+    a traced scalar."""
+    key, skey = (("kvp", "kvp_scale") if kind == "dense"
+                 else ("cp", "cp_scale"))
+
+    def fetch(state, page):
+        out = {"data": jax.lax.dynamic_index_in_dim(state[key], page, 1,
+                                                    keepdims=False)}
+        if skey in state:
+            out["scale"] = jax.lax.dynamic_index_in_dim(
+                state[skey], page, 1, keepdims=False)
+        return out
+
+    return fetch
+
+
+def make_page_put(cfg: ModelConfig, kind: str):
+    """Scatter a host payload back into ONE physical page — the tier
+    promotion write, the exact inverse of ``make_page_fetch``. Donate
+    ``state`` when jitting."""
+    key, skey = (("kvp", "kvp_scale") if kind == "dense"
+                 else ("cp", "cp_scale"))
+
+    def put(state, page, payload):
+        state = dict(state)
+        state[key] = jax.lax.dynamic_update_index_in_dim(
+            state[key], payload["data"].astype(state[key].dtype), page, 1)
+        if skey in state:
+            state[skey] = jax.lax.dynamic_update_index_in_dim(
+                state[skey], payload["scale"].astype(state[skey].dtype),
+                page, 1)
+        return state
+
+    return put
+
+
 def make_paged_slot_cluster(cfg: ModelConfig, identify_fn):
     """Paged CLUSTER transition: identify membership, scatter it into the
     batched ctx, gather the slot's representative K rows from its dense

@@ -330,6 +330,11 @@ class AsyncLLM:
         """Chrome-trace JSON object of recorded step spans."""
         return await self._call(self.core.step_trace)
 
+    async def tier_stats(self):
+        """Hierarchical KV tier counters (per-tier residency, transition
+        totals, prefetch hits/misses); None on non-paged engines."""
+        return await self._call(self.core.tier_stats)
+
     def _output_of(self, req: Request) -> RequestOutput:
         text = (self.detokenizer(list(req.generated))
                 if self.detokenizer is not None else "")

@@ -102,6 +102,7 @@ from repro.launch import steps as steps_mod
 from repro.serving import exporters as exporters_mod
 from repro.serving import faults as faults_mod
 from repro.serving import invariants as invariants_mod
+from repro.serving import kv_tiers as kv_tiers_mod
 from repro.serving import sampling as sampling_mod
 from repro.serving import telemetry as telemetry_mod
 from repro.serving.cohort import CohortSchedulerMixin
@@ -273,6 +274,35 @@ class EngineConfig:
     # ``decode_heals``. 0 (default) = never heal (the historical
     # permanently-degraded behaviour).
     decode_heal_steps: int = 0
+    # -- hierarchical KV tiers (serving/kv_tiers.py; paged layout) ------
+    # Every paged engine owns a TierManager: preemption swap-out always
+    # routes victim payloads through its host page pool. kv_offload
+    # additionally turns prefix-cache eviction into DEMOTION — under
+    # pool pressure unlocked radix leaves / CHAI snapshots move to host
+    # pages instead of dropping (the LRU ladder walks hot -> host ->
+    # compressed int4 -> gone), and a hit on a demoted entry promotes it
+    # back into fresh device pages (bitwise-identical greedy replay).
+    kv_offload: bool = False
+    # Host / compressed pool sizes in usable pages PER KIND (dense and
+    # clustered pools each get this many). 0 = auto: host covers 2x the
+    # device pool; the int4 pool matches the host pool. Only radix
+    # nodes ride the compressed rung (snapshots replay bitwise).
+    host_pages: int = 0
+    compressed_pages: int = 0
+    # Admission-time prefetch: add_request queues the promotion of the
+    # demoted entries the request will hit; step() drains a bounded
+    # number per iteration ahead of the admission (synchronous
+    # promotion remains the fallback on a miss).
+    tier_prefetch: bool = True
+    # A hit on an int4-compressed entry: False (default) drops the
+    # entry and re-plans cold (still bitwise — prefill recomputes);
+    # True promotes the dequantized approximation (bench arm).
+    lossy_promote: bool = False
+
+
+#: planner sentinel: a demoted entry was dropped mid-plan (failed
+#: promotion / compressed-tier hit) — the tree changed, plan again.
+_REPLAN = object()
 
 
 class EngineCore(CohortSchedulerMixin):
@@ -312,6 +342,9 @@ class EngineCore(CohortSchedulerMixin):
         self._decode_fault_hit = False  # kernel.decode fired this step
         self.relay_dissolved = 0       # relay groups dissolved by fault
         self.swap_checksum_failures = 0
+        self.offload_checksum_failures = 0   # corrupted promotions caught
+        self.prefetch_hits = 0         # demoted hit found already promoted
+        self.prefetch_misses = 0       # demoted hit promoted synchronously
         self._jnp_steps = None         # lazily-built degraded decode jits
         self._fault_blocked = False    # last plan blocked by injection
         self.queue: deque = deque()
@@ -365,6 +398,36 @@ class EngineCore(CohortSchedulerMixin):
             from repro.serving.prefix_cache import PrefixCache
             self.prefix_cache = PrefixCache(self.dense_pool,
                                             self.chai_pool, ecfg.page_size)
+        # -- hierarchical KV tiers (serving/kv_tiers.py) ------------------
+        # Built for EVERY paged engine: preemption swap-out always routes
+        # its victim payloads through the host pool. Prefix-cache
+        # demotion (eviction -> host instead of drop) additionally needs
+        # ecfg.kv_offload.
+        self.tiers = None
+        self._prefetch_q: deque = deque()
+        self._prefetch_ids: set = set()
+        if ecfg.kv_offload and not self.paged:
+            raise ValueError("kv_offload requires the paged KV layout "
+                             "on the continuous scheduler")
+        if self.paged:
+            host_d = ecfg.host_pages or 2 * self.dense_pool.capacity
+            host_c = 0
+            if self.chai_pool is not None:
+                host_c = ecfg.host_pages or 2 * self.chai_pool.capacity
+            self.tiers = kv_tiers_mod.TierManager(
+                ecfg.page_size,
+                host_pages={"dense": host_d, "chai": host_c},
+                # Only radix nodes compress, and nodes hold dense pages
+                # only — the clustered kind never rides the int4 rung.
+                comp_pages={"dense": ecfg.compressed_pages or host_d,
+                            "chai": 0},
+                on_transition=self._tel_tier_transition)
+            if self.prefix_cache is not None:
+                self.prefix_cache.tiers = self.tiers
+                self.tiers.drop_hook = self.prefix_cache.drop_demoted
+                self.tiers.droppable_hook = self.prefix_cache._droppable
+                if ecfg.kv_offload:
+                    self.prefix_cache.demote_hook = self._demote_entry
         # -- chunked prefill (page-aligned chunks; paged layout only) -----
         self._chunk = 0
         if ecfg.prefill_chunk_tokens and self.paged:
@@ -448,6 +511,19 @@ class EngineCore(CohortSchedulerMixin):
                 kind: jax.jit(steps_mod.make_page_copy(cfg, kind),
                               donate_argnums=(0,))
                 for kind in ("dense", "chai")}
+            # Tier demote/promote: one-page gather / scatter jits (the
+            # page id is traced — one trace per kind).
+            self._fetch_page = {"dense": jax.jit(
+                steps_mod.make_page_fetch(cfg, "dense"))}
+            self._put_page = {"dense": jax.jit(
+                steps_mod.make_page_put(cfg, "dense"),
+                donate_argnums=(0,))}
+            if self.chai_clustered:
+                self._fetch_page["chai"] = jax.jit(
+                    steps_mod.make_page_fetch(cfg, "chai"))
+                self._put_page["chai"] = jax.jit(
+                    steps_mod.make_page_put(cfg, "chai"),
+                    donate_argnums=(0,))
             self._set_ctx = jax.jit(clustering.update_ctx_slot,
                                     donate_argnums=(0,))
         if chai_on:
@@ -536,6 +612,12 @@ class EngineCore(CohortSchedulerMixin):
         req.generated = []
         self.queue.append(req)
         self._requests[uid] = req
+        if (self.paged and self.ecfg.kv_offload
+                and self.ecfg.tier_prefetch
+                and self.prefix_cache is not None):
+            # Admission-time prefetch: queue the demoted entries this
+            # prompt will hit for promotion ahead of the planning step.
+            self._queue_prefetch(req)
         if self.tel.enabled:
             self.tel.counter("requests_submitted_total",
                              help="Requests enqueued via add_request")
@@ -579,6 +661,7 @@ class EngineCore(CohortSchedulerMixin):
             return False
         if req in self.queue:
             self.queue.remove(req)
+            self._free_resume(req)      # swapped-out victims hold host pages
             req.finish_reason = sampling_mod.FINISH_ABORT
             req.t_done = time.time()
             req.retire_step = self.steps_executed
@@ -654,6 +737,8 @@ class EngineCore(CohortSchedulerMixin):
                                "cohort engines run via run()")
         outs: List[StepOutput] = []
         self._ensure_dev_state()
+        if self._prefetch_q:
+            self._drain_prefetch()
         b = self.ecfg.batch_slots
         drained = False
         self._fault_blocked = False
@@ -724,6 +809,7 @@ class EngineCore(CohortSchedulerMixin):
         no device state to unwind — record the error and finish it."""
         if req in self.queue:
             self.queue.remove(req)
+        self._free_resume(req)  # swapped-out victims hold host pages
         req.finish_reason = sampling_mod.FINISH_ERROR
         req.error = str(err)
         req.t_done = time.time()
@@ -848,6 +934,17 @@ class EngineCore(CohortSchedulerMixin):
                 tel.gauge("chai_pages_in_use",
                           self.chai_pool.pages_in_use,
                           help="Clustered-pool pages in use")
+            if self.tiers is not None:
+                help_tier = "KV pages resident per tier and pool kind"
+                tel.gauge("kv_tier_pages", self.dense_pool.pages_in_use,
+                          tier="hot", kind="dense", help=help_tier)
+                if self.chai_pool is not None:
+                    tel.gauge("kv_tier_pages",
+                              self.chai_pool.pages_in_use,
+                              tier="hot", kind="chai", help=help_tier)
+                for (tier, kind), n in self.tiers.tier_pages().items():
+                    tel.gauge("kv_tier_pages", n, tier=tier, kind=kind,
+                              help=help_tier)
 
     def metrics(self):
         """JSON-ready metrics snapshot (refreshes point-in-time gauges
@@ -1089,12 +1186,19 @@ class EngineCore(CohortSchedulerMixin):
         snap = self._eligible_snapshot(req)
         if snap is not None:
             plan = self._plan_snapshot(req, snap)
+            if plan is _REPLAN:
+                # A demoted snapshot failed promotion and was dropped:
+                # plan again from scratch (bounded — each replan removed
+                # at least one cache entry).
+                return self._plan_admission(req)
             if plan is not None:
                 return plan
             return None         # a cold plan needs strictly more pages
         matched = cache.match(req.prompt) if cache is not None else []
         if matched:
             plan = self._plan_prefix(req, matched)
+            if plan is _REPLAN:
+                return self._plan_admission(req)
             if plan is not None:
                 return plan
             return None
@@ -1134,9 +1238,33 @@ class EngineCore(CohortSchedulerMixin):
         matched = matched[:n_m]
         chai_n = self._chai_pages_per(n)
         cache.lock(matched)     # pin before eviction can run
-        if not self._pool_space(2 * (n - n_m), chai_n):
+        demoted = [m for m in matched
+                   if m.tier != kv_tiers_mod.TIER_HOT]
+        for m in matched:
+            if m.prefetched:
+                m.prefetched = False
+                self.prefetch_hits += 1
+                if self.tel.enabled:
+                    self.tel.counter(
+                        "prefetch_hits_total",
+                        help="Demoted entries promoted before the "
+                             "planner needed them")
+        # Promoted nodes each need 2 fresh dense pages on top of the
+        # suffix allocation.
+        if not self._pool_space(2 * (n - n_m) + 2 * len(demoted), chai_n):
             cache.unlock(matched)
             return None
+        for m in demoted:
+            if self.ecfg.tier_prefetch and self.ecfg.kv_offload:
+                self.prefetch_misses += 1
+                if self.tel.enabled:
+                    self.tel.counter(
+                        "prefetch_misses_total",
+                        help="Demoted entries promoted synchronously "
+                             "at plan time")
+            if not self._promote_entry(m, uid=req.uid):
+                cache.unlock(matched)   # dropped entries stay evicted
+                return _REPLAN
         kg_fresh = self.dense_pool.alloc(n - n_m)
         vg_fresh = self.dense_pool.alloc(n - n_m)
         kg_alias = [m.kg_page for m in matched]
@@ -1166,9 +1294,34 @@ class EngineCore(CohortSchedulerMixin):
         dense_need = 0 if share else (n - p_full)
         chai_need = (n - p_full) * (2 if share else 1)
         cache.lock([snap])
-        if not self._pool_space(dense_need, chai_need):
+        if snap.prefetched:
+            snap.prefetched = False
+            self.prefetch_hits += 1
+            if self.tel.enabled:
+                self.tel.counter(
+                    "prefetch_hits_total",
+                    help="Demoted entries promoted before the planner "
+                         "needed them")
+        extra_d = extra_c = 0
+        if snap.tier != kv_tiers_mod.TIER_HOT:
+            extra_d = len(snap.tier_pages.get("vg", ()))
+            extra_c = (len(snap.tier_pages.get("kc", ()))
+                       + len(snap.tier_pages.get("vc", ())))
+        if not self._pool_space(dense_need + extra_d,
+                                chai_need + extra_c):
             cache.unlock([snap])
             return None
+        if snap.tier != kv_tiers_mod.TIER_HOT:
+            if self.ecfg.tier_prefetch and self.ecfg.kv_offload:
+                self.prefetch_misses += 1
+                if self.tel.enabled:
+                    self.tel.counter(
+                        "prefetch_misses_total",
+                        help="Demoted entries promoted synchronously "
+                             "at plan time")
+            if not self._promote_entry(snap, uid=req.uid):
+                cache.unlock([snap])    # dropped — re-plan cold
+                return _REPLAN
         copies = []     # (pool kind, src physical page, dst physical page)
         pages = {}
         if not share:
@@ -1215,6 +1368,10 @@ class EngineCore(CohortSchedulerMixin):
             "chai_pages": (self.chai_pool.pages_in_use
                            if self.chai_pool else 0),
         }
+        if self.tiers is not None:
+            tb = self.tiers.tier_bytes()
+            rec["host_bytes"] = tb.get(kv_tiers_mod.TIER_HOST, 0)
+            rec["compressed_bytes"] = tb.get(kv_tiers_mod.TIER_COMP, 0)
         if phases is not None:
             rec["n_warmup"] = int((phases == chai_cache.PHASE_WARMUP).sum())
             rec["n_steady"] = int((phases == chai_cache.PHASE_STEADY).sum())
@@ -1330,6 +1487,184 @@ class EngineCore(CohortSchedulerMixin):
             prompt=key, pos=pos_steady,
             tokens=list(req.generated[:warm + 1]), ctx=slot_ctx,
             vg_pages=vg_pages, kc_pages=kc_pages, vc_pages=vc_pages))
+
+    # -- KV tier ops (demote / promote / prefetch) -------------------------
+    def _tel_tier_transition(self, frm: str, to: str, kind: str, n: int):
+        """TierManager transition callback -> Prometheus counter."""
+        if self.tel.enabled:
+            self.tel.counter("tier_transitions_total", n,
+                             help="KV page transitions between tiers",
+                             **{"from": frm, "to": to})
+
+    @staticmethod
+    def _entry_device_pages(entry) -> dict:
+        """Device pages an entry owns, keyed by pool key (kg/vg/kc/vc)."""
+        if hasattr(entry, "kg_page"):  # radix node
+            return {"kg": [entry.kg_page], "vg": [entry.vg_page]}
+        out = {}
+        if entry.vg_pages:
+            out["vg"] = list(entry.vg_pages)
+        if entry.kc_pages:
+            out["kc"] = list(entry.kc_pages)
+        if entry.vc_pages:
+            out["vc"] = list(entry.vc_pages)
+        return out
+
+    def _demote_entry(self, entry) -> bool:
+        """Move an unlocked prefix-cache entry's device pages to the host
+        tier. Called by PrefixCache._evict_one under device pool pressure
+        (the victim is already off the LRU). Returns False to fall back
+        to a plain drop. Pages are gathered to host BEFORE the device
+        refs are released, so a False return never loses data."""
+        if self.tiers is None or self._dev_state is None:
+            return False
+        spec = self._fault("offload.out")
+        if spec is not None and spec.mode != "corrupt":
+            return False  # demotion declined -> plain drop
+        refs = self._entry_device_pages(entry)
+        need = {}
+        for pk, pages in refs.items():
+            kind = kv_tiers_mod.POOL_OF[pk]
+            need[kind] = need.get(kind, 0) + len(pages)
+        if not self.tiers.make_room(need):
+            return False
+        payloads = {}
+        for pk, pages in refs.items():
+            kind = kv_tiers_mod.POOL_OF[pk]
+            fetch = self._fetch_page.get(kind)
+            if fetch is None:
+                return False
+            payloads[pk] = [jax.device_get(
+                fetch(self._dev_state, jnp.int32(p))) for p in pages]
+        self.tiers.store_entry(entry, payloads)
+        if spec is not None and spec.mode == "corrupt":
+            # Damage the stored host copy AFTER the CRC stamp, so the
+            # promotion path detects it (corrupt_arrays mutates the
+            # payload dicts the host pool holds).
+            tree = {pk: {str(j): p for j, p in enumerate(pl)}
+                    for pk, pl in payloads.items()}
+            faults_mod.corrupt_arrays(tree, seed=self.faults.seed)
+        # Host copy is safe: release the device references.
+        for pk, pages in refs.items():
+            kind = kv_tiers_mod.POOL_OF[pk]
+            pool = self.dense_pool if kind == "dense" else self.chai_pool
+            pool.free(pages)
+            self.tiers.record("hot", "host", kind, len(pages))
+        if hasattr(entry, "vg_pages"):  # snapshot: page ids now live in
+            entry.vg_pages = []         # entry.tier_pages
+            entry.kc_pages = []
+            entry.vc_pages = []
+        return True
+
+    def _promote_entry(self, entry, *, uid: int = -1) -> bool:
+        """Bring a demoted entry back into fresh device pages. The caller
+        must have verified device pool headroom (``_pool_space``) first.
+        Returns False — with the entry DROPPED — on checksum mismatch, an
+        injected ``offload.in`` fault, or a compressed entry when lossy
+        promotion is off; the caller re-plans the request cold."""
+        cache = self.prefix_cache
+        t0 = time.perf_counter()
+        frm = entry.tier
+        if frm == kv_tiers_mod.TIER_COMP and not self.ecfg.lossy_promote:
+            cache.drop_demoted(entry)
+            return False
+        failed = self._fault("offload.in", uid) is not None
+        if not failed and not self.tiers.verify_entry(entry):
+            self.offload_checksum_failures += 1
+            failed = True
+        if failed:
+            cache.drop_demoted(entry)
+            return False
+        payloads = self.tiers.fetch_entry(entry)
+        new_pages = {}
+        for pk, pl in payloads.items():
+            kind = kv_tiers_mod.POOL_OF[pk]
+            pool = self.dense_pool if kind == "dense" else self.chai_pool
+            pages = pool.alloc(len(pl))
+            put = self._put_page[kind]
+            for p, payload in zip(pages, pl):
+                dev = {k: jnp.asarray(v) for k, v in payload.items()
+                       if k in ("data", "scale")}
+                self._dev_state = put(self._dev_state, jnp.int32(p), dev)
+            new_pages[pk] = pages
+        self.tiers.release_entry(entry)
+        if hasattr(entry, "kg_page"):
+            entry.kg_page = new_pages["kg"][0]
+            entry.vg_page = new_pages["vg"][0]
+            cache.stats["promoted_blocks"] += 1
+        else:
+            entry.vg_pages = new_pages.get("vg", [])
+            entry.kc_pages = new_pages.get("kc", [])
+            entry.vc_pages = new_pages.get("vc", [])
+            cache.stats["promoted_snapshots"] += 1
+        entry.tier = kv_tiers_mod.TIER_HOT
+        entry.tier_crc = 0
+        for pk, pages in new_pages.items():
+            kind = kv_tiers_mod.POOL_OF[pk]
+            self.tiers.record(frm, "hot", kind, len(pages))
+        cache._lru_file(entry)  # no-op while the entry is locked
+        if self.tel.enabled:
+            self.tel.observe("promote_wait_seconds",
+                             time.perf_counter() - t0,
+                             help="Host->device promotion latency")
+        return True
+
+    def _queue_prefetch(self, req: Request):
+        """At admission time, look up which demoted prefix-cache entries
+        this prompt will hit and queue them for promotion ahead of the
+        planning step (drained by ``_step_inner``)."""
+        cache = self.prefix_cache
+        targets = []
+        snap = self._eligible_snapshot(req)
+        if snap is not None and snap.tier != kv_tiers_mod.TIER_HOT:
+            targets = [snap]
+        else:
+            matched = cache.match(req.prompt)
+            targets = [m for m in matched
+                       if m.tier != kv_tiers_mod.TIER_HOT]
+        for e in targets:
+            if id(e) in self._prefetch_ids or e.prefetched:
+                continue
+            self._prefetch_ids.add(id(e))
+            self._prefetch_q.append(e)
+
+    def _drain_prefetch(self, budget: int = 4):
+        """Promote up to ``budget`` queued entries into free device pages.
+        Never evicts to make room — if the pools are full the queue waits
+        (the synchronous fallback in the planners still covers the hit)."""
+        while self._prefetch_q and budget > 0:
+            e = self._prefetch_q.popleft()
+            self._prefetch_ids.discard(id(e))
+            if (e.tier == kv_tiers_mod.TIER_HOT
+                    or getattr(e, "evicted", False) or e.locks):
+                continue
+            if (e.tier == kv_tiers_mod.TIER_COMP
+                    and not self.ecfg.lossy_promote):
+                continue
+            counts = self.tiers._entry_page_counts(e)
+            dense_need = counts.get("dense", 0)
+            chai_need = counts.get("chai", 0)
+            if (self.dense_pool.counters()["free"] < dense_need
+                    or (chai_need and self.chai_pool.counters()["free"]
+                        < chai_need)):
+                self._prefetch_q.appendleft(e)
+                self._prefetch_ids.add(id(e))
+                return
+            if self._promote_entry(e):
+                e.prefetched = True
+            budget -= 1
+
+    def _free_resume(self, req: Request):
+        """Release the host-tier pages backing a preempted request's
+        resume payload (quarantine / abort while swapped out)."""
+        rs = req.resume_state
+        if not rs or "tier_pages" not in rs or self.tiers is None:
+            return
+        for pk, pages in rs["tier_pages"].items():
+            kind = kv_tiers_mod.POOL_OF[pk]
+            self.tiers.free_pages(kind, pages)
+            self.tiers.record("host", "gone", kind, len(pages))
+        rs["tier_pages"] = {}
 
     # -- step internals ----------------------------------------------------
     def _admit(self, outs: List[StepOutput]) -> bool:
@@ -1609,21 +1944,44 @@ class EngineCore(CohortSchedulerMixin):
         if self._fault("swap.in", uid=req.uid) is not None:
             raise QuarantineError(
                 f"injected swap-in failure for uid={req.uid}", uid=req.uid)
+        if self._fault("offload.in", uid=req.uid) is not None:
+            raise QuarantineError(
+                f"injected host-tier fetch failure for uid={req.uid}",
+                uid=req.uid)
+        tier_payloads = {
+            k: self.tiers.fetch_pages(kv_tiers_mod.POOL_OF[k], pg)
+            for k, pg in resume["tier_pages"].items()}
+        tree = {k: {str(j): p for j, p in enumerate(pl)}
+                for k, pl in tier_payloads.items()}
         crc = resume.get("crc")
         if crc is not None and faults_mod.checksum_arrays(
-                {"cols": resume["cols"], "pools": resume["pools"]}) != crc:
+                {"cols": resume["cols"], "pools": tree}) != crc:
             self.swap_checksum_failures += 1
             raise QuarantineError(
                 f"swap-in checksum mismatch for uid={req.uid}: the "
                 "host-side resume payload was corrupted while swapped "
                 "out", uid=req.uid)
+        # Rebuild the padded pool upload from the per-page host copies.
+        pools_np = {k: np.zeros(shape, dtype)
+                    for k, (shape, dtype) in resume["pool_meta"].items()}
+        for k, pl in tier_payloads.items():
+            sk = k + "_scale"
+            for j, p in enumerate(pl):
+                pools_np[k][:, j] = p["data"]
+                if "scale" in p and sk in pools_np:
+                    pools_np[sk][:, j] = p["scale"]
+        for k, pg in resume["tier_pages"].items():
+            kind = kv_tiers_mod.POOL_OF[k]
+            self.tiers.free_pages(kind, pg)
+            self.tiers.record("host", "hot", kind, len(pg))
+        resume["tier_pages"] = {}
         req.resume_state = None
         pages = self._slot_pages[i]
         vecs = [self._page_vec(pages.get(k, []))
                 for k in ("kg", "vg", "kc", "vc")]
         _, swap_in = self._swap_fns_get()
         cols = {k: jnp.asarray(v) for k, v in resume["cols"].items()}
-        pools = {k: jnp.asarray(v) for k, v in resume["pools"].items()}
+        pools = {k: jnp.asarray(v) for k, v in pools_np.items()}
         self._dev_state = swap_in(self._dev_state, jnp.int32(i), cols,
                                   pools, *vecs, *vecs)
         if self.chai_on:
@@ -1652,6 +2010,21 @@ class EngineCore(CohortSchedulerMixin):
         # loses (least progress thrown away).
         i = min(victims, key=lambda j: (self._slot_req[j].priority,
                                         -self._slot_req[j].admit_step))
+        if (self.tiers is not None
+                and int(self._phases[i]) != chai_cache.PHASE_PREFILL):
+            # The victim's payload lands in the host tier: make room
+            # there first (compressing / dropping demoted cache entries
+            # LRU-first). No room -> no preemption this step.
+            pages = self._slot_pages[i]
+            need = {}
+            d = len(pages.get("kg", ())) + len(pages.get("vg", ()))
+            c = len(pages.get("kc", ())) + len(pages.get("vc", ()))
+            if d:
+                need["dense"] = d
+            if c:
+                need["chai"] = c
+            if need and not self.tiers.make_room(need):
+                return False
         self._preempt_slot(i)
         return True
 
@@ -1676,12 +2049,31 @@ class EngineCore(CohortSchedulerMixin):
                                slot=i):
                 cols, pools = swap_out(self._dev_state, jnp.int32(i),
                                        *vecs)
+            pools_host = jax.device_get(pools)
+            npages = {k: len(pages.get(k, ()))
+                      for k in ("kg", "vg", "kc", "vc")}
+            # Split the padded pool gathers into per-real-page payloads
+            # (copies, so the big padded arrays are released) — these go
+            # into the SAME host page pool prefix-cache demotion uses.
+            payloads = {}
+            for k in ("kg", "vg", "kc", "vc"):
+                if k not in pools_host or not npages[k]:
+                    continue
+                sk = k + "_scale"
+                pl = []
+                for j in range(npages[k]):
+                    p = {"data": np.array(pools_host[k][:, j])}
+                    if sk in pools_host:
+                        p["scale"] = np.array(pools_host[sk][:, j])
+                    pl.append(p)
+                payloads[k] = pl
             resume = {
                 "phase": phase, "count": self._slot_count[i],
                 "cols": jax.device_get(cols),
-                "pools": jax.device_get(pools),
-                "npages": {k: len(pages.get(k, ()))
-                           for k in ("kg", "vg", "kc", "vc")},
+                "npages": npages,
+                # Padded shapes/dtypes to rebuild the swap-in upload.
+                "pool_meta": {k: (v.shape, v.dtype)
+                              for k, v in pools_host.items()},
             }
             if self.chai_on:
                 resume["ctx"] = {k: np.asarray(v[:, i])
@@ -1689,11 +2081,18 @@ class EngineCore(CohortSchedulerMixin):
             # Integrity stamp: swap-in verifies this before touching the
             # device, so host-side damage to the payload quarantines the
             # request instead of restoring corrupted KV.
+            tree = {k: {str(j): p for j, p in enumerate(pl)}
+                    for k, pl in payloads.items()}
             resume["crc"] = faults_mod.checksum_arrays(
-                {"cols": resume["cols"], "pools": resume["pools"]})
+                {"cols": resume["cols"], "pools": tree})
             if self._fault("swap.corrupt", uid=r.uid) is not None:
-                faults_mod.corrupt_arrays(resume["pools"],
-                                          seed=self.faults.seed)
+                faults_mod.corrupt_arrays(tree, seed=self.faults.seed)
+            tier_pages = {}
+            for k, pl in payloads.items():
+                kind = kv_tiers_mod.POOL_OF[k]
+                tier_pages[k] = self.tiers.store_pages(kind, pl)
+                self.tiers.record("hot", "host", kind, len(pl))
+            resume["tier_pages"] = tier_pages
             r.resume_state = resume
             if self.prefix_cache is not None:
                 self._index_retired(r, self._slot_pages[i])
@@ -2302,6 +2701,7 @@ class EngineCore(CohortSchedulerMixin):
                 "decode_heals": self.decode_heals,
                 "relay_dissolved": self.relay_dissolved,
                 "swap_checksum_failures": self.swap_checksum_failures,
+                "offload_checksum_failures": self.offload_checksum_failures,
                 "injector": (self.faults.report()
                              if self.faults is not None else None)}
 
@@ -2316,6 +2716,18 @@ class EngineCore(CohortSchedulerMixin):
                 "snapshots": self.prefix_cache.num_snapshots,
                 "dense_page_refs": dense_held,
                 "chai_page_refs": chai_held}
+
+    def tier_stats(self):
+        """Hierarchical KV tier counters: per-tier residency, transition
+        totals, and prefetch hit/miss counts (None when the engine has
+        no tiers — i.e. the dense layout)."""
+        if self.tiers is None:
+            return None
+        out = self.tiers.stats()
+        out["prefetch_hits"] = self.prefetch_hits
+        out["prefetch_misses"] = self.prefetch_misses
+        out["offload_checksum_failures"] = self.offload_checksum_failures
+        return out
 
     def kv_bytes(self, *, chai: Optional[bool] = None):
         """KV-cache bytes. With explicit ``chai=``: the paper's ANALYTIC

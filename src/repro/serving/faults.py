@@ -52,6 +52,16 @@ Injection sites (where the engine consults the injector):
                           the pools; others keep decoding.
 ``step.logits``           per-slot logits poisoning (NaN): the NaN/Inf
                           guard quarantines the slot, others are untouched.
+``offload.out``           prefix-cache demotion (``_demote_entry``): mode
+                          ``corrupt`` damages the host-tier copy AFTER its
+                          CRC stamp (caught at promotion); any other mode
+                          declines the demotion — the entry drops instead
+                          (losing a cache entry is always safe).
+``offload.in``            tier promotion (``_promote_entry`` /
+                          ``_swap_in_slot``): a cache-entry promotion fails
+                          and the entry is dropped + re-planned cold; a
+                          swapped-out request's fetch failure quarantines
+                          that request only.
 ========================  ==================================================
 """
 from __future__ import annotations
@@ -122,7 +132,7 @@ class InjectedFault(Exception):
 SITES = frozenset({
     "pool.alloc", "swap.corrupt", "swap.in", "snapshot.restore",
     "relay.residency", "kernel.decode", "kernel.prefill", "kernel.cluster",
-    "step.logits",
+    "step.logits", "offload.out", "offload.in",
 })
 
 #: spec modes with meaning at their sites (see module docstring)

@@ -1,0 +1,426 @@
+"""Hierarchical KV tiers: host-offload pool + int4 compressed tier.
+
+Every byte the paged engine keeps — active slots, radix prefix pages,
+CHAI snapshots, preempted victims — historically lived in device HBM, so
+prefix-cache capacity and max concurrent sessions were HBM-bound. This
+module adds a capacity ladder below the device pools:
+
+    hot (device HBM)  ->  host (exact copy)  ->  compressed (int4)  ->  gone
+
+* ``HostPagePool`` mirrors the device ``PagePool`` allocator (same free
+  list / refcount / freed-at-zero semantics, so the invariant auditor's
+  pool checks apply unchanged) but each allocated page carries a host
+  payload dict — the ``jax.device_get`` of one physical device page
+  (``{"data"[, "scale"]}`` per kind, see ``launch.steps.make_page_fetch``).
+
+* ``TierManager`` owns per-kind (dense / clustered) host pools plus an
+  optional int4 **compressed** pool. Demotion stores a device page's
+  gathered payload into a host page; promotion is the inverse scatter
+  (``make_page_put``). Under host pressure the manager walks its own
+  LRU: compressible entries (radix block nodes) are re-coded to packed
+  int4 (symmetric per-row, ``core.cache.quant_rows_int4``); entries
+  that cannot compress (CHAI snapshots — their replay contract is
+  bitwise) or that have already compressed are dropped structurally via
+  ``drop_hook`` (the prefix cache's ``drop_demoted``).
+
+* Integrity: demotion stamps a CRC32 over the stored payload arrays
+  (``faults.checksum_arrays``); promotion verifies it before any byte
+  reaches the device. Compression restamps over the packed arrays. A
+  mismatch (e.g. the ``offload.out`` corrupt arm) drops the entry and
+  the request re-plans cold — corruption never crosses tiers.
+
+The manager is pure host bookkeeping: it never touches jax. The engine
+owns the device side (gather/scatter jits, which entries demote, when
+to prefetch) and wires ``on_transition`` into telemetry.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cache import (PagePool, dequant_rows_int4, pack_int4,
+                              quant_rows_int4, unpack_int4)
+from repro.serving.faults import checksum_arrays
+
+# Tier names (also the ``tier`` label values in telemetry).
+TIER_HOT = "hot"
+TIER_HOST = "host"
+TIER_COMP = "compressed"
+TIER_GONE = "gone"
+
+#: payload kind -> pool kind (which pool a cached page list lives in)
+POOL_OF = {"kg": "dense", "vg": "dense", "kc": "chai", "vc": "chai"}
+
+
+def payload_crc(payloads: Dict[str, List[dict]]) -> int:
+    """Order-stable CRC32 over the ndarray leaves of per-kind payload
+    lists (non-array metadata like dtype/width markers is excluded —
+    ``checksum_arrays`` only defines a stable digest for arrays)."""
+    tree = {
+        pk: {str(i): {k: v for k, v in p.items()
+                      if isinstance(v, np.ndarray)}
+             for i, p in enumerate(plist)}
+        for pk, plist in payloads.items()
+    }
+    return checksum_arrays(tree)
+
+
+def compress_payload(payload: dict) -> dict:
+    """Re-code one host page payload to packed int4: symmetric per-row
+    quantization over the head dim, two codes per byte. The int8
+    configs' scale plane (small) rides along uncompressed."""
+    data = np.asarray(payload["data"])
+    q, qscale = quant_rows_int4(data)
+    out = {"packed": pack_int4(q), "qscale": qscale,
+           "hd": int(data.shape[-1]), "dtype": data.dtype}
+    if "scale" in payload:
+        out["scale"] = np.asarray(payload["scale"])
+    return out
+
+
+def decompress_payload(cp: dict) -> dict:
+    """Inverse of ``compress_payload`` (lossy: int4 resolution)."""
+    x = dequant_rows_int4(unpack_int4(cp["packed"], cp["hd"]), cp["qscale"])
+    dt = cp["dtype"]
+    if np.issubdtype(np.dtype(dt) if isinstance(dt, str) else dt,
+                     np.integer):
+        x = np.rint(x)
+    out = {"data": x.astype(dt)}
+    if "scale" in cp:
+        out["scale"] = cp["scale"]
+    return out
+
+
+class HostPagePool(PagePool):
+    """A ``PagePool`` whose pages carry host payloads.
+
+    Same allocator semantics as the device-side pool (null page, LIFO
+    free list, refcounts, freed-at-zero) so ``invariants._audit_pool``
+    audits it unchanged; additionally each in-use page maps to its
+    payload dict in ``_data``, dropped when the last reference dies.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        super().__init__(num_pages, page_size)
+        self._data: Dict[int, dict] = {}
+
+    def store(self, payload: dict) -> int:
+        (page,) = self.alloc(1)
+        self._data[page] = payload
+        return page
+
+    def fetch(self, page: int) -> dict:
+        return self._data[int(page)]
+
+    def replace(self, page: int, payload: dict):
+        """Swap a page's payload in place (fault-injection corruption)."""
+        assert int(page) in self._data
+        self._data[int(page)] = payload
+
+    def free(self, pages):
+        for p in pages:
+            p = int(p)
+            last = self._rc.get(p, 0) == 1
+            super().free([p])
+            if last:
+                self._data.pop(p, None)
+
+    def bytes_stored(self) -> int:
+        return int(sum(v.nbytes for payload in self._data.values()
+                       for v in payload.values()
+                       if isinstance(v, np.ndarray)))
+
+
+class TierManager:
+    """Owns the host + compressed pools and the demoted-entry LRUs.
+
+    ``host_pages`` / ``comp_pages`` map pool kind ("dense" / "chai") to
+    usable page counts (0 disables that pool). Demoted cache entries
+    (``BlockNode`` / ``ChaiSnapshot`` with ``tier`` != "hot") are filed
+    in per-tier LRUs; under pressure ``make_room`` walks hot->host->
+    compressed->gone exactly like the device-side cache walks its own
+    LRU. The engine supplies:
+
+    ``drop_hook(entry)``       structural drop (``drop_demoted``) — must
+                               release the entry's tier pages.
+    ``droppable_hook(entry)``  False when a structural drop would strand
+                               locked state (e.g. a radix subtree with a
+                               locked descendant); compression is always
+                               safe, only drops consult this.
+    ``on_transition(frm, to, kind, n)``  telemetry callback.
+    """
+
+    def __init__(self, page_size: int,
+                 host_pages: Optional[Dict[str, int]] = None,
+                 comp_pages: Optional[Dict[str, int]] = None,
+                 on_transition: Optional[Callable] = None):
+        self.page_size = int(page_size)
+
+        def build(spec):
+            pools = {}
+            for kind in ("dense", "chai"):
+                n = int((spec or {}).get(kind, 0))
+                pools[kind] = (HostPagePool(n + 1, page_size)
+                               if n > 0 else None)
+            return pools
+
+        self.host = build(host_pages)
+        self.comp = build(comp_pages)
+        self._lru = {TIER_HOST: OrderedDict(), TIER_COMP: OrderedDict()}
+        self.on_transition = on_transition
+        self.drop_hook: Optional[Callable] = None
+        self.droppable_hook: Optional[Callable] = None
+        self.transitions: Dict[tuple, int] = {}
+
+    # -- pools -------------------------------------------------------------
+    def pools_of(self, tier: str) -> dict:
+        return self.comp if tier == TIER_COMP else self.host
+
+    def host_capacity(self, kind: str) -> int:
+        pool = self.host.get(kind)
+        return pool.capacity if pool is not None else 0
+
+    # -- transition ledger -------------------------------------------------
+    def record(self, frm: str, to: str, kind: str, n: int):
+        if n <= 0:
+            return
+        key = (frm, to, kind)
+        self.transitions[key] = self.transitions.get(key, 0) + int(n)
+        if self.on_transition is not None:
+            self.on_transition(frm, to, kind, int(n))
+
+    # -- demoted-entry LRU bookkeeping -------------------------------------
+    def file(self, entry):
+        """(Re-)file a demoted entry at the MRU end of its tier's LRU.
+        Locked or already-dropped entries stay out (mirrors the device
+        cache's ``_lru_file``)."""
+        if getattr(entry, "locks", 0) or getattr(entry, "evicted", False):
+            return
+        lru = self._lru.get(entry.tier)
+        if lru is None:
+            return
+        lru[id(entry)] = entry
+        lru.move_to_end(id(entry))
+
+    def unfile(self, entry):
+        for lru in self._lru.values():
+            lru.pop(id(entry), None)
+
+    def touch(self, entry):
+        lru = self._lru.get(getattr(entry, "tier", None))
+        if lru is not None and id(entry) in lru:
+            lru.move_to_end(id(entry))
+
+    def pin(self, entry):
+        self.unfile(entry)
+
+    def unpin(self, entry):
+        self.file(entry)
+
+    # -- page-level ops (preemption payloads, no cache entry) --------------
+    def store_pages(self, kind: str, payloads: List[dict]) -> List[int]:
+        pool = self.host[kind]
+        assert pool is not None, f"no host pool for kind {kind!r}"
+        return [pool.store(p) for p in payloads]
+
+    def fetch_pages(self, kind: str, pages) -> List[dict]:
+        pool = self.host[kind]
+        return [pool.fetch(p) for p in pages]
+
+    def free_pages(self, kind: str, pages):
+        if pages:
+            self.host[kind].free(pages)
+
+    # -- entry-level ops ---------------------------------------------------
+    def store_entry(self, entry, payloads: Dict[str, List[dict]]):
+        """Demote: store per-payload-kind page payloads into host pages,
+        stamp the CRC, and file the entry in the host LRU. The caller
+        (engine) frees the device pages and records hot->host."""
+        entry.tier_crc = payload_crc(payloads)
+        entry.tier_pages = {
+            pk: self.store_pages(POOL_OF[pk], plist)
+            for pk, plist in payloads.items() if plist
+        }
+        entry.tier = TIER_HOST
+        self.file(entry)
+
+    def fetch_entry(self, entry) -> Dict[str, List[dict]]:
+        """Payloads ready for the device scatter (decompressed if the
+        entry rode the int4 tier)."""
+        comp = entry.tier == TIER_COMP
+        pools = self.pools_of(entry.tier)
+        out = {}
+        for pk, pages in entry.tier_pages.items():
+            raw = [pools[POOL_OF[pk]].fetch(p) for p in pages]
+            out[pk] = [decompress_payload(p) for p in raw] if comp else raw
+        return out
+
+    def verify_entry(self, entry) -> bool:
+        """CRC the RAW stored payloads against the demotion/compression
+        stamp — corruption is caught before any dequantize/scatter."""
+        pools = self.pools_of(entry.tier)
+        raw = {pk: [pools[POOL_OF[pk]].fetch(p) for p in pages]
+               for pk, pages in entry.tier_pages.items()}
+        return payload_crc(raw) == entry.tier_crc
+
+    def _free_tier_pages(self, entry):
+        pools = self.pools_of(entry.tier)
+        for pk, pages in (entry.tier_pages or {}).items():
+            if pages:
+                pools[POOL_OF[pk]].free(pages)
+        entry.tier_pages = {}
+        self.unfile(entry)
+
+    def release_entry(self, entry):
+        """Free tier storage on PROMOTION (the caller re-homes the entry
+        to device pages and records host->hot)."""
+        self._free_tier_pages(entry)
+
+    def discard_entry(self, entry):
+        """Free tier storage on a structural DROP: records ->gone."""
+        counts: Dict[str, int] = {}
+        for pk, pages in (entry.tier_pages or {}).items():
+            kind = POOL_OF[pk]
+            counts[kind] = counts.get(kind, 0) + len(pages)
+        tier = entry.tier
+        self._free_tier_pages(entry)
+        for kind, n in counts.items():
+            self.record(tier, TIER_GONE, kind, n)
+
+    # -- pressure: the host->compressed->gone ladder -----------------------
+    def _entry_page_counts(self, entry) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for pk, pages in (entry.tier_pages or {}).items():
+            kind = POOL_OF[pk]
+            counts[kind] = counts.get(kind, 0) + len(pages)
+        return counts
+
+    def _short(self, need: Dict[str, int]) -> bool:
+        for kind, n in need.items():
+            if n <= 0:
+                continue
+            pool = self.host.get(kind)
+            if pool is None or pool.free_pages < n:
+                return True
+        return False
+
+    def _droppable(self, entry) -> bool:
+        if self.drop_hook is None:
+            return False
+        if self.droppable_hook is not None and not self.droppable_hook(entry):
+            return False
+        return True
+
+    def _comp_room(self, need: Dict[str, int]) -> bool:
+        """Make room in the compressed pool by dropping ITS LRU tail."""
+        def short():
+            for kind, n in need.items():
+                if n <= 0:
+                    continue
+                pool = self.comp.get(kind)
+                if pool is None:
+                    return None          # can never fit
+                if pool.free_pages < n:
+                    return True
+            return False
+
+        s = short()
+        while s:
+            victim = next((e for e in self._lru[TIER_COMP].values()
+                           if self._droppable(e)), None)
+            if victim is None:
+                return False
+            self.drop_hook(victim)
+            s = short()
+        return s is not None and not s
+
+    def compress_entry(self, entry) -> bool:
+        """Re-code a host-tier entry to the int4 pool. Returns False if
+        the compressed pool cannot cover it (after shedding its own
+        LRU tail) — the caller falls through to a structural drop."""
+        if entry.tier != TIER_HOST or not getattr(entry, "compressible",
+                                                  False):
+            return False
+        counts = self._entry_page_counts(entry)
+        if not self._comp_room(counts):
+            return False
+        packed = {pk: [compress_payload(self.host[POOL_OF[pk]].fetch(p))
+                       for p in pages]
+                  for pk, pages in entry.tier_pages.items()}
+        crc = payload_crc(packed)
+        old = dict(entry.tier_pages)
+        new_pages = {pk: [self.comp[POOL_OF[pk]].store(p) for p in plist]
+                     for pk, plist in packed.items()}
+        for pk, pages in old.items():
+            self.host[POOL_OF[pk]].free(pages)
+        self.unfile(entry)
+        entry.tier_pages = new_pages
+        entry.tier_crc = crc
+        entry.tier = TIER_COMP
+        self.file(entry)
+        for kind, n in counts.items():
+            self.record(TIER_HOST, TIER_COMP, kind, n)
+        return True
+
+    def make_room(self, need: Dict[str, int]) -> bool:
+        """Free host pages until ``need`` fits: walk the host LRU from
+        the front, compress compressible victims into the int4 pool,
+        structurally drop the rest (and compressed-tier residents when
+        their pool overflows). Returns False when the ladder runs dry —
+        the caller falls back to dropping outright."""
+        for kind, n in need.items():
+            pool = self.host.get(kind)
+            if n > 0 and (pool is None or n > pool.capacity):
+                return False
+        while self._short(need):
+            progress = False
+            for entry in list(self._lru[TIER_HOST].values()):
+                counts = self._entry_page_counts(entry)
+                helps = any(need.get(k, 0) > 0
+                            and self.host[k].free_pages < need[k]
+                            and counts.get(k, 0) > 0
+                            for k in ("dense", "chai"))
+                if not helps:
+                    continue
+                if self.compress_entry(entry):
+                    progress = True
+                elif self._droppable(entry):
+                    self.drop_hook(entry)
+                    progress = True
+                if progress:
+                    break
+            if not progress:
+                return False
+        return True
+
+    # -- introspection -----------------------------------------------------
+    def tier_pages(self) -> Dict[tuple, int]:
+        """{(tier, kind): pages in use} for the host-side tiers."""
+        out = {}
+        for tier, pools in ((TIER_HOST, self.host), (TIER_COMP, self.comp)):
+            for kind, pool in pools.items():
+                if pool is not None:
+                    out[(tier, kind)] = pool.pages_in_use
+        return out
+
+    def tier_bytes(self) -> Dict[str, int]:
+        return {tier: sum(p.bytes_stored() for p in pools.values()
+                          if p is not None)
+                for tier, pools in ((TIER_HOST, self.host),
+                                    (TIER_COMP, self.comp))}
+
+    def stats(self) -> dict:
+        out = {"tier_pages": {f"{t}/{k}": v
+                              for (t, k), v in self.tier_pages().items()},
+               "tier_bytes": self.tier_bytes(),
+               "transitions": {f"{f}->{t}/{k}": n
+                               for (f, t, k), n in self.transitions.items()},
+               "demoted_entries": {t: len(lru)
+                                   for t, lru in self._lru.items()}}
+        for tier, pools in (("host", self.host), ("compressed", self.comp)):
+            for kind, pool in pools.items():
+                if pool is not None:
+                    out[f"{tier}_{kind}"] = pool.counters()
+        return out

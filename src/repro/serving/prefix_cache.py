@@ -81,10 +81,30 @@ class BlockNode:
     # resident view dies with the node).
     resident: Optional[tuple] = None
     evicted: bool = False
+    # KV tiering (serving/kv_tiers.py): ``tier`` says where this block's
+    # payload lives. "hot" = ``kg_page``/``vg_page`` are live device
+    # pages; a demoted node keeps its place in the radix tree (still
+    # matchable) but its payload sits in host/compressed tier pages
+    # (``tier_pages``, CRC-stamped at demotion) and the device page ids
+    # are stale until promotion rewrites them.
+    tier: str = "hot"
+    tier_pages: Dict[str, list] = dataclasses.field(default_factory=dict)
+    tier_crc: int = 0
+    prefetched: bool = False
+    compressible: bool = True   # int4 ladder allowed (a hit re-plans cold)
 
     @property
     def is_leaf(self):
         return not self.children
+
+    @property
+    def hot_leaf(self):
+        """No hot children: the node holds the deepest DEVICE pages on
+        its path, so evicting/demoting it strands nothing. Demoted
+        children stay in the tree (their payloads live tier-side), so
+        plain ``is_leaf`` would freeze ancestors of demoted leaves out
+        of the eviction order forever."""
+        return not any(c.tier == "hot" for c in self.children.values())
 
     def chain(self) -> List["BlockNode"]:
         """Root-first list of nodes from the root (exclusive) to here."""
@@ -114,6 +134,14 @@ class ChaiSnapshot:
     kc_pages: List[int]            # clustered pool
     vc_pages: List[int]            # clustered pool (share_values only)
     locks: int = 0
+    evicted: bool = False
+    # KV tiering: snapshots ride the host tier only — their replay
+    # contract is bitwise, so the lossy int4 rung is off-limits.
+    tier: str = "hot"
+    tier_pages: Dict[str, list] = dataclasses.field(default_factory=dict)
+    tier_crc: int = 0
+    prefetched: bool = False
+    compressible: bool = False
 
 
 class PrefixCache:
@@ -135,7 +163,15 @@ class PrefixCache:
         self.stats = {"partial_hits": 0, "misses": 0,
                       "snapshot_hits": 0, "tokens_reused": 0,
                       "tokens_prefilled": 0, "inserted_blocks": 0,
-                      "evicted_blocks": 0, "evicted_snapshots": 0}
+                      "evicted_blocks": 0, "evicted_snapshots": 0,
+                      "demoted_blocks": 0, "demoted_snapshots": 0,
+                      "promoted_blocks": 0, "promoted_snapshots": 0}
+        # KV tiering (serving/kv_tiers.py), wired by the engine:
+        # ``tiers`` owns the host/compressed pools and the demoted-entry
+        # LRUs; ``demote_hook`` (engine._demote_entry) turns eviction
+        # into demotion when host offload is enabled.
+        self.tiers = None
+        self.demote_hook = None
 
     # -- bookkeeping -------------------------------------------------------
     def _touch(self, entry):
@@ -143,13 +179,21 @@ class PrefixCache:
         # entries are outside it and re-file on unlock / leaf-ification)
         if id(entry) in self._lru:
             self._lru.move_to_end(id(entry))
+        elif self.tiers is not None and entry.tier != "hot":
+            self.tiers.touch(entry)     # demoted: recency lives tier-side
 
     def _lru_file(self, entry):
         """(Re-)file an entry at the MRU end if it is currently
-        evictable: unlocked, and a snapshot or a leaf node."""
-        if entry.locks:
+        evictable: unlocked, not already dropped, and a snapshot or a
+        leaf node. Demoted entries file in THEIR tier's LRU instead —
+        the device-side LRU only ever holds hot entries."""
+        if entry.locks or getattr(entry, "evicted", False):
             return
-        if isinstance(entry, BlockNode) and not entry.is_leaf:
+        if entry.tier != "hot":
+            if self.tiers is not None:
+                self.tiers.unpin(entry)
+            return
+        if isinstance(entry, BlockNode) and not entry.hot_leaf:
             return
         self._lru[id(entry)] = entry
         self._lru.move_to_end(id(entry))
@@ -171,15 +215,20 @@ class PrefixCache:
         return len(self._snapshots)
 
     def held_pages(self):
-        """(dense, chai) page REFERENCES currently held by the cache."""
+        """(dense, chai) DEVICE page references currently held by the
+        cache. Demoted entries hold none — their payloads live in tier
+        pages, accounted by the tier pools themselves."""
         dense = chai = 0
         stack = [self.root]
         while stack:
             node = stack.pop()
             for c in node.children.values():
-                dense += 2             # kg + vg
+                if c.tier == "hot":
+                    dense += 2         # kg + vg
                 stack.append(c)
         for snap in self._snapshots.values():
+            if snap.tier != "hot":
+                continue
             dense += len(snap.vg_pages)
             chai += len(snap.kc_pages) + len(snap.vc_pages)
         return dense, chai
@@ -256,12 +305,8 @@ class PrefixCache:
             return
         self._lru_drop(snap)
         del self._snapshots[snap.prompt]
-        if snap.vg_pages:
-            self.dense_pool.free(snap.vg_pages)
-        if snap.kc_pages:
-            self.chai_pool.free(snap.kc_pages)
-        if snap.vc_pages:
-            self.chai_pool.free(snap.vc_pages)
+        snap.evicted = True
+        self._release_entry_pages(snap)
         self.stats["evicted_snapshots"] += 1
 
     # -- pinning -----------------------------------------------------------
@@ -269,6 +314,8 @@ class PrefixCache:
         for e in entries:
             e.locks += 1
             self._lru_drop(e)           # pinned: never a victim
+            if self.tiers is not None and e.tier != "hot":
+                self.tiers.pin(e)       # ...in any tier
 
     def unlock(self, entries):
         for e in entries:
@@ -277,7 +324,83 @@ class PrefixCache:
             if e.locks == 0:
                 self._lru_file(e)       # evictable again (if leaf/snap)
 
-    # -- eviction ----------------------------------------------------------
+    # -- eviction / tier ladder --------------------------------------------
+    def _release_entry_pages(self, entry):
+        """Return an entry's pages wherever they live: device pools for
+        a hot entry (recording the hot->gone transition when a tier
+        manager is attached), tier storage otherwise."""
+        if entry.tier != "hot":
+            self.tiers.discard_entry(entry)     # records ->gone itself
+            entry.tier = "gone"
+            return
+        if isinstance(entry, ChaiSnapshot):
+            dense, chai = len(entry.vg_pages), (len(entry.kc_pages)
+                                                + len(entry.vc_pages))
+            if entry.vg_pages:
+                self.dense_pool.free(entry.vg_pages)
+            if entry.kc_pages:
+                self.chai_pool.free(entry.kc_pages)
+            if entry.vc_pages:
+                self.chai_pool.free(entry.vc_pages)
+        else:
+            dense, chai = 2, 0
+            self.dense_pool.free([entry.kg_page])
+            self.dense_pool.free([entry.vg_page])
+        if self.tiers is not None:
+            self.tiers.record("hot", "gone", "dense", dense)
+            self.tiers.record("hot", "gone", "chai", chai)
+
+    def _droppable(self, entry) -> bool:
+        """True when a structural drop of ``entry`` (for a node: its
+        whole subtree) would not strand a lock — the TierManager's
+        pressure-drop guard (``droppable_hook``)."""
+        if isinstance(entry, ChaiSnapshot):
+            return not entry.locks
+        stack = [entry]
+        while stack:
+            node = stack.pop()
+            if node.locks:
+                return False
+            stack.extend(node.children.values())
+        return True
+
+    def drop_demoted(self, entry):
+        """Structurally drop an entry regardless of tier or locks — the
+        tier ladder's terminal rung ("gone") and the corruption-recovery
+        path (a failed promotion drops the entry; the request re-plans
+        cold). A radix node takes its whole subtree (children would be
+        unreachable). Locked droppees are tolerated: the lock holder is
+        the very plan dropping them, and the ``evicted`` guard keeps its
+        ``unlock`` from re-filing a ghost."""
+        if isinstance(entry, ChaiSnapshot):
+            if self._snapshots.get(entry.prompt) is not entry:
+                return
+            self._lru_drop(entry)
+            del self._snapshots[entry.prompt]
+            entry.evicted = True
+            self._release_entry_pages(entry)
+            self.stats["evicted_snapshots"] += 1
+            return
+        if entry.evicted:
+            return
+        parent = entry.parent
+        parent.children.pop(entry.key, None)
+        stack = [entry]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            node.children = {}
+            node.evicted = True
+            node.resident = None
+            self._lru_drop(node)
+            if self.tiers is not None:
+                self.tiers.unfile(node)
+            self._release_entry_pages(node)
+            self.stats["evicted_blocks"] += 1
+        if (parent is not self.root and parent.hot_leaf
+                and parent.tier == "hot"):
+            self._lru_file(parent)
+
     def _evict_one(self, want_dense=True, want_chai=True) -> bool:
         """Drop the least-recently-used evictable entry holding
         references in a wanted pool: scan ``_lru`` from the front and pop
@@ -310,25 +433,29 @@ class PrefixCache:
         if victim is None:
             return False
         self._lru_drop(victim)
+        # Host offload on: demote instead of dropping — the entry keeps
+        # its index position (radix slot / snapshot key) but its payload
+        # moves to the host pool. The engine hook returns False when the
+        # tier ladder cannot take it; fall through to a plain drop.
+        if (self.demote_hook is not None and victim.tier == "hot"
+                and self.demote_hook(victim)):
+            if isinstance(victim, ChaiSnapshot):
+                self.stats["demoted_snapshots"] += 1
+            else:
+                self.stats["demoted_blocks"] += 1
+                parent = victim.parent
+                if parent is not self.root and parent.tier == "hot":
+                    self._lru_file(parent)  # no hot children: evictable
+            return True
         if isinstance(victim, ChaiSnapshot):
             del self._snapshots[victim.prompt]
-            if victim.vg_pages:
-                self.dense_pool.free(victim.vg_pages)
-            if victim.kc_pages:
-                self.chai_pool.free(victim.kc_pages)
-            if victim.vc_pages:
-                self.chai_pool.free(victim.vc_pages)
+            victim.evicted = True
+            self._release_entry_pages(victim)
             self.stats["evicted_snapshots"] += 1
         else:
-            victim.parent.children.pop(victim.key)
-            victim.evicted = True
-            victim.resident = None
-            self.dense_pool.free([victim.kg_page])
-            self.dense_pool.free([victim.vg_page])
-            self.stats["evicted_blocks"] += 1
-            parent = victim.parent
-            if parent is not self.root and parent.is_leaf:
-                self._lru_file(parent)      # became a leaf: evictable
+            # The subtree drop also releases any demoted descendants'
+            # tier pages and re-files the newly-eligible parent.
+            self.drop_demoted(victim)
         return True
 
     def evict_until(self, dense_free: int = 0, chai_free: int = 0) -> bool:

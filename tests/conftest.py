@@ -20,11 +20,12 @@ def rng():
 @pytest.fixture(autouse=True)
 def _page_leak_gate(request):
     """Universal serving-tier leak gate: every ``EngineCore`` built
-    during a test is audited afterwards — pool conservation always, and
-    (for cores left IDLE) zero leaked page references / dangling
-    prefix-cache locks. Replaces the old ad-hoc per-test counter
-    checks. Opt out with ``@pytest.mark.no_leak_gate`` (tests that
-    corrupt engine state on purpose)."""
+    during a test is audited afterwards — pool conservation (device AND
+    host/compressed tier pools) always, and (for cores left IDLE) zero
+    leaked page references / dangling prefix-cache locks / orphaned
+    host-tier pages. Replaces the old ad-hoc per-test counter checks.
+    Opt out with ``@pytest.mark.no_leak_gate`` (tests that corrupt
+    engine state on purpose)."""
     from repro.serving.engine import EngineCore
 
     cores = []

@@ -523,3 +523,112 @@ def test_async_quarantine_stream_gets_typed_terminal_output():
     assert o0.finish_reason == FINISH_ERROR
     assert o1.finish_reason == "length" and len(o1.token_ids) == 6
     assert fs["quarantined"] == 1
+
+
+# -- KV-tier offload faults (serving/kv_tiers.py wiring) --------------------
+
+def _family_workload(rng):
+    """Prefix-family prompts + extensions that route later matches
+    through demoted suffix leaves (the tier promotion path)."""
+    prefix = rng.integers(1, 64, size=16).tolist()
+    base = [prefix + rng.integers(1, 64, size=8).tolist()
+            for _ in range(4)]
+    ext = [p + rng.integers(1, 64, size=8).tolist() for p in base[:2]]
+    return base + ext
+
+
+def _run_offload_workload(cfg, params, workload, faults, **kw):
+    core = EngineCore(cfg, params,
+                      _ecfg(batch_slots=1, prefix_cache=True, **kw),
+                      faults=faults)
+    toks = []
+    for p in workload:
+        r = core.add_request(list(p), GREEDY)
+        _drain(core)
+        assert r.finish_reason == "length"
+        toks.append(list(r.generated))
+    return core, toks
+
+
+def test_offload_corruption_is_caught_at_promotion_and_replanned():
+    """``offload.out`` mode="corrupt" damages the host-tier copy AFTER
+    its CRC stamp. The promotion path catches the mismatch, drops ONLY
+    the damaged entry, and re-plans the request cold — greedy tokens
+    are unchanged and nothing is quarantined (losing a cache entry is
+    recovery, not failure)."""
+    cfg, params = _model()
+    workload = _family_workload(np.random.default_rng(20))
+    _, clean = _run_offload_workload(cfg, params, workload, None)
+    inj = FaultInjector([FaultSpec("offload.out", mode="corrupt",
+                                   count=-1)], seed=0)
+    core, toks = _run_offload_workload(
+        cfg, params, workload, inj, kv_offload=True, num_pages=12,
+        host_pages=64, tier_prefetch=False)
+    assert any(f["site"] == "offload.out" for f in inj.fired)
+    assert core.tier_stats()["offload_checksum_failures"] > 0
+    st = core.prefix_stats()
+    assert st["promoted_blocks"] == 0 and st["promoted_snapshots"] == 0
+    assert core.fault_stats()["quarantined"] == 0
+    assert toks == clean
+
+
+def test_offload_out_noncorrupt_mode_declines_demotion():
+    """Any non-corrupt ``offload.out`` mode makes the engine decline the
+    demotion: the victim drops outright (always safe) and the workload
+    completes with fault-free tokens and zero host-tier residency."""
+    cfg, params = _model()
+    workload = _family_workload(np.random.default_rng(21))
+    _, clean = _run_offload_workload(cfg, params, workload, None)
+    inj = FaultInjector([FaultSpec("offload.out", mode="error",
+                                   count=-1)], seed=0)
+    core, toks = _run_offload_workload(
+        cfg, params, workload, inj, kv_offload=True, num_pages=12,
+        host_pages=64, tier_prefetch=False)
+    st = core.prefix_stats()
+    assert st["demoted_blocks"] == 0 and st["demoted_snapshots"] == 0
+    assert st["evicted_blocks"] + st["evicted_snapshots"] > 0
+    assert core.tiers.tier_pages() == {
+        k: 0 for k in core.tiers.tier_pages()}
+    assert toks == clean
+
+
+def test_offload_in_fault_at_promotion_replans_cold():
+    """An injected ``offload.in`` failure at cache-entry promotion
+    drops the entry and re-plans cold — same recovery contract as the
+    snapshot-restore fault: tokens unchanged, nothing quarantined."""
+    cfg, params = _model()
+    workload = _family_workload(np.random.default_rng(22))
+    _, clean = _run_offload_workload(cfg, params, workload, None)
+    inj = FaultInjector([FaultSpec("offload.in", count=1)], seed=0)
+    core, toks = _run_offload_workload(
+        cfg, params, workload, inj, kv_offload=True, num_pages=12,
+        host_pages=64, tier_prefetch=False)
+    assert [f["site"] for f in inj.fired] == ["offload.in"]
+    assert core.fault_stats()["quarantined"] == 0
+    assert toks == clean
+
+
+def test_offload_in_fault_at_swap_in_quarantines_victim():
+    """The same ``offload.in`` site at preemption swap-in is NOT
+    recoverable per-entry (the payload is a live request's KV): the
+    victim alone is quarantined — parity with the ``swap.in`` arm —
+    and its host-tier pages are released refcount-exactly."""
+    cfg, params = _model()
+    rng = np.random.default_rng(23)
+    inj = FaultInjector([FaultSpec("offload.in", uid=0)], seed=0)
+    core = EngineCore(cfg, params, _ecfg(batch_slots=1,
+                                         prefix_cache=True), faults=inj)
+    victim = core.add_request(rng.integers(1, 64, size=12).tolist(),
+                              SamplingParams(max_new_tokens=12))
+    for _ in range(4):
+        core.step()
+    preemptor = core.add_request(rng.integers(1, 64, size=6).tolist(),
+                                 SamplingParams(max_new_tokens=4),
+                                 priority=1)
+    _drain(core)
+    assert preemptor.finish_reason == "length"
+    assert victim.finish_reason == FINISH_ERROR
+    assert "host-tier fetch failure" in victim.error
+    assert core.fault_stats()["quarantined"] == 1
+    assert all(p.pages_in_use == 0 for p in core.tiers.host.values()
+               if p is not None)
